@@ -1,0 +1,58 @@
+"""Per-architecture reduced-config step timings: one train step + one decode
+step per family on CPU. Not a performance claim (CPU host), but a living
+check that every assigned architecture trains and serves through the public
+API, with us/step for regression tracking."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as CFG
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import step as TS
+from .util import emit, scale
+
+
+def main() -> None:
+    archs = CFG.ARCH_IDS if scale(False, True) else (
+        "llama3.2-3b", "qwen2-moe-a2.7b", "recurrentgemma-2b",
+        "xlstm-1.3b", "minicpm3-4b", "whisper-tiny")
+    for arch in archs:
+        r = CFG.reduced(CFG.get(arch))
+        state = TS.init_state(r, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                    r.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        if r.enc_dec:
+            batch["enc_frames"] = 0.1 * jnp.ones(
+                (2, r.n_frames, r.d_model), r.jdtype)
+        step = jax.jit(TS.make_train_step(
+            r, adamw.AdamWConfig(warmup_steps=1, total_steps=4),
+            TS.TrainConfig()))
+        state, m = step(state, batch)        # compile
+        t0 = time.perf_counter()
+        state, m = step(state, batch)
+        jax.block_until_ready(m["nll"])
+        us = (time.perf_counter() - t0) * 1e6
+        # decode step
+        cache = T.materialize_cache(r, 2, 32)
+        import functools
+        dec = jax.jit(functools.partial(T.decode_step, r))
+        kw = {}
+        if r.enc_dec:
+            kw["enc_out"] = T.encode(r, state.params, batch["enc_frames"])
+        lg, cache = dec(state.params, cache, tokens[:, :1], 0, **kw)
+        t0 = time.perf_counter()
+        lg, cache = dec(state.params, cache, tokens[:, 1:2], 1, **kw)
+        jax.block_until_ready(lg)
+        dus = (time.perf_counter() - t0) * 1e6
+        emit(f"arch_step_{arch}", us,
+             f"train_us={us:.0f} decode_us={dus:.0f} "
+             f"nll={float(m['nll']):.3f}")
+
+
+if __name__ == "__main__":
+    main()

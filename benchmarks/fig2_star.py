@@ -1,0 +1,138 @@
+"""Fig. 2 reproduction: star graphs.
+
+(a) hub-vs-leaf local-estimator variance as degree grows
+(b) exact + empirical asymptotic efficiency vs star size
+(c) efficiency vs singleton-potential magnitude
+(d) empirical MSE vs sample size
+Pairwise parameters estimated, singletons known (paper Sec. 5.1).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import repro.core as C
+from .util import emit, scale, timed
+
+SCHEMES = ("uniform", "diagonal", "optimal", "max")
+
+
+def _exact_effs(m):
+    locs = C.exact_locals(m, include_singleton=False)
+    tr_mle, _ = C.exact_mle_variance(m, include_singleton=False)
+    out = {}
+    for sch in SCHEMES:
+        tr, _ = C.exact_consensus_variance(m, locs, sch,
+                                           include_singleton=False)
+        out[sch] = tr / tr_mle
+    tr_j, _ = C.exact_joint_mple_variance(m, include_singleton=False)
+    out["joint"] = tr_j / tr_mle
+    return out, locs, tr_mle
+
+
+def fig2a() -> None:
+    rng = np.random.RandomState(0)
+    hold = {}
+    rows = []
+    with timed(hold):
+        for p in scale((4, 7, 10), (4, 6, 8, 10, 12)):
+            hubs, leaves = [], []
+            for rep in range(scale(3, 10)):
+                g = C.star_graph(p)
+                m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(rep))
+                locs = C.exact_locals(m, include_singleton=False)
+                hubs.append(np.mean(np.diag(locs[0].V)))
+                leaves.append(np.mean([locs[i].V[0, 0]
+                                       for i in range(1, p)]))
+            rows.append(f"deg{p-1}:hub={np.mean(hubs):.2f}"
+                        f"/leaf={np.mean(leaves):.2f}")
+    emit("fig2a_star_hub_variance", hold["t"] / len(rows), " ".join(rows))
+
+
+def fig2b() -> None:
+    hold = {}
+    rows = []
+    n, R = scale((1500, 8), (4000, 50))
+    with timed(hold):
+        for p in scale((4, 7, 10), (4, 6, 8, 10)):
+            g = C.star_graph(p)
+            exact_acc = {s: [] for s in SCHEMES + ("joint",)}
+            emp_acc = {s: [] for s in SCHEMES + ("joint",)}
+            for rep in range(scale(3, 50)):
+                m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(100 + rep))
+                effs, _, tr_mle = _exact_effs(m)
+                for s, v in effs.items():
+                    exact_acc[s].append(v)
+                tf = np.asarray(m.theta).copy()
+                free = C.free_indices(g, include_singleton=False)
+                for r in range(R):
+                    X = C.exact_sample(m, n, jax.random.PRNGKey(2000 + rep * R + r))
+                    fits = C.fit_all_local(g, X, include_singleton=False,
+                                           theta_fixed=jax.numpy.asarray(tf))
+                    for sch in SCHEMES:
+                        th = C.combine(g, fits, sch, include_singleton=False,
+                                       theta_fixed=tf)
+                        emp_acc[sch].append(
+                            n * C.mse(th, tf, free) / tr_mle)
+                    th = C.fit_mple(g, X, free_idx=free,
+                                    theta_fixed=jax.numpy.asarray(tf))
+                    emp_acc["joint"].append(n * C.mse(th, tf, free) / tr_mle)
+            row = f"p={p} " + " ".join(
+                f"{s}:exact={np.mean(exact_acc[s]):.2f}"
+                f"/emp={np.mean(emp_acc[s]):.2f}"
+                for s in SCHEMES + ("joint",))
+            rows.append(row)
+            print(f"# fig2b {row}")
+    emit("fig2b_star_efficiency", hold["t"] / len(rows), " | ".join(rows))
+
+
+def fig2c() -> None:
+    hold = {}
+    rows = []
+    p = 10
+    with timed(hold):
+        for ss in scale((0.5, 1.0, 2.0), (0.5, 1.0, 1.5, 2.0)):
+            g = C.star_graph(p)
+            acc = {s: [] for s in SCHEMES + ("joint",)}
+            for rep in range(scale(3, 50)):
+                m = C.random_model(g, 0.5, ss, jax.random.PRNGKey(300 + rep))
+                effs, _, _ = _exact_effs(m)
+                for s, v in effs.items():
+                    acc[s].append(v)
+            rows.append(f"sigma_s={ss} " + " ".join(
+                f"{s}={np.mean(acc[s]):.2f}" for s in SCHEMES + ("joint",)))
+    emit("fig2c_star_vs_singleton", hold["t"] / len(rows), " | ".join(rows))
+
+
+def fig2d() -> None:
+    hold = {}
+    rows = []
+    g = C.star_graph(10)
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(7))
+    tf = np.asarray(m.theta).copy()
+    free = C.free_indices(g, include_singleton=False)
+    with timed(hold):
+        for n in scale((300, 1000, 3000), (100, 300, 1000, 3000, 10000)):
+            acc = {s: [] for s in SCHEMES}
+            for r in range(scale(5, 50)):
+                X = C.exact_sample(m, n, jax.random.PRNGKey(5000 + r))
+                fits = C.fit_all_local(g, X, include_singleton=False,
+                                       theta_fixed=jax.numpy.asarray(tf))
+                for sch in SCHEMES:
+                    th = C.combine(g, fits, sch, include_singleton=False,
+                                   theta_fixed=tf)
+                    acc[sch].append(C.mse(th, tf, free))
+            rows.append(f"n={n} " + " ".join(
+                f"{s}={np.mean(acc[s]):.4f}" for s in SCHEMES))
+    emit("fig2d_star_mse_vs_n", hold["t"] / len(rows), " | ".join(rows))
+
+
+def main() -> None:
+    fig2a()
+    fig2b()
+    fig2c()
+    fig2d()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Fig. 3 reproduction: 4x4 grid (quick mode uses 3x3 for exact parts).
+
+(a) exact asymptotic efficiency vs singleton magnitude — joint MPLE best
+(b) empirical MSE vs data size, with asymptotic-MSE horizontal reference
+(c) ADMM convergence: zero-init vs one-step-consensus inits (Thm 3.1)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import repro.core as C
+from .util import emit, scale, timed
+
+SCHEMES = ("uniform", "diagonal", "optimal", "max")
+
+
+def _grid():
+    return C.grid_graph(*scale((3, 3), (4, 4)))
+
+
+def fig3a() -> None:
+    hold = {}
+    rows = []
+    g = _grid()
+    with timed(hold):
+        for ss in scale((0.0, 0.5, 1.0), (0.0, 0.25, 0.5, 0.75, 1.0)):
+            acc = {s: [] for s in SCHEMES + ("joint",)}
+            for rep in range(scale(3, 50)):
+                m = C.random_model(g, 0.5, ss, jax.random.PRNGKey(rep))
+                locs = C.exact_locals(m, include_singleton=False)
+                tr_mle, _ = C.exact_mle_variance(m, include_singleton=False)
+                for sch in SCHEMES:
+                    tr, _ = C.exact_consensus_variance(
+                        m, locs, sch, include_singleton=False)
+                    acc[sch].append(tr / tr_mle)
+                tr_j, _ = C.exact_joint_mple_variance(
+                    m, include_singleton=False)
+                acc["joint"].append(tr_j / tr_mle)
+            rows.append(f"sigma_s={ss} " + " ".join(
+                f"{s}={np.mean(acc[s]):.2f}" for s in SCHEMES + ("joint",)))
+            print(f"# fig3a {rows[-1]}")
+    emit("fig3a_grid_efficiency", hold["t"] / len(rows), " | ".join(rows))
+
+
+def fig3b() -> None:
+    hold = {}
+    rows = []
+    g = _grid()
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(11))
+    tf = np.asarray(m.theta).copy()
+    free = C.free_indices(g, include_singleton=False)
+    # asymptotic reference lines
+    locs = C.exact_locals(m, include_singleton=False)
+    with timed(hold):
+        refs = {}
+        for sch in SCHEMES:
+            tr, _ = C.exact_consensus_variance(m, locs, sch,
+                                               include_singleton=False)
+            refs[sch] = tr
+        for n in scale((500, 2000), (300, 1000, 3000, 10000)):
+            acc = {s: [] for s in SCHEMES + ("joint",)}
+            for r in range(scale(4, 50)):
+                X = C.exact_sample(m, n, jax.random.PRNGKey(900 + r))
+                fits = C.fit_all_local(g, X, include_singleton=False,
+                                       theta_fixed=jax.numpy.asarray(tf))
+                for sch in SCHEMES:
+                    th = C.combine(g, fits, sch, include_singleton=False,
+                                   theta_fixed=tf)
+                    acc[sch].append(C.mse(th, tf, free))
+                th = C.fit_mple(g, X, free_idx=free,
+                                theta_fixed=jax.numpy.asarray(tf))
+                acc["joint"].append(C.mse(th, tf, free))
+            rows.append(
+                f"n={n} " + " ".join(
+                    f"{s}={np.mean(acc[s]):.4f}(asym={refs[s]/n:.4f})"
+                    if s in refs else f"{s}={np.mean(acc[s]):.4f}"
+                    for s in SCHEMES + ("joint",)))
+            print(f"# fig3b {rows[-1]}")
+    emit("fig3b_grid_mse_vs_n", hold["t"] / len(rows), " | ".join(rows))
+
+
+def fig3c() -> None:
+    hold = {}
+    g = _grid()
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(13))
+    X = C.exact_sample(m, scale(1500, 5000), jax.random.PRNGKey(14))
+    with timed(hold):
+        th_mple = C.fit_mple(g, X)
+        fits = C.fit_all_local(g, X)
+        iters = scale(10, 25)
+        curves = {}
+        for init in ("zero", "uniform", "diagonal"):
+            res = C.admm_mple(g, X, n_iters=iters, init=init,
+                              fits=None if init == "zero" else fits)
+            curves[init] = [float(np.linalg.norm(t - th_mple))
+                            for t in res.trajectory]
+    payload = " | ".join(
+        f"{k}: " + ">".join(f"{e:.3f}" for e in v[:: max(1, len(v)//6)])
+        for k, v in curves.items())
+    emit("fig3c_admm_convergence", hold["t"] / 3, payload)
+    assert curves["diagonal"][-1] < curves["zero"][-1], "consensus init must win"
+
+
+def main() -> None:
+    fig3a()
+    fig3b()
+    fig3c()
+
+
+if __name__ == "__main__":
+    main()

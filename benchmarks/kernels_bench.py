@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing plus the
+pure-jnp reference path timing at paper-relevant sizes. (Wall-clock MFU is
+not measurable on CPU; these benches verify the kernels run and give the
+oracle a throughput baseline. On TPU the same harness times the Pallas
+path via use_pallas=True.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ising_cl.kernel import ising_cl_logits
+from repro.kernels.ising_cl.ref import ising_cl_logits_ref
+from repro.kernels.gram.kernel import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.swa.kernel import swa_attention
+from repro.kernels.swa.ref import swa_attention_ref
+from .util import emit, scale
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_ising_cl():
+    n, p = scale((512, 100), (4096, 256))
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jnp.sign(jax.random.normal(ks[0], (n, p)))
+    theta = 0.3 * jax.random.normal(ks[1], (p, p))
+    mask = (jax.random.uniform(ks[2], (p, p)) < 0.1).astype(jnp.float32)
+    bias = jnp.zeros(p)
+    us_ref, ref = _time(jax.jit(ising_cl_logits_ref), x, theta, mask, bias)
+    us_k, out = _time(lambda *a: ising_cl_logits(*a, interpret=True),
+                      x, theta, mask, bias, reps=1)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernel_ising_cl", us_ref,
+         f"n={n} p={p} ref_us={us_ref:.0f} interp_us={us_k:.0f} "
+         f"maxerr={err:.2e}")
+
+
+def bench_gram():
+    n, d = scale((2048, 128), (16384, 512))
+    s = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    us_ref, ref = _time(jax.jit(gram_ref), s)
+    us_k, out = _time(lambda a: gram(a, interpret=True), s, reps=1)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernel_gram", us_ref,
+         f"n={n} d={d} ref_us={us_ref:.0f} interp_us={us_k:.0f} "
+         f"maxerr={err:.2e}")
+
+
+def bench_swa():
+    b, s, h, d, w = 1, scale(256, 1024), 4, 64, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    us_ref, ref = _time(jax.jit(
+        lambda q, k, v: swa_attention_ref(q, k, v, window=w)), q, k, v)
+    us_k, out = _time(lambda q, k, v: swa_attention(q, k, v, window=w,
+                                                    interpret=True),
+                      q, k, v, reps=1)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    emit("kernel_swa", us_ref,
+         f"s={s} window={w} ref_us={us_ref:.0f} interp_us={us_k:.0f} "
+         f"maxerr={err:.2e}")
+
+
+def main() -> None:
+    bench_ising_cl()
+    bench_gram()
+    bench_swa()
+
+
+if __name__ == "__main__":
+    main()

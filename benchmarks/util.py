@@ -1,0 +1,29 @@
+"""Benchmark harness utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows so ``benchmarks.run``
+output is machine-parsable. ``derived`` is the figure's scientific payload
+(efficiency, MSE, ...) as a compact string.
+"""
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed(holder: dict, key: str = "t"):
+    t0 = time.perf_counter()
+    yield
+    holder[key] = (time.perf_counter() - t0) * 1e6  # microseconds
+
+
+def scale(quick_val, full_val):
+    """Pick a problem size depending on REPRO_BENCH_FULL."""
+    return full_val if FULL else quick_val

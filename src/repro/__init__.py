@@ -1,0 +1,9 @@
+"""repro: Distributed Parameter Estimation via Pseudo-likelihood
+(Liu & Ihler, ICML 2012) — faithful reproduction (repro.core) plus the
+technique lifted to TPU-pod scale (repro.train.consensus) over a 10-arch
+model zoo (repro.models / repro.configs), with Pallas TPU kernels
+(repro.kernels) and a multi-pod dry-run + roofline harness (repro.launch).
+
+See README.md for entry points, DESIGN.md for the paper->TPU mapping, and
+EXPERIMENTS.md for the validation and performance record.
+"""

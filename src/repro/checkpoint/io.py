@@ -1,0 +1,78 @@
+"""Checkpointing: pytree <-> npz + JSON manifest. No orbax dependency.
+
+Layout: <dir>/step_<N>/arrays.npz + manifest.json. Keys are '/'-joined
+pytree paths; restore rebuilds the exact tree structure. Atomic via
+write-to-tmp + rename. Works for TrainState, ConsensusState, caches.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(directory: str, step: int, tree, extra: Optional[Dict] = None):
+    """Save pytree at <directory>/step_<step>; returns the final path."""
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "shapes": {k: list(v.shape) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def restore(directory: str, step: int, like) -> Any:
+    """Restore into the structure of ``like`` (a pytree template)."""
+    path = os.path.join(directory, f"step_{step}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    vals = []
+    for kpath, leaf in leaves_with_path[0]:
+        key = "/".join(_path_str(p) for p in kpath)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        vals.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_with_path[1], vals)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None

@@ -1,0 +1,18 @@
+"""Core reproduction of Liu & Ihler (ICML 2012), "Distributed Parameter
+Estimation via Pseudo-likelihood": Ising models, local conditional-likelihood
+estimators, one-step consensus (linear/max/matrix), ADMM joint MPLE, and the
+exact asymptotic-variance machinery behind the paper's theory."""
+from .graphs import (Graph, chain_graph, star_graph, grid_graph,
+                     complete_graph, scale_free_graph, euclidean_graph)
+from .ising import (IsingModel, random_model, conditional_logits, cond_loglik,
+                    pseudo_loglik, suff_stats, log_partition, exact_probs,
+                    loglik, exact_moments, all_states, pair_matrix)
+from .sampling import exact_sample, gibbs_sample
+from .estimators import (LocalFit, newton_maximize, fit_local_cl,
+                         fit_all_local, fit_mple, fit_mle_exact, node_design)
+from .asymptotics import (ExactLocal, exact_local, exact_locals, param_owners,
+                          free_indices, exact_consensus_variance,
+                          exact_joint_mple_variance, exact_mle_variance,
+                          efficiency, cross_cov)
+from .consensus import combine, mse, empirical_cross_cov, SCHEMES
+from .admm import admm_mple, ADMMResult

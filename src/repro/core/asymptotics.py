@@ -1,0 +1,165 @@
+"""Exact asymptotic analysis (paper Sec. 4): per-node information matrices,
+influence functions s^i, cross-estimator covariances, and the asymptotic
+variance of every consensus scheme — all computed by enumeration at theta*.
+
+Only usable for small p (2^p states); the paper's small-model experiments
+(star graphs, 4x4 grid) use exactly this machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .estimators import node_cl_fn
+from .graphs import Graph
+from .ising import IsingModel, all_states, exact_moments, exact_probs
+
+
+@dataclasses.dataclass
+class ExactLocal:
+    """Population quantities of node i's CL estimator at theta*."""
+    i: int
+    beta: List[int]     # flat param indices
+    H: np.ndarray       # (d, d) -E[grad^2 l^i(theta*)]
+    V: np.ndarray       # (d, d) sandwich Hinv J Hinv (= Hinv, info-unbiased)
+    S: np.ndarray       # (2^p, d) influence s^i(x) = Hinv grad l^i(theta*, x)
+    probs: np.ndarray   # (2^p,) state probabilities
+
+
+def exact_local(model: IsingModel, i: int,
+                include_singleton: bool = True) -> ExactLocal:
+    graph = model.graph
+    states = jnp.asarray(all_states(graph.p))
+    probs = exact_probs(graph, model.theta)
+    fun_all, d = node_cl_fn(graph, states, i, include_singleton, model.theta)
+    # true local parameter sub-vector
+    beta = graph.beta(i, include_singleton)
+    w_star = model.theta[np.asarray(beta)]
+
+    # fun_all averages over *all states uniformly*; we need prob-weighted.
+    # Build a per-state criterion instead.
+    def per_state(w):
+        # returns (2^p,) node-i conditional loglik per state
+        from .ising import cond_loglik
+        theta = model.theta.at[np.asarray(beta)].set(w)
+        return cond_loglik(graph, theta, states)[:, i]
+
+    Gfn = jax.jacfwd(per_state)          # (2^p, d)
+    G = Gfn(w_star)
+    exp_fn = lambda w: probs @ per_state(w)
+    H = -jax.hessian(exp_fn)(w_star)
+    J = (G * probs[:, None]).T @ G       # E[g g^T]; E[g] = 0 at theta*
+    Hinv = jnp.linalg.inv(H)
+    V = Hinv @ J @ Hinv
+    S = G @ Hinv.T
+    return ExactLocal(i=i, beta=beta, H=np.asarray(H), V=np.asarray(V),
+                      S=np.asarray(S), probs=np.asarray(probs))
+
+
+def exact_locals(model: IsingModel,
+                 include_singleton: bool = True) -> List[ExactLocal]:
+    return [exact_local(model, i, include_singleton)
+            for i in range(model.graph.p)]
+
+
+# --------------------------------------------------------------- ownership
+def param_owners(graph: Graph, include_singleton: bool = True
+                 ) -> Dict[int, List[Tuple[int, int]]]:
+    """flat param index -> [(node i, position of that param in beta_i)]."""
+    owners: Dict[int, List[Tuple[int, int]]] = {}
+    for i in range(graph.p):
+        beta = graph.beta(i, include_singleton)
+        for pos, a in enumerate(beta):
+            owners.setdefault(a, []).append((i, pos))
+    return owners
+
+
+def free_indices(graph: Graph, include_singleton: bool = True) -> np.ndarray:
+    if include_singleton:
+        return np.arange(graph.n_params)
+    return np.arange(graph.p, graph.n_params)
+
+
+# --------------------------------------------- exact consensus covariances
+def cross_cov(locals_: List[ExactLocal], a: int,
+              owners_a: List[Tuple[int, int]]) -> np.ndarray:
+    """V_alpha (Prop 4.6): cov(s^i_a, s^j_a) across owner nodes, exact."""
+    probs = locals_[0].probs
+    cols = np.stack([locals_[i].S[:, pos] for (i, pos) in owners_a], axis=1)
+    return (cols * probs[:, None]).T @ cols
+
+
+def exact_consensus_variance(model: IsingModel, locals_: List[ExactLocal],
+                             scheme: str,
+                             include_singleton: bool = True
+                             ) -> Tuple[float, Dict[int, float]]:
+    """Asymptotic var of one-step consensus per Thm 4.1/4.3 with exact weights.
+
+    scheme in {"uniform", "diagonal", "optimal", "max"}. Returns
+    (tr V over free params, per-param variance dict).
+    """
+    graph = model.graph
+    owners = param_owners(graph, include_singleton)
+    per_param: Dict[int, float] = {}
+    for a, own in owners.items():
+        Va = cross_cov(locals_, a, own)                  # (k, k)
+        diag = np.array([locals_[i].V[pos, pos] for (i, pos) in own])
+        k = len(own)
+        if scheme == "uniform":
+            w = np.ones(k)
+        elif scheme == "diagonal":
+            w = 1.0 / diag
+        elif scheme == "max":
+            w = np.zeros(k)
+            w[int(np.argmin(diag))] = 1.0                # Prop 4.4
+        elif scheme == "optimal":
+            w = np.linalg.solve(Va + 1e-12 * np.eye(k), np.ones(k))  # Prop 4.6
+        else:
+            raise ValueError(scheme)
+        w = w / w.sum()
+        per_param[a] = float(w @ Va @ w)
+    tr = float(sum(per_param.values()))
+    return tr, per_param
+
+
+def exact_joint_mple_variance(model: IsingModel,
+                              include_singleton: bool = True
+                              ) -> Tuple[float, np.ndarray]:
+    """Exact asymptotic covariance of joint MPLE (Godambe sandwich)."""
+    graph = model.graph
+    states = jnp.asarray(all_states(graph.p))
+    probs = exact_probs(graph, model.theta)
+    free = free_indices(graph, include_singleton)
+
+    from .ising import cond_loglik
+
+    def per_state(w):
+        theta = model.theta.at[free].set(w)
+        return jnp.sum(cond_loglik(graph, theta, states), axis=1)  # (2^p,)
+
+    w_star = model.theta[free]
+    G = jax.jacfwd(per_state)(w_star)                    # (2^p, d)
+    H = -jax.hessian(lambda w: probs @ per_state(w))(w_star)
+    J = (G * probs[:, None]).T @ G
+    Hinv = jnp.linalg.inv(H)
+    V = np.asarray(Hinv @ J @ Hinv)
+    return float(np.trace(V)), V
+
+
+def exact_mle_variance(model: IsingModel,
+                       include_singleton: bool = True
+                       ) -> Tuple[float, np.ndarray]:
+    """Cramer-Rao floor: V = Fisher^-1 on the free block (exact)."""
+    _, fisher = exact_moments(model.graph, model.theta)
+    free = free_indices(model.graph, include_singleton)
+    V = np.linalg.inv(np.asarray(fisher)[np.ix_(free, free)])
+    return float(np.trace(V)), V
+
+
+def efficiency(tr_v: float, tr_v_mle: float) -> float:
+    """Paper Sec. 5: asymptotic efficiency tr(V)/tr(V_mle) (1 = optimal)."""
+    return tr_v / tr_v_mle

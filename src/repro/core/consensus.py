@@ -1,0 +1,111 @@
+"""One-step consensus combiners (paper Sec. 3.1, Eq. 4-5, 7).
+
+Operate on the per-node :class:`LocalFit` results; every scheme returns a
+full flat theta (fixed coordinates taken from ``theta_fixed``).
+
+Schemes:
+  uniform   — Linear-Uniform, w = 1
+  diagonal  — Linear-Diagonal, w^i_a = 1 / Vhat^i_aa           (Prop 4.7)
+  optimal   — Linear-Opt,     w_a = Vhat_a^{-1} e              (Prop 4.6)
+  max       — Max-Diagonal,   pick argmax 1 / Vhat^i_aa        (Prop 4.4)
+  matrix    — matrix consensus with W^i = Hhat^i (Eq. 7)       (Cor 4.2)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .asymptotics import param_owners, free_indices
+from .estimators import LocalFit
+from .graphs import Graph
+
+SCHEMES = ("uniform", "diagonal", "optimal", "max", "matrix")
+
+
+def empirical_cross_cov(fits: List[LocalFit],
+                        owners_a: List[Tuple[int, int]]) -> np.ndarray:
+    """Vhat_alpha: sample covariance of influence columns s^i_a (Prop 4.6)."""
+    cols = np.stack([fits[i].s[:, pos] for (i, pos) in owners_a], axis=1)
+    n = cols.shape[0]
+    return cols.T @ cols / n
+
+
+def combine(graph: Graph, fits: List[LocalFit], scheme: str,
+            include_singleton: bool = True,
+            theta_fixed: Optional[np.ndarray] = None) -> np.ndarray:
+    """One-step consensus estimate; returns the full flat theta vector."""
+    if theta_fixed is None:
+        theta_fixed = np.zeros(graph.n_params, dtype=np.float64)
+    theta = np.array(theta_fixed, dtype=np.float64, copy=True)
+
+    if scheme == "matrix":
+        return _matrix_consensus(graph, fits, include_singleton, theta)
+
+    owners = param_owners(graph, include_singleton)
+    for a, own in owners.items():
+        est = np.array([fits[i].theta[pos] for (i, pos) in own])
+        diag = np.array([max(fits[i].V[pos, pos], 1e-12) for (i, pos) in own])
+        # Robustness guard: a saturated/diverged local fit (quasi-separation,
+        # e.g. high-degree hubs at small n) yields non-finite estimates or a
+        # deceptively tiny Vhat. Treat such owners as infinite-variance so
+        # every weighting scheme zeroes them out; keep uniform truly uniform
+        # only over sane owners.
+        bad = (~np.isfinite(est)) | (~np.isfinite(diag)) | (np.abs(est) > 25.0)
+        if bad.all():
+            theta[a] = 0.0
+            continue
+        diag = np.where(bad, np.inf, diag)
+        k = len(own)
+        if scheme == "uniform":
+            w = np.where(bad, 0.0, 1.0)
+        elif scheme == "diagonal":
+            w = 1.0 / diag
+        elif scheme == "max":
+            w = np.zeros(k)
+            w[int(np.argmin(diag))] = 1.0
+        elif scheme == "optimal":
+            Va = empirical_cross_cov(fits, own)
+            if bad.any() or not np.all(np.isfinite(Va)):
+                w = 1.0 / diag                # fall back to diagonal weights
+            else:
+                w = np.linalg.solve(Va + 1e-10 * np.eye(k), np.ones(k))
+                if abs(w.sum()) < 1e-12:      # degenerate; fall back
+                    w = 1.0 / diag
+        else:
+            raise ValueError(f"unknown scheme {scheme!r}")
+        w = np.where(bad, 0.0, w)
+        est = np.where(bad, 0.0, est)
+        theta[a] = float(w @ est / w.sum())
+    return theta
+
+
+def _matrix_consensus(graph: Graph, fits: List[LocalFit],
+                      include_singleton: bool,
+                      theta: np.ndarray) -> np.ndarray:
+    """theta = (sum_i W^i)^{-1} sum_i W^i theta^i with W^i = Hhat^i (Eq. 7).
+
+    Not distributable (global matrix inverse) — included as the reference
+    point that is asymptotically equivalent to joint MPLE (Cor 4.2).
+    """
+    free = free_indices(graph, include_singleton)
+    pos_of = {int(a): k for k, a in enumerate(free)}
+    d = len(free)
+    W_sum = np.zeros((d, d))
+    Wt_sum = np.zeros(d)
+    for f in fits:
+        idx = np.array([pos_of[a] for a in f.beta])
+        W_sum[np.ix_(idx, idx)] += f.H
+        Wt_sum[idx] += f.H @ f.theta
+    sol = np.linalg.solve(W_sum + 1e-10 * np.eye(d), Wt_sum)
+    theta[free] = sol
+    return theta
+
+
+def mse(theta_hat: np.ndarray, theta_star: np.ndarray,
+        free: Optional[Sequence[int]] = None) -> float:
+    """||theta_hat - theta*||^2 over the estimated coordinates."""
+    d = theta_hat - theta_star
+    if free is not None:
+        d = d[np.asarray(free)]
+    return float(d @ d)

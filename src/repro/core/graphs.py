@@ -1,0 +1,140 @@
+"""Graph structures for pairwise graphical models / sensor networks.
+
+A ``Graph`` is an immutable container of ``p`` nodes and undirected edges
+``(i, j)`` with ``i < j``. The flat parameter vector for an Ising model on a
+graph is ordered ``[theta_1..theta_p, theta_e1..theta_em]`` (singletons first,
+then edges in ``graph.edges`` order); see :mod:`repro.core.ising`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+Edge = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    p: int
+    edges: Tuple[Edge, ...]
+
+    def __post_init__(self):
+        seen = set()
+        for (i, j) in self.edges:
+            if not (0 <= i < j < self.p):
+                raise ValueError(f"bad edge ({i},{j}) for p={self.p}")
+            if (i, j) in seen:
+                raise ValueError(f"duplicate edge ({i},{j})")
+            seen.add((i, j))
+
+    # ---- derived structure (cached via object.__setattr__ lazily) ----
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+    @property
+    def n_params(self) -> int:
+        """Size of flat parameter vector: singletons + edges."""
+        return self.p + self.m
+
+    @property
+    def adjacency(self) -> np.ndarray:
+        A = np.zeros((self.p, self.p), dtype=np.float32)
+        for (i, j) in self.edges:
+            A[i, j] = A[j, i] = 1.0
+        return A
+
+    @property
+    def edge_index(self) -> Dict[Edge, int]:
+        """Edge -> position in the edge block of the flat parameter vector."""
+        return {e: k for k, e in enumerate(self.edges)}
+
+    def neighbors(self, i: int) -> List[int]:
+        out = []
+        for (a, b) in self.edges:
+            if a == i:
+                out.append(b)
+            elif b == i:
+                out.append(a)
+        return sorted(out)
+
+    def degree(self, i: int) -> int:
+        return len(self.neighbors(i))
+
+    def incident_edges(self, i: int) -> List[int]:
+        """Edge-block indices of edges touching node i (in edges order)."""
+        return [k for k, (a, b) in enumerate(self.edges) if i in (a, b)]
+
+    def beta(self, i: int, include_singleton: bool = True) -> List[int]:
+        """Flat-parameter indices in beta_i = {alpha : i in alpha}.
+
+        With ``include_singleton=False`` (the paper's known-singleton small
+        experiments) only incident-edge parameters are returned.
+        """
+        idx = [i] if include_singleton else []
+        idx += [self.p + k for k in self.incident_edges(i)]
+        return idx
+
+
+# ---------------------------------------------------------------- factories
+def chain_graph(p: int) -> Graph:
+    return Graph(p, tuple((i, i + 1) for i in range(p - 1)))
+
+
+def star_graph(p: int) -> Graph:
+    """Node 0 is the hub; nodes 1..p-1 are leaves."""
+    return Graph(p, tuple((0, i) for i in range(1, p)))
+
+
+def grid_graph(rows: int, cols: int) -> Graph:
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if c + 1 < cols:
+                edges.append((i, i + 1))
+            if r + 1 < rows:
+                edges.append((i, i + cols))
+    return Graph(rows * cols, tuple(sorted(set(edges))))
+
+
+def complete_graph(p: int) -> Graph:
+    return Graph(p, tuple((i, j) for i in range(p) for j in range(i + 1, p)))
+
+
+def scale_free_graph(p: int, m: int = 1, seed: int = 0) -> Graph:
+    """Barabasi-Albert preferential attachment (Barabasi & Albert, 1999)."""
+    rng = np.random.RandomState(seed)
+    edges = set()
+    degrees = np.zeros(p, dtype=np.int64)
+    # seed clique of m+1 nodes
+    for i in range(m + 1):
+        for j in range(i + 1, m + 1):
+            edges.add((i, j))
+            degrees[i] += 1
+            degrees[j] += 1
+    for new in range(m + 1, p):
+        targets = set()
+        while len(targets) < m:
+            probs = degrees[:new] / degrees[:new].sum()
+            t = int(rng.choice(new, p=probs))
+            targets.add(t)
+        for t in targets:
+            edges.add((min(t, new), max(t, new)))
+            degrees[t] += 1
+            degrees[new] += 1
+    return Graph(p, tuple(sorted(edges)))
+
+
+def euclidean_graph(p: int, radius: float = 0.15, seed: int = 0) -> Graph:
+    """Random geometric graph on [0,1]^2 connecting nodes within ``radius``."""
+    rng = np.random.RandomState(seed)
+    pts = rng.rand(p, 2)
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    edges = tuple(
+        (i, j) for i in range(p) for j in range(i + 1, p)
+        if d2[i, j] <= radius ** 2
+    )
+    return Graph(p, edges)

@@ -1,0 +1,55 @@
+"""Samplers for Ising models: exact enumeration (small p) and Gibbs (any p)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .graphs import Graph
+from .ising import IsingModel, all_states, exact_probs, pair_matrix
+
+
+def exact_sample(model: IsingModel, n: int, key: jax.Array) -> jnp.ndarray:
+    """Draw n iid samples by enumerating all 2^p states (small p only)."""
+    probs = exact_probs(model.graph, model.theta)
+    idx = jax.random.categorical(key, jnp.log(probs + 1e-30), shape=(n,))
+    return jnp.asarray(all_states(model.graph.p))[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "burnin", "thin", "p"))
+def _gibbs_chain(theta_single, T, p: int, n: int, burnin: int, thin: int,
+                 key: jax.Array) -> jnp.ndarray:
+    """One Gibbs chain producing n samples (sequential single-site updates)."""
+    total = burnin + n * thin
+
+    def site_update(carry, i):
+        x, key = carry
+        key, sub = jax.random.split(key)
+        eta = theta_single[i] + x @ T[:, i]
+        p_plus = jax.nn.sigmoid(2.0 * eta)
+        xi = jnp.where(jax.random.uniform(sub) < p_plus, 1.0, -1.0)
+        return (x.at[i].set(xi), key), None
+
+    def sweep(carry, _):
+        carry, _ = jax.lax.scan(site_update, carry, jnp.arange(p))
+        return carry, carry[0]
+
+    key, init_key = jax.random.split(key)
+    x0 = jnp.where(jax.random.uniform(init_key, (p,)) < 0.5, 1.0, -1.0)
+    (_, _), xs = jax.lax.scan(sweep, (x0, key), None, length=total)
+    return xs[burnin::thin][:n]
+
+
+def gibbs_sample(model: IsingModel, n: int, key: jax.Array,
+                 burnin: int = 200, thin: int = 5,
+                 n_chains: int = 8) -> jnp.ndarray:
+    """Draw ~n samples via ``n_chains`` parallel Gibbs chains."""
+    per = -(-n // n_chains)
+    keys = jax.random.split(key, n_chains)
+    T = pair_matrix(model.graph, model.theta_edges)
+    chains = jax.vmap(
+        lambda k: _gibbs_chain(model.theta_single, T, model.graph.p,
+                               per, burnin, thin, k)
+    )(keys)
+    return chains.reshape(-1, model.graph.p)[:n]

@@ -1,0 +1,50 @@
+"""Ambient mesh context: lets deep model internals (MoE dispatch buffers,
+attention caches) place with_sharding_constraint on intermediates without
+threading the mesh through every call signature.
+
+Set by the launchers/dry-run (``use_mesh``); absent on single-device test
+runs, where constraints are skipped.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    _CURRENT.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _CURRENT.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT[-1] if _CURRENT else None
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint(x, P(*axes)) if a mesh is active and every
+    named axis divides the corresponding dim; identity otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    fixed = []
+    for dim, ax in zip(x.shape, axes):
+        names = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        ok = all(n in mesh.shape for n in names)
+        size = 1
+        for n in names:
+            size *= mesh.shape.get(n, 1)
+        if ax is None or not ok or dim % size != 0:
+            fixed.append(None)
+        else:
+            fixed.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,139 @@
+"""Sharding resolution: logical parameter axes -> mesh PartitionSpecs.
+
+Rules:
+  * A ParamSpec axis labeled "model" / "vocab" / "expert" is a CANDIDATE for
+    the mesh "model" axis. The first candidate (left-to-right in the spec's
+    preference order) whose dim size divides the mesh axis size wins; the
+    rest replicate. This is the divisibility guard that makes every arch
+    (6-head whisper, 60-expert qwen, kv=2 glm4) lower on a 16-way axis.
+  * Batch-like inputs shard over ("pod", "data") for the sync trainer and
+    over "data" within a pod replica for the consensus trainer.
+  * Caches shard by structural convention (see cache_pspec).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig, ParamSpec
+
+MODEL_LABELS = ("model", "vocab", "expert")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def param_pspec(ps: ParamSpec, mesh: Mesh,
+                pod_replicated: bool = True) -> P:
+    """Resolve one ParamSpec to a PartitionSpec with the divisibility guard."""
+    msize = _axis_size(mesh, "model")
+    entries = [None] * len(ps.shape)
+    for i, (label, dim) in enumerate(zip(ps.axes, ps.shape)):
+        if label in MODEL_LABELS and dim % msize == 0:
+            entries[i] = "model"
+            break  # one model-sharded dim per tensor
+    return P(*entries)
+
+
+def param_shardings(tree, mesh: Mesh):
+    """ParamSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, param_pspec(ps, mesh)),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stacked_param_shardings(tree, mesh: Mesh):
+    """Consensus trainer: per-pod replicas stacked on a leading 'pod' dim."""
+    def f(ps: ParamSpec):
+        inner = param_pspec(ps, mesh)
+        return NamedSharding(mesh, P("pod", *inner))
+    return jax.tree_util.tree_map(
+        f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def like_params(shardings_tree, target_tree):
+    """Broadcast a params sharding tree onto a same-structure tree (e.g.
+    optimizer moments)."""
+    return jax.tree_util.tree_map(lambda s, _: s, shardings_tree, target_tree)
+
+
+# ----------------------------------------------------------------- batches
+def batch_pspec(mesh: Mesh, batch: int, ndim: int, *,
+                pod_major: bool = False) -> P:
+    """Token batches: shard dim 0 over the largest valid data-ish axes."""
+    names = [n for n in ("pod", "data") if n in mesh.shape]
+    combo: Tuple[str, ...] = tuple(names)
+    size = int(np.prod([mesh.shape[n] for n in combo]))
+    if batch % size == 0:
+        first = combo if len(combo) > 1 else combo[0]
+    elif batch % mesh.shape.get("data", 1) == 0:
+        first = "data"
+    else:
+        first = None
+    return P(first, *([None] * (ndim - 1)))
+
+
+def consensus_batch_pspec(mesh: Mesh, local_batch: int, ndim: int) -> P:
+    """(P, H, local_batch, ...) batches: pod on dim0, data on dim2."""
+    data_ok = local_batch % mesh.shape["data"] == 0
+    return P("pod", None, "data" if data_ok else None,
+             *([None] * (ndim - 3)))
+
+
+# ------------------------------------------------------------------ caches
+def cache_pspec(key_name: str, shape: Tuple[int, ...], mesh: Mesh,
+                stacked: bool) -> P:
+    """Structural cache sharding (see module docstring).
+
+    k/v:  (stack?, B, L, KH, HD)  -> B: data, KH: model (if divisible)
+    ckv:  (stack?, B, L, R)       -> B: data
+    C:    (stack?, B, NH, HD, HD) -> B: data, first HD: model
+    h/c/n/m/conv: last dim model if divisible, B: data
+    """
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+    off = 1 if stacked else 0
+    entries: list = [None] * len(shape)
+    bdim = off
+    if bdim < len(shape) and shape[bdim] % dsize == 0:
+        entries[bdim] = "data"
+    if key_name in ("k", "v") and len(shape) >= off + 4:
+        kh = shape[off + 2]
+        if kh % msize == 0:
+            entries[off + 2] = "model"
+        elif shape[off + 1] % msize == 0:
+            entries[off + 1] = "model"       # sequence-sharded cache
+    elif key_name == "C" and len(shape) >= off + 4:
+        if shape[off + 2] % msize == 0:
+            entries[off + 2] = "model"       # heads
+        elif shape[off + 3] % msize == 0:
+            entries[off + 3] = "model"       # head_dim (xlstm: 4 heads, 512)
+    elif key_name in ("h", "c", "n", "m", "conv", "ckv"):
+        last = len(shape) - 1
+        if last > bdim and shape[last] % msize == 0:
+            entries[last] = "model"
+    return P(*entries)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """ShapeDtypeStruct cache tree -> NamedSharding tree by key convention."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        # unit-scanned caches carry a leading stack dim ("units" subtree);
+        # remainder-layer caches ("rem" subtree) do not.
+        stacked = any(hasattr(p, "key") and str(p.key) == "units"
+                      for p in path)
+        out.append(NamedSharding(mesh,
+                                 cache_pspec(name or "", leaf.shape, mesh,
+                                             stacked)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: tiled Gram/covariance accumulation G = S^T S / n.
+
+This is the empirical-Fisher / cross-estimator-covariance hot spot: the
+paper's Vhat_alpha matrices (Prop 4.6 optimal weights) and Jhat Fisher
+estimates are Gram matrices of per-sample influence statistics. The kernel
+streams S (n, d) through VMEM in (BN, BD) tiles and accumulates d x d
+outer products on the MXU; n never resides on-chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BD = 128   # output tile side
+BN = 512   # samples streamed per step
+
+
+def _kernel(si_ref, sj_ref, out_ref, acc_ref, *, n: int):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(si_ref[...].T, sj_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        out_ref[...] = (acc_ref[...] / n).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gram(s, *, interpret: bool = True):
+    """G = s^T s / n for s: (n, d) -> (d, d) float32."""
+    n, d = s.shape
+    pad_n = (-n) % BN
+    pad_d = (-d) % BD
+    sp = jnp.pad(s, ((0, pad_n), (0, pad_d)))
+    np_, dp = sp.shape
+    grid = (dp // BD, dp // BD, np_ // BN)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BN, BD), lambda i, j, k: (k, i)),
+            pl.BlockSpec((BN, BD), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BD, BD), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BD, BD), jnp.float32)],
+        interpret=interpret,
+    )(sp, sp)
+    return out[:d, :d]

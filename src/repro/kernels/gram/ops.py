@@ -1,0 +1,13 @@
+"""Jit'd public wrapper for Gram/Fisher accumulation."""
+import jax
+
+from .kernel import gram
+from .ref import gram_ref
+
+
+def gram_op(s, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return gram(s, interpret=False)
+    return gram_ref(s)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the gram kernel."""
+import jax.numpy as jnp
+
+
+def gram_ref(s):
+    n = s.shape[0]
+    return (s.astype(jnp.float32).T @ s.astype(jnp.float32)) / n

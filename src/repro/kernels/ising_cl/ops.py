@@ -1,0 +1,14 @@
+"""Jit'd public wrapper: picks the Pallas kernel on TPU, the pure-jnp
+reference elsewhere (CPU dry-run / tests use interpret mode explicitly)."""
+import jax
+
+from .kernel import ising_cl_logits
+from .ref import ising_cl_logits_ref
+
+
+def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return ising_cl_logits(x, theta, mask, bias, interpret=False)
+    return ising_cl_logits_ref(x, theta, mask, bias)

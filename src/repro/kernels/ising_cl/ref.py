@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the ising_cl kernel."""
+import jax.numpy as jnp
+
+
+def ising_cl_logits_ref(x, theta, mask, bias):
+    return (x @ (theta * mask) + bias[None, :]).astype(x.dtype)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: sliding-window flash attention (forward).
+
+Serving-side hot spot: makes long_500k prefill/decode sub-quadratic for the
+dense architectures and implements recurrentgemma's local-attention blocks.
+Online-softmax accumulators (m, l, acc) live in VMEM scratch; each q block
+visits only the (window + block) band of KV blocks, so HBM traffic is
+O(S * window / BK) instead of O(S^2). GQA is handled in the index maps
+(kv head = q head // group) — KV is never materially repeated.
+
+TPU adaptation: band iteration is a static grid dimension with clamped
+index maps (duplicated edge loads are masked), keeping the kernel free of
+dynamic control flow the TPU lowering cannot pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            window: int, seq: int, scale: float, wb: int):
+    qi = pl.program_id(1)
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kb_unclamped = qi * (BQ // BK) - wb + t
+    kb = jnp.maximum(kb_unclamped, 0)
+    qpos = qi * BQ + jax.lax.iota(jnp.int32, BQ)
+    kpos = kb * BK + jax.lax.iota(jnp.int32, BK)
+
+    s = jnp.dot(q_ref[...], k_ref[...].T,
+                preferred_element_type=jnp.float32) * scale     # (BQ, BK)
+    mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < seq)
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask &= (kb_unclamped >= 0)          # drop duplicated clamp-edge loads
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[...],
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _done():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret"))
+def swa_attention(q, k, v, *, window: int = 0, interpret: bool = True):
+    """Causal (optionally sliding-window) attention.
+
+    q: (B, S, H, D); k, v: (B, S, KH, D) with H % KH == 0. Returns
+    (B, S, H, D). S is padded to BQ alignment internally.
+    """
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    pad_s = (-s) % BQ
+    pad_d = (-d) % 128
+    qp = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, pad_d)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, pad_d)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, pad_d)))
+    sp, dp = s + pad_s, d + pad_d
+    # (B, S, H, D) -> (B*H, S, D) / (B*KH, S, D)
+    qf = qp.transpose(0, 2, 1, 3).reshape(b * h, sp, dp)
+    kf = kp.transpose(0, 2, 1, 3).reshape(b * kh, sp, dp)
+    vf = vp.transpose(0, 2, 1, 3).reshape(b * kh, sp, dp)
+
+    eff_w = window if window else sp
+    wb = (eff_w + BK - 1) // BK
+    nt = wb + BQ // BK                    # band blocks per q block
+    grid = (b * h, sp // BQ, nt)
+
+    def q_map(bh, qi, t):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, t):
+        kvh = (bh // h) * kh + (bh % h) // g
+        kb = jnp.maximum(qi * (BQ // BK) - wb + t, 0)
+        return (kvh, kb, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, seq=s,
+                          scale=1.0 / np.sqrt(d), wb=wb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, BQ, dp), q_map),
+            pl.BlockSpec((None, BK, dp), kv_map),
+            pl.BlockSpec((None, BK, dp), kv_map),
+        ],
+        out_specs=pl.BlockSpec((None, BQ, dp), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sp, dp).transpose(0, 2, 1, 3)
+    return out[:, :s, :, :d]

@@ -1,0 +1,39 @@
+"""Jit'd public wrapper for sliding-window flash attention.
+
+The Pallas kernel is forward-only; ``swa_op`` wraps it in a custom_vjp
+whose backward recomputes through the pure-jnp oracle (standard
+flash-attention practice: recompute beats storing probs)."""
+import functools
+
+import jax
+
+from .kernel import swa_attention
+from .ref import swa_attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _swa_pallas(q, k, v, window):
+    return swa_attention(q, k, v, window=window, interpret=False)
+
+
+def _swa_fwd(q, k, v, window):
+    return _swa_pallas(q, k, v, window), (q, k, v)
+
+
+def _swa_bwd(window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: swa_attention_ref(q, k, v,
+                                                       window=window),
+                     q, k, v)
+    return vjp(g)
+
+
+_swa_pallas.defvjp(_swa_fwd, _swa_bwd)
+
+
+def swa_op(q, k, v, *, window: int = 0, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return _swa_pallas(q, k, v, window)
+    return swa_attention_ref(q, k, v, window=window)

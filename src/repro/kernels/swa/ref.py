@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the swa kernel (materialized-score attention)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def swa_attention_ref(q, k, v, *, window: int = 0):
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -2.0e38)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)

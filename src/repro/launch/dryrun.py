@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod] [--all] [--out experiments/dryrun]
+
+Must run in its OWN process: the XLA_FLAGS above (512 placeholder host
+devices) are locked in at first jax init and would poison tests/benches.
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro.configs as CFG                       # noqa: E402
+from repro.launch import specs as SP              # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(hlo_text: str):
+    """HLO text -> {computation_name: [lines]} (+ name of the ENTRY).
+
+    A computation header is a top-level line containing '->' and ending in
+    '{'; its name is the leading (optionally ENTRY-prefixed) identifier.
+    """
+    comps, entry = {}, None
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None or not line.startswith(" "):
+            if stripped.endswith("{") and "->" in stripped:
+                m = COMP_NAME_RE.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        entry = cur
+                    continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def collective_stats(hlo_text: str):
+    """Loop-aware collective accounting.
+
+    XLA represents lax.scan as a while op whose body is a separate
+    computation; instruction-level sums would count per-layer collectives
+    ONCE instead of n_layers times. We therefore walk computations from the
+    entry, multiplying by each while loop's trip count (parsed from the
+    loop-condition constant). Bytes are the RESULT shape per device (the
+    post-SPMD module is per-device) — a topology-independent proxy for link
+    traffic. '-done' ops are skipped (their '-start' was counted).
+    """
+    comps, entry = _split_computations(hlo_text)
+
+    def line_collective(line):
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            return None
+        dtype, dims, kind, suffix = m.group(1), m.group(2), m.group(3), \
+            m.group(4)
+        if suffix == "-done":
+            return None
+        if dtype is None:
+            tm = TUPLE_SHAPE_RE.search(line)
+            if not tm:
+                return None
+            dtype, dims = tm.group(1), tm.group(2)
+        return kind, _shape_bytes(dtype, dims)
+
+    def trip_count(line, cond_name):
+        m = TRIP_RE.search(line)          # backend_config, most reliable
+        if m:
+            return int(m.group(1))
+        consts = []
+        for ln in comps.get(cond_name, []):
+            consts += [int(c) for c in CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    stats = {}
+
+    def walk(name, mult, depth=0):
+        if depth > 12 or name not in comps:
+            return
+        for line in comps[name]:
+            lc = line_collective(line)
+            if lc:
+                kind, b = lc
+                c, tot = stats.get(kind, (0, 0))
+                stats[kind] = (c + mult, tot + b * mult)
+            wm = WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                walk(body, mult * trip_count(line, cond), depth + 1)
+            # calls / fusions can hide collectives too
+            cm = re.search(r"(?:call|fusion)\(.*?\).*?"
+                           r"(?:to_apply|calls)=%?([\w.\-]+)", line)
+            if cm:
+                walk(cm.group(1), mult, depth + 1)
+
+    if entry:
+        walk(entry, 1)
+    return {k: {"count": c, "bytes": b} for k, (c, b) in stats.items()}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            microbatch: int = 32, save_hlo_dir=None) -> dict:
+    cfg = CFG.get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = SP.build(cfg, shape_name, mesh, microbatch=microbatch)
+    t0 = time.time()
+    jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                     out_shardings=spec.out_shardings,
+                     donate_argnums=spec.donate)
+    from repro.distributed.context import use_mesh
+    with use_mesh(mesh):
+        lowered = jitted.lower(*spec.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from repro.launch import hloparse
+    deep = hloparse.analyze(hlo)
+    coll = deep["collectives"]
+    if save_hlo_dir:
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        tag = f"{arch.replace('.', '_')}_{shape_name}_" \
+              f"{'multipod' if multi_pod else 'pod'}"
+        with open(os.path.join(save_hlo_dir, tag + ".hlo"), "w") as f:
+            f.write(hlo)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "flops": cost.get("flops", 0.0),           # body-once caveat
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "dot_flops": deep["dot_flops"],            # loop-corrected, /device
+        "hbm_bytes": deep["hbm_bytes"],            # loop-corrected, /device
+        "collectives": coll,
+        "collective_bytes_total": deep["collective_bytes_total"],
+        "window_override": SP.decode_window(cfg, shape_name),
+        "microbatch": microbatch if shape_name == "train_4k" else None,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SP.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatch", type=int, default=32)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(CFG.ARCH_IDS) if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SP.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch.replace('.', '_')}_{shape}_" \
+                      f"{'multipod' if mp else 'pod'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    n_skip += 1
+                    continue
+                print(f"== {tag} ==", flush=True)
+                try:
+                    rec = run_one(arch, shape, mp,
+                                  microbatch=args.microbatch,
+                                  save_hlo_dir=(args.out + "/hlo"
+                                                if args.save_hlo else None))
+                    n_ok += 1
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "ok": False, "error": f"{type(e).__name__}: {e}"}
+                    n_fail += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("ok"):
+                    gb = rec["memory"]["argument_bytes"] / 2**30
+                    print(f"   ok lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"args/dev={gb:.2f}GiB "
+                          f"flops={rec['flops']:.3g} "
+                          f"coll={rec['collective_bytes_total']:.3g}B",
+                          flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

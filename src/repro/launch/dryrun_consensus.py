@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Paper-technique dry-run: lower one consensus ROUND (H local steps per pod
++ cross-pod combine) vs H fully-synchronous steps on the 2x16x16 multi-pod
+mesh, and compare collective traffic. This quantifies the paper's
+communication claim at pod scale: one-step consensus replaces H per-step
+gradient all-reduces on the pod (DCN) axis with a single weighted parameter
+combination per round.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_consensus \
+        --arch llama3.2-3b --h-steps 4
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+import repro.configs as CFG                     # noqa: E402
+from repro.distributed import sharding as SH    # noqa: E402
+from repro.launch import hloparse               # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as T       # noqa: E402
+from repro.optim import adamw                   # noqa: E402
+from repro.train import consensus as CT         # noqa: E402
+from repro.train import step as TS              # noqa: E402
+
+SEQ = 4096
+LOCAL_B = 32     # per-pod per-local-step batch
+
+
+def lower_and_analyze(fn, args, in_sh, out_sh, donate=(), mesh=None):
+    from repro.distributed.context import use_mesh
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    t0 = time.time()
+    if mesh is not None:
+        with use_mesh(mesh):
+            lowered = jitted.lower(*args)
+    else:
+        lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    deep = hloparse.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return {
+        "compile_s": round(time.time() - t0, 1),
+        "collectives": deep["collectives"],
+        "collective_bytes_total": deep["collective_bytes_total"],
+        "cross_pod_bytes": deep["cross_pod_bytes"],
+        "dot_flops": deep["dot_flops"],
+        "hbm_bytes": deep["hbm_bytes"],
+        "temp_bytes": mem.temp_size_in_bytes,
+    }
+
+
+def sync_spec(cfg, mesh, h):
+    """H synchronous steps over the full mesh (pod+data batch sharding)."""
+    ocfg = adamw.AdamWConfig()
+    tcfg = TS.TrainConfig(mesh=mesh)
+    train_step = TS.make_train_step(cfg, ocfg, tcfg)
+
+    def h_steps(state, batches):
+        def body(st, b):
+            st, metrics = train_step(st, b)
+            return st, metrics["nll"]
+        state, nlls = jax.lax.scan(body, state, batches)
+        return state, nlls.mean()
+
+    gb = LOCAL_B * 2   # same tokens/step as 2 pods of LOCAL_B
+    params = T.abstract_params(cfg)
+    p_sds = jax.tree_util.tree_map(
+        lambda ps: ps.sds(cfg.jdtype), params,
+        is_leaf=lambda x: hasattr(x, "axes"))
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    state_sds = TS.TrainState(
+        params=p_sds,
+        opt=adamw.AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                             m=jax.tree_util.tree_map(f32, p_sds),
+                             v=jax.tree_util.tree_map(f32, p_sds)))
+    p_sh = SH.param_shardings(params, mesh)
+    state_sh = TS.TrainState(
+        params=p_sh,
+        opt=adamw.AdamWState(step=NamedSharding(mesh, P()),
+                             m=jax.tree_util.tree_map(lambda s: s, p_sh),
+                             v=jax.tree_util.tree_map(lambda s: s, p_sh)))
+    batch_sds = {k: jax.ShapeDtypeStruct((h, gb, SEQ), jnp.int32)
+                 for k in ("tokens", "labels")}
+    bsh = NamedSharding(mesh, P(None, ("pod", "data"), None))
+    batch_sh = {k: bsh for k in batch_sds}
+    rep = NamedSharding(mesh, P())
+    return ((state_sds, batch_sds), (state_sh, batch_sh),
+            (state_sh, rep))
+
+
+def consensus_spec(cfg, mesh, scheme, h):
+    ccfg = CT.ConsensusConfig(n_pods=2, scheme=scheme, h_steps=h)
+    ocfg = adamw.AdamWConfig()
+    tcfg = TS.TrainConfig()
+    round_step = CT.make_round_step(cfg, ocfg, tcfg, ccfg)
+
+    params = T.abstract_params(cfg)
+    stack = lambda sds, lead: jax.ShapeDtypeStruct((lead,) + sds.shape,
+                                                   sds.dtype)
+    p_sds = jax.tree_util.tree_map(
+        lambda ps: ps.sds(cfg.jdtype), params,
+        is_leaf=lambda x: hasattr(x, "axes"))
+    sp_sds = jax.tree_util.tree_map(lambda s: stack(s, 2), p_sds)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    state_sds = CT.ConsensusState(
+        params=sp_sds,
+        opt=adamw.AdamWState(step=jax.ShapeDtypeStruct((2,), jnp.int32),
+                             m=jax.tree_util.tree_map(f32, sp_sds),
+                             v=jax.tree_util.tree_map(f32, sp_sds)),
+        lam=jax.tree_util.tree_map(f32, sp_sds),
+        theta_bar=p_sds)
+    sp_sh = SH.stacked_param_shardings(params, mesh)
+    p_sh = SH.param_shardings(params, mesh)
+    rep = NamedSharding(mesh, P())
+    pod_rep = NamedSharding(mesh, P("pod"))
+    state_sh = CT.ConsensusState(
+        params=sp_sh,
+        opt=adamw.AdamWState(step=pod_rep,
+                             m=jax.tree_util.tree_map(lambda s: s, sp_sh),
+                             v=jax.tree_util.tree_map(lambda s: s, sp_sh)),
+        lam=jax.tree_util.tree_map(lambda s: s, sp_sh),
+        theta_bar=p_sh)
+    batch_sds = {k: jax.ShapeDtypeStruct((2, h, LOCAL_B, SEQ), jnp.int32)
+                 for k in ("tokens", "labels")}
+    bsh = NamedSharding(mesh, P("pod", None, "data", None))
+    batch_sh = {k: bsh for k in batch_sds}
+    metrics_sh = {"nll": rep, "z_loss": rep, "n_tokens": rep, "aux": rep}
+    return ((state_sds, batch_sds), (state_sh, batch_sh),
+            (state_sh, metrics_sh))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--h-steps", type=int, default=4)
+    ap.add_argument("--out", default="experiments/consensus_dryrun.json")
+    args = ap.parse_args()
+
+    cfg = CFG.get(args.arch)
+    mesh = make_production_mesh(multi_pod=True)
+    results = {}
+
+    sds, in_sh, out_sh = sync_spec(cfg, mesh, args.h_steps)
+    ocfg = adamw.AdamWConfig()
+    tcfg = TS.TrainConfig(mesh=mesh)
+    train_step = TS.make_train_step(cfg, ocfg, tcfg)
+
+    def h_sync(state, batches):
+        def body(st, b):
+            st, m = train_step(st, b)
+            return st, m["nll"]
+        return jax.lax.scan(body, state, batches)
+
+    print("== sync baseline ==", flush=True)
+    results["sync"] = lower_and_analyze(h_sync, sds, in_sh, out_sh, (0,), mesh)
+    print(json.dumps(results["sync"]["collectives"], indent=1), flush=True)
+
+    for scheme in ("uniform", "diagonal", "max", "admm"):
+        print(f"== consensus {scheme} ==", flush=True)
+        ccfg = CT.ConsensusConfig(n_pods=2, scheme=scheme,
+                                  h_steps=args.h_steps)
+        round_step = CT.make_round_step(cfg, ocfg, TS.TrainConfig(), ccfg)
+        sds, in_sh, out_sh = consensus_spec(cfg, mesh, scheme, args.h_steps)
+        results[scheme] = lower_and_analyze(round_step, sds, in_sh, out_sh,
+                                            (0,), mesh)
+        print(json.dumps(results[scheme]["collectives"], indent=1),
+              flush=True)
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"arch": args.arch, "h_steps": args.h_steps,
+                   "local_batch": LOCAL_B, "seq": SEQ,
+                   "results": results}, f, indent=1)
+    print("\nper-round collective bytes/device (total | cross-pod/DCN):")
+    for k, v in results.items():
+        print(f"  {k:9s} {v['collective_bytes_total']:.3e} | "
+              f"{v['cross_pod_bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Loop-aware HLO analysis: collective bytes, dot FLOPs, and HBM traffic,
+all multiplied by while-loop trip counts.
+
+Why: XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE
+(verified by probe — a 16-iteration scan of a matmul reports 1 matmul of
+FLOPs), so for scan-over-layers models it understates per-step totals by
+the trip count. This walker descends from ENTRY through while bodies
+(multiplying by ``known_trip_count`` from backend_config), call and fusion
+computations, and accumulates:
+
+  * collectives: count + result bytes per kind (per-device, post-SPMD)
+  * dot FLOPs: 2 * prod(result) * prod(contracted lhs dims)
+  * bytes: result + operand bytes per instruction (HBM-traffic proxy;
+    fusion-internal instructions contribute dots/collectives but NOT bytes —
+    their intermediates stay on-chip)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+DT = "|".join(DTYPE_BYTES)
+SHAPE_RE = re.compile(rf"\b({DT})\[([\d,]*)\]")
+COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?"
+                     r"([\w.\-]+)")
+COLL_RE = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{\{(\d+),(\d+)\}")
+DOT_RE = re.compile(r"\sdot\(")
+LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(d) for d in s.split(",") if d]
+
+
+def _nelem(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+OPERANDS_RE = re.compile(r"dot\(([^)]*)\)")
+NAME_REF_RE = re.compile(r"%([\w.\-]+)")
+HEADER_PARAM_RE = re.compile(rf"%?([\w.\-]+):\s*({DT})\[([\d,]*)\]")
+
+
+def _split_computations(text: str):
+    comps, entry = {}, None
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None or not line.startswith(" "):
+            if stripped.endswith("{") and "->" in stripped:
+                m = COMP_NAME_RE.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = {"lines": [], "header": stripped}
+                    if stripped.startswith("ENTRY"):
+                        entry = cur
+                    continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur]["lines"].append(line)
+    return comps, entry
+
+
+def _symtab(comp) -> Dict[str, List[int]]:
+    """instruction/parameter name -> result dims within one computation."""
+    tab: Dict[str, List[int]] = {}
+    for m in HEADER_PARAM_RE.finditer(comp["header"]):
+        tab[m.group(1)] = _dims(m.group(3))
+    for line in comp["lines"]:
+        dm = DEF_RE.match(line)
+        if not dm:
+            continue
+        sm = SHAPE_RE.search(line.split(", metadata=")[0])
+        if sm:
+            tab[dm.group(1)] = _dims(sm.group(2))
+    return tab
+
+
+def crosses_pod(line: str, pod_size: int = 256) -> bool:
+    """True if the collective's first replica group spans a pod boundary
+    (device ids on both sides of ``pod_size``). Handles the iota
+    ``[g,s]<=[dims]T(perm)`` form and the explicit list form."""
+    import numpy as _np
+    m = IOTA_GROUPS_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = _dims(m.group(3))
+        ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose(_dims(m.group(4)))
+        g0 = ids.reshape(ng, gs)[0]
+        return bool((g0 // pod_size).min() != (g0 // pod_size).max())
+    m = LIST_GROUPS_RE.search(line)
+    if m:
+        g0 = _np.array(_dims(m.group(1)))
+        return bool((g0 // pod_size).min() != (g0 // pod_size).max())
+    m = PERMUTE_PAIRS_RE.search(line)
+    if m:
+        a, b = int(m.group(1)), int(m.group(2))
+        return a // pod_size != b // pod_size
+    return False
+
+
+def analyze(hlo_text: str) -> Dict:
+    comps, entry = _split_computations(hlo_text)
+
+    acc = {
+        "collectives": {},       # kind -> [count, bytes]
+        "dot_flops": 0.0,
+        "bytes": 0.0,
+        "cross_pod_bytes": 0.0,  # collectives spanning the pod boundary
+        "loops": [],             # (trip, depth) for reporting
+    }
+
+    def shapes_on(line: str) -> List[Tuple[str, List[int]]]:
+        # strip backend_config / metadata tails that contain brackets
+        head = line.split(", metadata=")[0].split(", backend_config=")[0]
+        return [(m.group(1), _dims(m.group(2)))
+                for m in SHAPE_RE.finditer(head)]
+
+    def line_bytes(line: str, symtab=None) -> float:
+        # dynamic-(update-)slice inside scan bodies: the instruction's
+        # result shape is the FULL buffer, but the op only moves one slice.
+        # Counting full shapes inflated xlstm train memory ~20x (v1 proxy,
+        # see EXPERIMENTS.md); count the slice operand instead.
+        if " dynamic-update-slice(" in line:
+            sh = shapes_on(line)
+            if len(sh) >= 3:
+                # result, operand(buffer), update, indices...
+                return 2.0 * _nelem(sh[2][1]) * DTYPE_BYTES[sh[2][0]]
+            if symtab is not None:
+                om = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+                if om:
+                    refs = NAME_REF_RE.findall(om.group(1))
+                    if len(refs) >= 2 and refs[1] in symtab:
+                        return 2.0 * 4.0 * _nelem(symtab[refs[1]])
+            return 0.0
+        if " dynamic-slice(" in line:
+            sh = shapes_on(line)
+            if sh:
+                return 2.0 * _nelem(sh[0][1]) * DTYPE_BYTES[sh[0][0]]
+        sh = shapes_on(line)
+        if not sh:
+            return 0.0
+        # bookkeeping ops move no HBM bytes
+        if re.search(r"\s(get-tuple-element|tuple|parameter|bitcast|"
+                     r"after-all|iota|constant)\(", line):
+            return 0.0
+        # fusion whose result shape equals an operand shape = in-place
+        # buffer thread (fused DUS in scan bodies): count only the
+        # non-matching operands (the actual slice/update traffic)
+        if " fusion(" in line and len(sh) > 1:
+            res = sh[0]
+            ops = sh[1:]
+            if any(o == res for o in ops):
+                return float(sum(_nelem(d) * DTYPE_BYTES[t]
+                                 for t, d in ops if (t, d) != res))
+        return float(sum(_nelem(d) * DTYPE_BYTES[t] for t, d in sh))
+
+    def dot_flops(line: str, symtab: Dict[str, List[int]]) -> float:
+        sh = shapes_on(line)
+        if not sh:
+            return 0.0
+        result = sh[0][1]
+        lhs: Optional[List[int]] = sh[1][1] if len(sh) > 1 else None
+        if lhs is None:
+            om = OPERANDS_RE.search(line)
+            if om:
+                refs = NAME_REF_RE.findall(om.group(1))
+                if refs:
+                    lhs = symtab.get(refs[0])
+        if lhs is None:
+            return 0.0
+        m = LHS_CONTRACT_RE.search(line)
+        if not m:
+            return 0.0
+        k = 1
+        for idx in _dims(m.group(1)):
+            if idx < len(lhs):
+                k *= lhs[idx]
+        return 2.0 * _nelem(result) * k
+
+    def trip_of(line: str, cond: str) -> int:
+        m = TRIP_RE.search(line)
+        if m:
+            return int(m.group(1))
+        for ln in comps.get(cond, {}).get("lines", []):
+            mm = re.findall(r"constant\((\d+)\)", ln)
+            if mm:
+                return max(int(x) for x in mm)
+        return 1
+
+    symtabs: Dict[str, Dict[str, List[int]]] = {}
+
+    def walk(name: str, mult: float, count_bytes: bool, depth: int = 0):
+        if depth > 16 or name not in comps:
+            return
+        if name not in symtabs:
+            symtabs[name] = _symtab(comps[name])
+        for line in comps[name]["lines"]:
+            cm = COLL_RE.search(line)
+            if cm and cm.group(2) != "-done":
+                kind = cm.group(1)
+                sh = shapes_on(line)
+                b = _nelem(sh[0][1]) * DTYPE_BYTES[sh[0][0]] if sh else 0
+                ent = acc["collectives"].setdefault(kind, [0, 0.0])
+                ent[0] += mult
+                ent[1] += b * mult
+                if crosses_pod(line):
+                    acc["cross_pod_bytes"] += b * mult
+            if DOT_RE.search(line):
+                acc["dot_flops"] += dot_flops(line, symtabs[name]) * mult
+            if count_bytes:
+                acc["bytes"] += line_bytes(line, symtabs[name]) * mult
+            wm = WHILE_RE.search(line)
+            if wm:
+                trip = trip_of(line, wm.group(1))
+                acc["loops"].append((trip, depth))
+                walk(wm.group(2), mult * trip, count_bytes, depth + 1)
+                continue
+            fm = CALL_RE.search(line)
+            if fm:
+                is_fusion = " fusion(" in line
+                # fusion internals: count dots/collectives, not bytes
+                walk(fm.group(1), mult, count_bytes and not is_fusion,
+                     depth + 1)
+
+    if entry:
+        walk(entry, 1.0, True)
+    return {
+        "collectives": {k: {"count": int(c), "bytes": float(b)}
+                        for k, (c, b) in acc["collectives"].items()},
+        "collective_bytes_total": float(
+            sum(b for _, b in acc["collectives"].values())),
+        "dot_flops": acc["dot_flops"],
+        "hbm_bytes": acc["bytes"],
+        "cross_pod_bytes": acc["cross_pod_bytes"],
+        "n_loops": len(acc["loops"]),
+        "max_trip": max((t for t, _ in acc["loops"]), default=1),
+    }

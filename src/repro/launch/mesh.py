@@ -1,0 +1,30 @@
+"""Production mesh construction (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run sets XLA_FLAGS for 512 host devices before any jax
+import; tests and benches see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_consensus_mesh(n_pods: int = 2):
+    """Mesh for the consensus trainer: explicit pod axis even single-pod
+    dry-runs (the pod axis carries the paper's cross-sensor collectives)."""
+    per_pod = len(jax.devices()) // n_pods
+    data = 16 if per_pod % 16 == 0 else per_pod
+    model = per_pod // data
+    return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"))
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh on the single real CPU device (tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

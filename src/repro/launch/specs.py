@@ -1,0 +1,169 @@
+"""Step builders + ShapeDtypeStruct input specs for every
+(architecture x input-shape) combination — the shared substrate of the
+multi-pod dry-run, the roofline analysis, and the real launchers.
+
+Input shapes (assigned):
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> prefill (forward+cache)
+  decode_32k   seq 32768,  global_batch 128  -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1    -> serve_step; dense archs use
+               the sliding-window variant (window 4096), SSM/hybrid native.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.models import transformer as T
+from repro.models.common import ArchConfig, abstract_tree
+from repro.optim import adamw
+from repro.train import step as TS
+
+LONG_WINDOW = 4096
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _rep(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def _params_abstract(cfg: ArchConfig):
+    return abstract_tree(T.abstract_params(cfg), cfg.jdtype)
+
+
+def _state_abstract(cfg: ArchConfig):
+    params = _params_abstract(cfg)
+    f32 = lambda sds: jax.ShapeDtypeStruct(sds.shape, jnp.float32)
+    opt = adamw.AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                           m=jax.tree_util.tree_map(f32, params),
+                           v=jax.tree_util.tree_map(f32, params))
+    return TS.TrainState(params=params, opt=opt)
+
+
+def _state_shardings(cfg: ArchConfig, mesh: Mesh):
+    ps = SH.param_shardings(T.abstract_params(cfg), mesh)
+    return TS.TrainState(
+        params=ps,
+        opt=adamw.AdamWState(step=_rep(mesh),
+                             m=jax.tree_util.tree_map(lambda s: s, ps),
+                             v=jax.tree_util.tree_map(lambda s: s, ps)))
+
+
+def _batch_specs(cfg: ArchConfig, b: int, s: int, mesh: Mesh,
+                 with_labels: bool):
+    sds = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    sh = {"tokens": NamedSharding(mesh, SH.batch_pspec(mesh, b, 2))}
+    if with_labels:
+        sds["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        sh["labels"] = sh["tokens"]
+    if cfg.enc_dec:
+        sds["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frames, cfg.d_model), cfg.jdtype)
+        sh["enc_frames"] = NamedSharding(mesh, SH.batch_pspec(mesh, b, 3))
+    if cfg.n_patches:
+        sds["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), cfg.jdtype)
+        sh["patch_embeds"] = NamedSharding(mesh, SH.batch_pspec(mesh, b, 3))
+    return sds, sh
+
+
+def decode_window(cfg: ArchConfig, shape_name: str) -> Optional[int]:
+    """Sub-quadratic carve-out: dense archs serve long_500k via SWA."""
+    if shape_name == "long_500k" and cfg.long_variant == "swa":
+        return LONG_WINDOW
+    return None
+
+
+@dataclasses.dataclass
+class LoweredSpec:
+    fn: Any            # callable to jit
+    args: Tuple        # ShapeDtypeStruct args
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple = ()
+
+
+def build(cfg: ArchConfig, shape_name: str, mesh: Mesh, *,
+          microbatch: int = 32) -> LoweredSpec:
+    info = SHAPES[shape_name]
+    s, b, kind = info["seq_len"], info["global_batch"], info["kind"]
+
+    if kind == "train":
+        tcfg = TS.TrainConfig(microbatch=microbatch, remat=True, mesh=mesh)
+        ocfg = adamw.AdamWConfig()
+        train_step = TS.make_train_step(cfg, ocfg, tcfg)
+        state_sds = _state_abstract(cfg)
+        state_sh = _state_shardings(cfg, mesh)
+        batch_sds, batch_sh = _batch_specs(cfg, b, s, mesh, with_labels=True)
+        metrics_sh = {"nll": _rep(mesh), "z_loss": _rep(mesh),
+                      "n_tokens": _rep(mesh), "aux": _rep(mesh)}
+        return LoweredSpec(
+            fn=train_step, args=(state_sds, batch_sds),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate=(0,))
+
+    params_sds = _params_abstract(cfg)
+    params_sh = SH.param_shardings(T.abstract_params(cfg), mesh)
+
+    if kind == "prefill":
+        batch_sds, batch_sh = _batch_specs(cfg, b, s, mesh,
+                                           with_labels=False)
+
+        def prefill_step(params, batch):
+            return T.forward(cfg, params, batch["tokens"],
+                             enc_frames=batch.get("enc_frames"),
+                             patch_embeds=batch.get("patch_embeds"),
+                             remat=False, return_cache=True, cache_len=s)
+
+        cache_sds = T.init_cache(cfg, b, s)
+        cache_sh = SH.cache_shardings(cache_sds, mesh)
+        logits_sh = NamedSharding(mesh, SH.batch_pspec(mesh, b, 3))
+        return LoweredSpec(
+            fn=prefill_step, args=(params_sds, batch_sds),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(logits_sh, _rep(mesh), cache_sh))
+
+    # decode kinds
+    window = decode_window(cfg, shape_name)
+    cache_sds = T.init_cache(cfg, b, s, window_override=window)
+    cache_sh = SH.cache_shardings(cache_sds, mesh)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, SH.batch_pspec(mesh, b, 2))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    args = [params_sds, cache_sds, tok_sds, pos_sds]
+    in_sh = [params_sh, cache_sh, tok_sh, _rep(mesh)]
+    extra = {}
+    if cfg.enc_dec:
+        enc_sds = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                       cfg.jdtype)
+        args.append(enc_sds)
+        in_sh.append(NamedSharding(mesh, SH.batch_pspec(mesh, b, 3)))
+
+        def serve_step(params, cache, tokens, pos, enc_out):
+            logits, new_cache = T.decode_step(cfg, params, cache, tokens,
+                                              pos, enc_out=enc_out,
+                                              window_override=window)
+            return logits, new_cache
+    else:
+        def serve_step(params, cache, tokens, pos):
+            logits, new_cache = T.decode_step(cfg, params, cache, tokens,
+                                              pos, window_override=window)
+            return logits, new_cache
+
+    logits_sh = NamedSharding(mesh, SH.batch_pspec(mesh, b, 3))
+    return LoweredSpec(
+        fn=serve_step, args=tuple(args), in_shardings=tuple(in_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate=(1,))

@@ -1,0 +1,373 @@
+"""Attention blocks: GQA (full / sliding-window / blocked-flash), MLA
+(latent KV compression, minicpm3-style), cross-attention (whisper), and the
+decode paths with KV caches.
+
+The full-sequence path switches to a blocked flash-style scan over KV chunks
+(online softmax, O(block) memory) once seq_len exceeds ``BLOCK_THRESHOLD`` —
+this is what makes prefill_32k lowerable without materializing (S, S) scores.
+On TPU the Pallas kernel in ``repro.kernels.swa`` replaces the blocked path;
+the pure-JAX version here is the oracle and the CPU/dry-run lowering path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, apply_rope, rms_norm, spec
+
+BLOCK_THRESHOLD = 8192
+KV_BLOCK = 1024
+NEG_INF = -2.0e38
+
+
+# ------------------------------------------------------------------- specs
+def gqa_spec(cfg: ArchConfig, stack: int = 0):
+    hd = cfg.hd
+    st = (stack,) if stack else ()
+    sa = (None,) if stack else ()
+    p = {
+        "wq": spec(st + (cfg.d_model, cfg.n_heads * hd), sa + (None, "model")),
+        "wk": spec(st + (cfg.d_model, cfg.n_kv_heads * hd), sa + (None, "model")),
+        "wv": spec(st + (cfg.d_model, cfg.n_kv_heads * hd), sa + (None, "model")),
+        "wo": spec(st + (cfg.n_heads * hd, cfg.d_model), sa + ("model", None)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = spec(st + (hd,), sa + (None,), init="ones",
+                           dtype=jnp.float32)
+        p["k_norm"] = spec(st + (hd,), sa + (None,), init="ones",
+                           dtype=jnp.float32)
+    return p
+
+
+def mla_spec(cfg: ArchConfig, stack: int = 0):
+    st = (stack,) if stack else ()
+    sa = (None,) if stack else ()
+    qk_hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": spec(st + (cfg.d_model, cfg.q_lora_rank), sa + (None, None)),
+        "q_a_norm": spec(st + (cfg.q_lora_rank,), sa + (None,), init="ones",
+                         dtype=jnp.float32),
+        "wq_b": spec(st + (cfg.q_lora_rank, cfg.n_heads * qk_hd),
+                     sa + (None, "model")),
+        "wkv_a": spec(st + (cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                      sa + (None, None)),
+        "kv_a_norm": spec(st + (cfg.kv_lora_rank,), sa + (None,), init="ones",
+                          dtype=jnp.float32),
+        "wkv_b": spec(st + (cfg.kv_lora_rank,
+                            cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                      sa + (None, "model")),
+        "wo": spec(st + (cfg.n_heads * cfg.v_head_dim, cfg.d_model),
+                   sa + ("model", None)),
+    }
+
+
+def cross_spec(cfg: ArchConfig, stack: int = 0):
+    return gqa_spec(cfg, stack)
+
+
+# ---------------------------------------------------------------- core math
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, kh, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, d)
+                            ).reshape(b, s, kh * n_rep, d)
+
+
+def _plain_attention(q, k, v, *, causal: bool, window: int,
+                     q_offset: int = 0):
+    """Materialized-score attention. q (B,Sq,H,D), k/v (B,Sk,H,D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _blocked_attention(q, k, v, *, causal: bool, window: int):
+    """Flash-style online-softmax scan over KV blocks; O(KV_BLOCK) memory.
+
+    Differentiable (lax.scan) and exactly equal to _plain_attention.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    nb = (sk + KV_BLOCK - 1) // KV_BLOCK
+    pad = nb * KV_BLOCK - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, KV_BLOCK, h, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, KV_BLOCK, h, d).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / np.sqrt(d)
+    qpos = jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry                     # (B,H,Sq), (B,H,Sq), (B,Sq,H,D)
+        kblk, vblk, blk_idx = inp
+        kpos = blk_idx * KV_BLOCK + jnp.arange(KV_BLOCK)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kblk).astype(jnp.float32) * scale
+        mask = (kpos[None, :] < sk)
+        mask = jnp.broadcast_to(mask, (sq, KV_BLOCK))
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(q.dtype), vblk).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def sdpa(q, k, v, *, causal: bool = True, window: int = 0,
+         force_blocked: Optional[bool] = None):
+    """Dispatch: Pallas SWA kernel on TPU for windowed attention, blocked
+    flash-style scan for long sequences, materialized scores otherwise."""
+    if causal and jax.default_backend() == "tpu":
+        from repro.kernels.swa.ops import swa_op
+        return swa_op(q, k, v, window=window, use_pallas=True)
+    blocked = (q.shape[1] > BLOCK_THRESHOLD if force_blocked is None
+               else force_blocked)
+    if blocked:
+        return _blocked_attention(q, k, v, causal=causal, window=window)
+    return _plain_attention(q, k, v, causal=causal, window=window)
+
+
+# --------------------------------------------------------------- GQA block
+def _cache_from_seq(k, v, cache_len: int, window: int, kh: int):
+    """Arrange full-sequence K/V (B, S, kv, hd) into the decode cache layout.
+
+    Full attention: first S slots of a (B, cache_len) buffer. Sliding window:
+    ring buffer of size min(window, cache_len) with slot = pos % eff_len.
+    """
+    b, s, _, hd = k.shape
+    k = _repeat_kv(k, kh // k.shape[2])
+    v = _repeat_kv(v, kh // v.shape[2])
+    eff = min(window, cache_len) if window else cache_len
+    if window and s >= eff:
+        shift = (s - eff) % eff
+        k_c = jnp.roll(k[:, s - eff:], shift, axis=1)
+        v_c = jnp.roll(v[:, s - eff:], shift, axis=1)
+    else:
+        pad = eff - s
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {"k": k_c, "v": v_c}
+
+
+def gqa_apply(cfg: ArchConfig, p: Dict, x, positions, *,
+              window: Optional[int] = None, return_cache: bool = False,
+              cache_len: int = 0):
+    """Full-sequence GQA attention (train/prefill). x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    w = cfg.window if window is None else window
+    cache = None
+    if return_cache:
+        cache = _cache_from_seq(k, v, cache_len or s, w, _cache_heads(cfg))
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    out = sdpa(q, k, v, causal=True, window=w)
+    out = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    return (out, cache) if return_cache else out
+
+
+def gqa_cache_spec(cfg: ArchConfig, batch: int, max_len: int,
+                   stack: int = 0, window: int = 0):
+    """KV cache ShapeDtypeStructs. KV heads are expanded to >= 16 replicas
+    (Megatron-style KV replication) so the cache shards over the model axis.
+    """
+    eff_len = min(max_len, window) if window else max_len
+    kh = _cache_heads(cfg)
+    st = (stack,) if stack else ()
+    shape = st + (batch, eff_len, kh, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shape, cfg.jdtype),
+            "v": jax.ShapeDtypeStruct(shape, cfg.jdtype)}
+
+
+def _cache_heads(cfg: ArchConfig) -> int:
+    """KV-cache head count: the smallest multiple of n_kv_heads that BOTH
+    divides n_heads (so Q-head grouping stays integral) and is divisible by
+    16 (so the cache shards over the model axis) — Megatron-style KV
+    replication. If no such multiple exists (llama3's 24H/8kv, whisper's 6H)
+    the cache keeps n_kv_heads and the sharding layer falls back to a
+    sequence-sharded cache."""
+    kh = cfg.n_kv_heads
+    k = kh
+    while k <= cfg.n_heads:
+        if cfg.n_heads % k == 0 and k % 16 == 0:
+            return k
+        k += kh
+    return kh
+
+
+def gqa_decode(cfg: ArchConfig, p: Dict, x, cache: Dict, pos, *,
+               window: int = 0):
+    """One-token decode with KV cache. x: (B, 1, d). pos: scalar int."""
+    b = x.shape[0]
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        pp = jnp.full((1,), pos)
+        q = apply_rope(q, pp, cfg.rope_theta)
+        k = apply_rope(k, pp, cfg.rope_theta)
+    kh = _cache_heads(cfg)
+    k = _repeat_kv(k, kh // cfg.n_kv_heads)
+    v = _repeat_kv(v, kh // cfg.n_kv_heads)
+    eff_len = cache["k"].shape[1]
+    slot = pos % eff_len if window else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+    # attend to valid positions only
+    kpos = jnp.arange(eff_len)
+    if window:
+        valid = (kpos <= slot) | (pos >= eff_len)   # ring buffer full => all
+    else:
+        valid = kpos <= pos
+    scale = 1.0 / np.sqrt(hd)
+    # Distributed decode attention over a sequence-sharded cache, grouped-
+    # query form (KV heads are never materially repeated — iteration 3 cut
+    # the 3x cache-read amplification). The score layout pin keeps L
+    # sharded: without it the partitioner all-gathers the entire KV cache
+    # per step (56 GiB on llama3 decode_32k, EXPERIMENTS.md hillclimb B).
+    # Softmax reductions over the sharded L and the probs@V contraction
+    # lower as small all-reduces instead.
+    from repro.distributed.context import constrain
+    qg = q.reshape(b, 1, kh, cfg.n_heads // kh, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, new_k).astype(jnp.float32)
+    s = s * scale
+    s = constrain(s, "data", None, None, None, "model")
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    probs = constrain(probs, "data", None, None, None, "model")
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, new_v)
+    out = out.reshape(b, 1, cfg.n_heads * hd) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+# --------------------------------------------------------------- MLA block
+def mla_apply(cfg: ArchConfig, p: Dict, x, positions, *,
+              return_cache: bool = False, cache_len: int = 0):
+    """Multi-head Latent Attention, full-sequence path. x: (B, S, d)."""
+    b, s, _ = x.shape
+    nh, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = rms_norm(x @ p["wq_a"], p["q_a_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = x @ p["wkv_a"]                                  # (B,S,rank+dr)
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_a_norm"])
+    k_rope = kv_a[..., cfg.kv_lora_rank:][:, :, None, :]   # shared across heads
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, nh, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    cache = None
+    if return_cache:
+        entry = jnp.concatenate(
+            [kv_a[..., : cfg.kv_lora_rank], k_rope[:, :, 0, :]], axis=-1)
+        cl = cache_len or s
+        entry = jnp.pad(entry, ((0, 0), (0, cl - s), (0, 0)))
+        cache = {"ckv": entry}
+    k_rope = jnp.broadcast_to(k_rope, (b, s, nh, dr))
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    k_full = jnp.concatenate([k_nope, k_rope], -1)
+    if dv < dn + dr:  # pad V so sdpa shapes match, then slice back
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    else:
+        v_p = v
+    out = sdpa(q_full, k_full, v_p, causal=True, window=cfg.window)
+    out = out[..., :dv].reshape(b, s, nh * dv)
+    out = out @ p["wo"]
+    return (out, cache) if return_cache else out
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, max_len: int, stack: int = 0):
+    """MLA caches the COMPRESSED latent (kv_lora_rank + rope dims) — the
+    memory win that motivates MLA."""
+    st = (stack,) if stack else ()
+    shape = st + (batch, max_len, cfg.kv_lora_rank + cfg.qk_rope_dim)
+    return {"ckv": jax.ShapeDtypeStruct(shape, cfg.jdtype)}
+
+
+def mla_decode(cfg: ArchConfig, p: Dict, x, cache: Dict, pos):
+    """One-token MLA decode from the compressed cache."""
+    b = x.shape[0]
+    nh, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    q = rms_norm(x @ p["wq_a"], p["q_a_norm"]) @ p["wq_b"]
+    q = q.reshape(b, 1, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = x @ p["wkv_a"]                                   # (B,1,rank+dr)
+    c_new = kv_a[..., :rank]
+    kr_new = kv_a[..., rank:]
+    pp = jnp.full((1,), pos)
+    q_rope = apply_rope(q_rope, pp, cfg.rope_theta)
+    kr_new = apply_rope(kr_new[:, :, None, :], pp, cfg.rope_theta)[:, :, 0, :]
+    entry = jnp.concatenate([c_new, kr_new], -1)
+    new_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], entry.astype(cache["ckv"].dtype), pos, 1)
+    c_all = rms_norm(new_cache[..., :rank], p["kv_a_norm"])  # (B,T,rank)
+    kr_all = new_cache[..., rank:]                           # (B,T,dr)
+    kv = (c_all @ p["wkv_b"]).reshape(b, -1, nh, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    t = new_cache.shape[1]
+    valid = jnp.arange(t) <= pos
+    s = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope) +
+         jnp.einsum("bqhd,bkd->bhqk", q_rope, kr_all)).astype(jnp.float32)
+    s = s / np.sqrt(dn + dr)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, -1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, 1, nh * dv)
+    return out @ p["wo"], {"ckv": new_cache}
+
+
+# ------------------------------------------------------- cross attn (enc-dec)
+def cross_apply(cfg: ArchConfig, p: Dict, x, enc_out):
+    """Cross-attention: queries from decoder x, keys/values from enc_out."""
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (enc_out @ p["wk"]).reshape(b, se, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(b, se, cfg.n_kv_heads, hd)
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+    out = sdpa(q, k, v, causal=False, window=0, force_blocked=False)
+    return out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]

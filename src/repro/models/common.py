@@ -1,0 +1,209 @@
+"""Shared model substrate: configs, parameter specs, norms, embeddings, RoPE.
+
+Design: pure-functional JAX. Every parameter is described by a ``ParamSpec``
+(shape, dtype, logical sharding axes); ``abstract_params`` builds the spec
+tree, ``init_params`` materializes it, and the distributed layer resolves
+logical axes -> mesh PartitionSpecs with a divisibility guard. Layers are
+stacked for ``lax.scan`` (leading layer dim on every block parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    pattern: Tuple[str, ...] = ("attn",)   # per-layer block types, cycled
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    # --- attention flavour ---
+    attn_kind: str = "gqa"      # gqa | mla
+    window: int = 0             # sliding-window size; 0 = full attention
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    # --- MLA (minicpm3) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- encoder-decoder / modality stubs ---
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    n_frames: int = 0           # audio stub: precomputed frame embeddings
+    n_patches: int = 0          # vlm stub: precomputed patch embeddings
+    # --- recurrent / ssm ---
+    rglru_width: int = 0
+    conv_width: int = 4
+    mlstm_heads: int = 0
+    proj_factor: float = 2.0    # xlstm block up-projection
+    # --- misc ---
+    act: str = "swiglu"         # swiglu | geglu | gelu
+    norm: str = "rms"           # rms | layer
+    pos_emb: str = "rope"       # rope | learned | none
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    long_variant: str = "swa"   # how long_500k decodes: swa | native | skip
+    max_target_len: int = 524_288
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 so embeddings shard over 16-way axes."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_rem_layers(self) -> int:
+        return self.n_layers - self.n_units * len(self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Abstract parameter: shape + dtype + logical axes for sharding.
+
+    ``axes`` names each dim: None (replicate/batch-like), "model" (shard over
+    tensor-parallel axis), "layer" (scan-stacked, never sharded), "vocab"
+    (sharded over model axis), "expert" (expert-parallel over model axis).
+    """
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = None
+    init: str = "normal"        # normal | zeros | ones
+    scale: float = 1.0
+
+    def sds(self, default_dtype) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype or default_dtype)
+
+
+def spec(shape, axes, init="normal", scale=1.0, dtype=None) -> ParamSpec:
+    assert len(shape) == len(axes), (shape, axes)
+    return ParamSpec(tuple(shape), tuple(axes), dtype, init, scale)
+
+
+def materialize(ps: ParamSpec, key: jax.Array, default_dtype) -> jnp.ndarray:
+    dt = ps.dtype or default_dtype
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dt)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dt)
+    fan_in = ps.shape[-2] if len(ps.shape) >= 2 else ps.shape[-1]
+    std = ps.scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, ps.shape, jnp.float32)).astype(dt)
+
+
+def init_params(tree, key: jax.Array, default_dtype):
+    """Materialize a ParamSpec pytree into arrays (deterministic per-leaf)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [materialize(ps, k, default_dtype) for ps, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_tree(tree, default_dtype):
+    """ParamSpec pytree -> ShapeDtypeStruct pytree (for dry-run lowering)."""
+    return jax.tree_util.tree_map(
+        lambda ps: ps.sds(default_dtype), tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# -------------------------------------------------------------------- norms
+def rms_norm(x, gamma, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * gamma
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg: ArchConfig, p: Dict, x):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_spec(cfg: ArchConfig, stack: int = 0):
+    shape = (cfg.d_model,) if not stack else (stack, cfg.d_model)
+    axes = (None,) if not stack else (None, None)
+    out = {"scale": spec(shape, axes, init="ones", dtype=jnp.float32)}
+    if cfg.norm == "layer":
+        out["bias"] = spec(shape, axes, init="zeros", dtype=jnp.float32)
+    return out
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) rotated by position; positions (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))              # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- activations
+def act_fn(cfg: ArchConfig, gate, up):
+    if cfg.act == "swiglu":
+        return jax.nn.silu(gate) * up
+    if cfg.act == "geglu":
+        return jax.nn.gelu(gate) * up
+    raise ValueError(cfg.act)
+
+
+def mlp_spec(cfg: ArchConfig, d_ff: int = 0):
+    d_ff = d_ff or cfg.d_ff
+    if cfg.act == "gelu":
+        return {"w_in": spec((cfg.d_model, d_ff), (None, "model")),
+                "w_out": spec((d_ff, cfg.d_model), ("model", None))}
+    return {"w_gate": spec((cfg.d_model, d_ff), (None, "model")),
+            "w_up": spec((cfg.d_model, d_ff), (None, "model")),
+            "w_out": spec((d_ff, cfg.d_model), ("model", None))}
+
+
+def mlp_apply(cfg: ArchConfig, p: Dict, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+    return act_fn(cfg, x @ p["w_gate"], x @ p["w_up"]) @ p["w_out"]

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch
+(GShard/Switch-style), shared always-on experts (qwen2-moe), and the router
+load-balance auxiliary loss.
+
+Expert weights are stacked (E, d, d_ff) and logically sharded over the
+"expert" axis -> model mesh axis (expert parallelism). The einsum dispatch
+pattern lowers to the all-to-all-like collectives the paper's consensus
+analysis cares about (heteroskedastic per-expert sample sizes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, act_fn, spec
+
+
+# Pin MoE intermediates to explicit (group->data, expert->model) shardings.
+# Best OFF for the CPU-backend dry-run (XLA reshards via all-gather there);
+# turn ON for real TPU slices where the reshard lowers as all-to-all.
+PIN_EXPERT_SHARDING = False
+
+
+def padded_experts(e: int) -> int:
+    """Experts padded to a multiple of 16 so the expert dim shards over the
+    model axis (true expert parallelism). qwen's 60 -> 64; llama4's 16 -> 16.
+    Padding experts receive -inf router logits and are never selected."""
+    return ((e + 15) // 16) * 16
+
+
+def moe_spec(cfg: ArchConfig, stack: int = 0):
+    d, de = cfg.d_model, cfg.d_expert or cfg.d_ff
+    e = padded_experts(cfg.n_experts)
+    st = (stack,) if stack else ()
+    sa = (None,) if stack else ()
+    p = {
+        "router": spec(st + (d, cfg.n_experts), sa + (None, None), scale=0.1,
+                       dtype=jnp.float32),
+        # expert dim is padded-to-16 so it always shards over the model axis
+        "w_gate": spec(st + (e, d, de), sa + ("expert", None, "model")),
+        "w_up": spec(st + (e, d, de), sa + ("expert", None, "model")),
+        "w_out": spec(st + (e, de, d), sa + ("expert", "model", None)),
+    }
+    if cfg.n_shared_experts:
+        ds = de * cfg.n_shared_experts
+        p["shared_gate"] = spec(st + (d, ds), sa + (None, "model"))
+        p["shared_up"] = spec(st + (d, ds), sa + (None, "model"))
+        p["shared_out"] = spec(st + (ds, d), sa + ("model", None))
+    return p
+
+
+def moe_apply(cfg: ArchConfig, p: Dict, x,
+              n_groups: int = 16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d). Returns (output, aux_load_balance_loss).
+
+    Group-blocked dispatch: tokens are split into ``n_groups`` blocks
+    aligned with the data-parallel shards, each block scatters into its own
+    slice of the (G, E_pad, Cg, d) buffer. With the buffer sharded
+    (G -> data, E_pad -> model) the dispatch scatter and both expert
+    matmuls stay DEVICE-LOCAL; only the k-way combine sum crosses the
+    model axis. This replaced a global scatter the SPMD partitioner
+    lowered as replicate + 5.4 GB all-reduce per layer per microbatch
+    (see EXPERIMENTS.md section Perf, hillclimb A).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_tok
+    ep = padded_experts(e)
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)                                       # (E,)
+    one_hot_top1 = jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(0)
+    aux = e * jnp.sum(me * ce)
+
+    g = n_groups if t % n_groups == 0 and t >= n_groups else 1
+    tg = t // g
+    # Dropless for small token counts (decode / tiny smoke batches): with
+    # capacity = Tg no token can overflow, so routing is exact.
+    if t <= 4096:
+        cap = tg
+    else:
+        cap = int(max(1, cfg.capacity_factor * k * tg / e))
+
+    idx_g = gate_idx.reshape(g, tg, k)
+    gv_g = gate_vals.reshape(g, tg, k)
+    x_g = xt.reshape(g, tg, d)
+
+    # position of each (token, slot) within its expert's per-group buffer
+    flat_idx = idx_g.reshape(g, tg * k)                      # (G, Tg*k)
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)    # (G, Tg*k, E)
+    pos_in_exp = jnp.cumsum(onehot, axis=1) - onehot         # exclusive
+    pos = (pos_in_exp * onehot).sum(-1)                      # (G, Tg*k)
+    keep = pos < cap
+
+    tok_idx = jnp.repeat(jnp.arange(tg), k)                  # (Tg*k,)
+    # dropped (over-capacity) entries get an out-of-bounds slot and are
+    # eliminated by mode='drop' — they can never collide with a real slot
+    slots = jnp.where(keep, flat_idx * cap + pos, ep * cap)  # (G, Tg*k)
+    from repro.distributed.context import constrain
+    xtk = x_g[:, tok_idx, :] * keep[..., None].astype(x.dtype)
+    gidx = jnp.broadcast_to(jnp.arange(g)[:, None], slots.shape)
+    # 1) scatter into FLAT slots (dim unsharded) — stays device-local
+    flat = jnp.zeros((g, ep * cap, d), x.dtype)
+    if PIN_EXPERT_SHARDING:
+        flat = constrain(flat, "data", None, None)
+    flat = flat.at[gidx, slots].add(xtk, mode="drop")
+    # 2) (optional) pin to (G->data, E->model) expert parallelism. On the
+    #    CPU-backend SPMD partitioner the pinned reshard lowers as
+    #    all-gather + all-reduce (43.6 s collective term) while the
+    #    unpinned program lets XLA replicate expert compute and stay
+    #    memory-bound at 14.7 s — see EXPERIMENTS.md hillclimb A for the
+    #    full iteration log. On a real TPU the pin should lower as a true
+    #    all-to-all; flip PIN_EXPERT_SHARDING there.
+    buf = flat.reshape(g, ep, cap, d)
+    if PIN_EXPERT_SHARDING:
+        buf = constrain(buf, "data", "model", None, None)
+
+    # expert FFN, local per (group, expert): (G,E,C,d) x (E,d,f)
+    h = act_fn(cfg, jnp.einsum("gecd,edf->gecf", buf, p["w_gate"]),
+               jnp.einsum("gecd,edf->gecf", buf, p["w_up"]))
+    if PIN_EXPERT_SHARDING:
+        h = constrain(h, "data", "model", None, None)
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"])      # (G,E,C,d)
+    if PIN_EXPERT_SHARDING:
+        out_e = constrain(out_e, "data", "model", None, None)
+
+    # 3) combine as a slot-major SCATTER from the expert-sharded buffer:
+    #    each expert shard scatter-adds its own slots' (gate-weighted)
+    #    outputs into the token buffer; the partitioner lowers this as
+    #    local scatter + all-reduce of the small (Tg, d) result instead of
+    #    all-gathering the whole buffer (EXPERIMENTS.md hillclimb A, it. 5).
+    slot_tok = jnp.zeros((g, ep * cap), jnp.int32).at[gidx, slots].max(
+        jnp.broadcast_to(tok_idx[None, :], slots.shape) + 1, mode="drop")
+    w = (gv_g.reshape(g, tg * k) * keep).astype(x.dtype)
+    slot_gate = jnp.zeros((g, ep * cap), x.dtype).at[gidx, slots].max(
+        w, mode="drop")
+    out_flat = out_e.reshape(g, ep * cap, d) * slot_gate[..., None]
+    sg = jnp.broadcast_to(jnp.arange(g)[:, None], slot_tok.shape)
+    out = jnp.zeros((g, tg + 1, d), x.dtype).at[sg, slot_tok].add(out_flat)
+    if PIN_EXPERT_SHARDING:
+        out = constrain(out, "data", None, None)
+    out = out[:, 1:, :].reshape(t, d)                        # drop sentinel 0
+
+    if cfg.n_shared_experts:
+        out = out + act_fn(cfg, xt @ p["shared_gate"],
+                           xt @ p["shared_up"]) @ p["shared_out"]
+    return out.reshape(b, s, d), aux

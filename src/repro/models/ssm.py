@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a y_t)          recurrence gate
+    i_t = sigmoid(W_i y_t)          input gate
+    a_t = exp(c * r_t * log_a)      per-channel decay, log_a = -softplus(L)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+Full-sequence path uses ``jax.lax.associative_scan`` (parallel prefix — the
+TPU-native adaptation of the paper-agnostic recurrence); decode is a single
+fused step. A causal depthwise conv (width 4) precedes the RG-LRU as in
+Griffin's recurrent block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, spec
+
+RGLRU_C = 8.0
+
+
+def rglru_spec(cfg: ArchConfig, stack: int = 0):
+    d, dr = cfg.d_model, cfg.rglru_width or cfg.d_model
+    st = (stack,) if stack else ()
+    sa = (None,) if stack else ()
+    return {
+        "w_x": spec(st + (d, dr), sa + (None, "model")),
+        "w_gate": spec(st + (d, dr), sa + (None, "model")),
+        "conv_k": spec(st + (cfg.conv_width, dr), sa + (None, "model"),
+                       scale=0.5),
+        "w_a": spec(st + (dr, dr), sa + ("model", None), scale=0.5),
+        "w_i": spec(st + (dr, dr), sa + ("model", None), scale=0.5),
+        "lamb": spec(st + (dr,), sa + (None,), init="ones",
+                     dtype=jnp.float32),
+        "w_out": spec(st + (dr, d), sa + ("model", None)),
+    }
+
+
+def _causal_depthwise_conv(y, kernel):
+    """y: (B, S, C); kernel: (W, C). Causal depthwise conv."""
+    w = kernel.shape[0]
+    ypad = jnp.pad(y, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(y)
+    for t in range(w):
+        out = out + ypad[:, t: t + y.shape[1], :] * kernel[t]
+    return out
+
+
+def _rglru_gates(p: Dict, y):
+    r = jax.nn.sigmoid(y @ p["w_a"])
+    i = jax.nn.sigmoid(y @ p["w_i"])
+    log_a = -jax.nn.softplus(p["lamb"]) * RGLRU_C * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * y).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, gated
+
+
+def rglru_apply(cfg: ArchConfig, p: Dict, x, positions=None, *,
+                return_cache: bool = False):
+    """Full-sequence RG-LRU block. x: (B, S, d_model)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    y_raw = x @ p["w_x"]
+    y = _causal_depthwise_conv(y_raw, p["conv_k"])
+    a, b = _rglru_gates(p, y)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    if return_cache:
+        w = cfg.conv_width
+        hist = y_raw[:, -(w - 1):, :]
+        pad = (w - 1) - hist.shape[1]
+        if pad > 0:
+            hist = jnp.pad(hist, ((0, 0), (pad, 0), (0, 0)))
+        cache = {"h": h[:, -1, :], "conv": hist.astype(cfg.jdtype)}
+        return out, cache
+    return out
+
+
+def rglru_cache_spec(cfg: ArchConfig, batch: int, stack: int = 0):
+    dr = cfg.rglru_width or cfg.d_model
+    st = (stack,) if stack else ()
+    return {
+        "h": jax.ShapeDtypeStruct(st + (batch, dr), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(st + (batch, cfg.conv_width - 1, dr),
+                                     cfg.jdtype),
+    }
+
+
+def rglru_decode(cfg: ArchConfig, p: Dict, x, cache: Dict, pos):
+    """One-step RG-LRU. x: (B, 1, d)."""
+    gate = jax.nn.gelu(x @ p["w_gate"])                     # (B,1,dr)
+    y = (x @ p["w_x"])[:, 0, :]                             # (B, dr)
+    hist = jnp.concatenate([cache["conv"],
+                            y[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_k"].shape[0]
+    yc = jnp.einsum("bwc,wc->bc", hist[:, -w:, :].astype(y.dtype), p["conv_k"])
+    a, b = _rglru_gates(p, yc[:, None, :])
+    h_new = a[:, 0] * cache["h"] + b[:, 0]
+    out = (h_new[:, None, :].astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h_new, "conv": hist[:, 1:, :]}

@@ -1,0 +1,394 @@
+"""Model composition: block registry, unit-scanned decoder stacks,
+encoder-decoder (whisper) and early-fusion multimodal variants, plus the
+single-token decode path with structured caches.
+
+Layers are grouped into repeating "units" (the arch's ``pattern``); the stack
+is a ``lax.scan`` over units so HLO size is independent of depth (critical
+for 80 dry-run compiles). Heterogeneous patterns (Griffin's rec/rec/attn,
+xLSTM's 7 mLSTM : 1 sLSTM) scan naturally: each pattern slot has its own
+stacked params. Remainder layers (depth % pattern) run unscanned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+from .common import (ArchConfig, abstract_tree, apply_norm, init_params,
+                     mlp_apply, mlp_spec, norm_spec, spec)
+
+
+# ----------------------------------------------------------- block registry
+def _block_spec(cfg: ArchConfig, kind: str, stack: int):
+    if kind == "attn":
+        p = {"norm1": norm_spec(cfg, stack), "norm2": norm_spec(cfg, stack),
+             "mlp": mlp_spec(cfg)}
+        if cfg.attn_kind == "mla":
+            p["attn"] = A.mla_spec(cfg, stack)
+        else:
+            p["attn"] = A.gqa_spec(cfg, stack)
+        if stack:
+            p["mlp"] = {k: spec((stack,) + v.shape, (None,) + v.axes,
+                                v.init, v.scale, v.dtype)
+                        for k, v in p["mlp"].items()}
+        return p
+    if kind == "attn_moe":
+        p = {"norm1": norm_spec(cfg, stack), "norm2": norm_spec(cfg, stack),
+             "attn": A.gqa_spec(cfg, stack), "moe": M.moe_spec(cfg, stack)}
+        return p
+    if kind == "rec":
+        p = {"norm1": norm_spec(cfg, stack), "norm2": norm_spec(cfg, stack),
+             "rec": S.rglru_spec(cfg, stack), "mlp": mlp_spec(cfg)}
+        if stack:
+            p["mlp"] = {k: spec((stack,) + v.shape, (None,) + v.axes,
+                                v.init, v.scale, v.dtype)
+                        for k, v in p["mlp"].items()}
+        return p
+    if kind == "m":
+        return {"norm1": norm_spec(cfg, stack), "mix": X.mlstm_spec(cfg, stack)}
+    if kind == "s":
+        return {"norm1": norm_spec(cfg, stack), "mix": X.slstm_spec(cfg, stack)}
+    if kind == "xattn":
+        return {"norm1": norm_spec(cfg, stack), "norm2": norm_spec(cfg, stack),
+                "norm3": norm_spec(cfg, stack), "attn": A.gqa_spec(cfg, stack),
+                "cross": A.cross_spec(cfg, stack), "mlp": _stack_mlp(cfg, stack)}
+    if kind == "enc":
+        return {"norm1": norm_spec(cfg, stack), "norm2": norm_spec(cfg, stack),
+                "attn": A.gqa_spec(cfg, stack), "mlp": _stack_mlp(cfg, stack)}
+    raise ValueError(kind)
+
+
+def _stack_mlp(cfg: ArchConfig, stack: int):
+    base = mlp_spec(cfg)
+    if not stack:
+        return base
+    return {k: spec((stack,) + v.shape, (None,) + v.axes, v.init, v.scale,
+                    v.dtype) for k, v in base.items()}
+
+
+def _block_apply(cfg: ArchConfig, kind: str, p: Dict, x, positions,
+                 enc_out=None, *, return_cache: bool = False,
+                 cache_len: int = 0,
+                 window_override: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Full-sequence block application. Returns (x, aux_loss, cache|None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    window = cfg.window if window_override is None else window_override
+    if kind in ("attn", "attn_moe"):
+        h = apply_norm(cfg, p["norm1"], x)
+        if cfg.attn_kind == "mla":
+            out = A.mla_apply(cfg, p["attn"], h, positions,
+                              return_cache=return_cache, cache_len=cache_len)
+        else:
+            out = A.gqa_apply(cfg, p["attn"], h, positions, window=window,
+                              return_cache=return_cache, cache_len=cache_len)
+        if return_cache:
+            out, cache = out
+        x = x + out
+        h = apply_norm(cfg, p["norm2"], x)
+        if kind == "attn_moe":
+            out, aux = M.moe_apply(cfg, p["moe"], h)
+            x = x + out
+        else:
+            x = x + mlp_apply(cfg, p["mlp"], h)
+    elif kind == "rec":
+        out = S.rglru_apply(cfg, p["rec"], apply_norm(cfg, p["norm1"], x),
+                            return_cache=return_cache)
+        if return_cache:
+            out, cache = out
+        x = x + out
+        x = x + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+    elif kind == "m":
+        out = X.mlstm_apply(cfg, p["mix"], apply_norm(cfg, p["norm1"], x),
+                            return_cache=return_cache)
+        if return_cache:
+            out, cache = out
+        x = x + out
+    elif kind == "s":
+        out = X.slstm_apply(cfg, p["mix"], apply_norm(cfg, p["norm1"], x),
+                            return_cache=return_cache)
+        if return_cache:
+            out, cache = out
+        x = x + out
+    elif kind == "xattn":
+        out = A.gqa_apply(cfg, p["attn"], apply_norm(cfg, p["norm1"], x),
+                          positions, window=window,
+                          return_cache=return_cache, cache_len=cache_len)
+        if return_cache:
+            out, cache = out
+        x = x + out
+        x = x + A.cross_apply(cfg, p["cross"],
+                              apply_norm(cfg, p["norm2"], x), enc_out)
+        x = x + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["norm3"], x))
+    elif kind == "enc":
+        h = apply_norm(cfg, p["norm1"], x)
+        b, s, _ = h.shape
+        hd = cfg.hd
+        q = (h @ p["attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+        k = (h @ p["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (h @ p["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+        k = A._repeat_kv(k, cfg.n_heads // cfg.n_kv_heads)
+        v = A._repeat_kv(v, cfg.n_heads // cfg.n_kv_heads)
+        o = A.sdpa(q, k, v, causal=False, window=0, force_blocked=False)
+        x = x + o.reshape(b, s, cfg.n_heads * hd) @ p["attn"]["wo"]
+        x = x + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                 stack: int, window_override: Optional[int] = None):
+    window = cfg.window if window_override is None else window_override
+    if kind in ("attn", "attn_moe", "xattn", "enc"):
+        if cfg.attn_kind == "mla":
+            return A.mla_cache_spec(cfg, batch, max_len, stack)
+        return A.gqa_cache_spec(cfg, batch, max_len, stack, window=window)
+    if kind == "rec":
+        return S.rglru_cache_spec(cfg, batch, stack)
+    if kind == "m":
+        return X.mlstm_cache_spec(cfg, batch, stack)
+    if kind == "s":
+        return X.slstm_cache_spec(cfg, batch, stack)
+    raise ValueError(kind)
+
+
+def _block_decode(cfg: ArchConfig, kind: str, p: Dict, x, cache, pos,
+                  enc_out=None, window_override: Optional[int] = None):
+    window = cfg.window if window_override is None else window_override
+    if kind in ("attn", "attn_moe"):
+        h = apply_norm(cfg, p["norm1"], x)
+        if cfg.attn_kind == "mla":
+            out, cache = A.mla_decode(cfg, p["attn"], h, cache, pos)
+        else:
+            out, cache = A.gqa_decode(cfg, p["attn"], h, cache, pos,
+                                      window=window)
+        x = x + out
+        h = apply_norm(cfg, p["norm2"], x)
+        if kind == "attn_moe":
+            out, _ = M.moe_apply(cfg, p["moe"], h)
+            x = x + out
+        else:
+            x = x + mlp_apply(cfg, p["mlp"], h)
+    elif kind == "rec":
+        out, cache = S.rglru_decode(cfg, p["rec"],
+                                    apply_norm(cfg, p["norm1"], x), cache, pos)
+        x = x + out
+        x = x + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x))
+    elif kind == "m":
+        out, cache = X.mlstm_decode(cfg, p["mix"],
+                                    apply_norm(cfg, p["norm1"], x), cache, pos)
+        x = x + out
+    elif kind == "s":
+        out, cache = X.slstm_decode(cfg, p["mix"],
+                                    apply_norm(cfg, p["norm1"], x), cache, pos)
+        x = x + out
+    elif kind == "xattn":
+        h = apply_norm(cfg, p["norm1"], x)
+        out, cache = A.gqa_decode(cfg, p["attn"], h, cache, pos,
+                                  window=window)
+        x = x + out
+        x = x + A.cross_apply(cfg, p["cross"],
+                              apply_norm(cfg, p["norm2"], x), enc_out)
+        x = x + mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["norm3"], x))
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+# ------------------------------------------------------------- model params
+def abstract_params(cfg: ArchConfig):
+    """Full model ParamSpec tree."""
+    d, vp = cfg.d_model, cfg.padded_vocab
+    tree: Dict[str, Any] = {
+        "embed": spec((vp, d), ("vocab", None), scale=1.0),
+        "final_norm": norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = spec((d, vp), (None, "vocab"))
+    if cfg.pos_emb == "learned":
+        tree["pos_table"] = spec((4096, d), (None, None))
+    units = {}
+    for slot, kind in enumerate(cfg.pattern):
+        units[f"b{slot}"] = _block_spec(cfg, kind, stack=cfg.n_units)
+    tree["units"] = units
+    rem = {}
+    for r in range(cfg.n_rem_layers):
+        kind = cfg.pattern[r % len(cfg.pattern)]
+        rem[f"r{r}"] = _block_spec(cfg, kind, stack=0)
+    if rem:
+        tree["rem"] = rem
+    if cfg.enc_dec:
+        tree["encoder"] = {
+            "pos_table": spec((cfg.n_frames, d), (None, None)),
+            "layers": _block_spec(cfg, "enc", stack=cfg.n_enc_layers),
+            "final_norm": norm_spec(cfg),
+        }
+    return tree
+
+
+def model_abstract(cfg: ArchConfig):
+    return abstract_tree(abstract_params(cfg), cfg.jdtype)
+
+
+def model_init(cfg: ArchConfig, key: jax.Array):
+    return init_params(abstract_params(cfg), key, cfg.jdtype)
+
+
+# ------------------------------------------------------------------ encoder
+def encode(cfg: ArchConfig, params: Dict, frames):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend per the brief). frames: (B, n_frames, d_model)."""
+    enc = params["encoder"]
+    x = frames + enc["pos_table"][None, : frames.shape[1], :].astype(frames.dtype)
+
+    def body(x, layer_p):
+        x, _, _ = _block_apply(cfg, "enc", layer_p, x, None)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+# ------------------------------------------------------------------ forward
+def forward(cfg: ArchConfig, params: Dict, tokens, *,
+            enc_frames=None, patch_embeds=None, remat: bool = True,
+            return_cache: bool = False, cache_len: int = 0,
+            window_override: Optional[int] = None):
+    """Full-sequence forward -> (logits, aux_loss[, cache]).
+
+    tokens: (B, S) int32. For VLM early fusion, ``patch_embeds``
+    (B, n_patches, d) replaces the first n_patches embedding slots.
+    For enc-dec, ``enc_frames`` (B, n_frames, d) feeds the encoder.
+    With ``return_cache`` the per-layer decode caches (KV / recurrent
+    state) are also returned — this is the true prefill path.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens]                              # (B, S, d)
+    if patch_embeds is not None and cfg.n_patches:
+        npch = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, npch:, :]],
+                            axis=1)
+    if cfg.pos_emb == "learned":
+        tbl = params["pos_table"]
+        pos_idx = jnp.arange(s) % tbl.shape[0]
+        x = x + tbl[pos_idx][None].astype(x.dtype)
+    positions = jnp.arange(s)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, enc_frames)
+
+    def unit_body(carry, unit_p):
+        x, aux = carry
+        caches = {}
+        for slot, kind in enumerate(cfg.pattern):
+            x, a, c = _block_apply(cfg, kind, unit_p[f"b{slot}"], x,
+                                   positions, enc_out,
+                                   return_cache=return_cache,
+                                   cache_len=cache_len,
+                                   window_override=window_override)
+            aux = aux + a
+            if return_cache:
+                caches[f"b{slot}"] = c
+        return (x, aux), (caches if return_cache else None)
+
+    body = jax.checkpoint(unit_body) if (remat and not return_cache) \
+        else unit_body
+    (x, aux), unit_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["units"])
+    cache = {"units": unit_caches} if return_cache else None
+    if cfg.n_rem_layers:
+        if return_cache:
+            cache["rem"] = {}
+        for r in range(cfg.n_rem_layers):
+            kind = cfg.pattern[r % len(cfg.pattern)]
+            x, a, c = _block_apply(cfg, kind, params["rem"][f"r{r}"], x,
+                                   positions, enc_out,
+                                   return_cache=return_cache,
+                                   cache_len=cache_len,
+                                   window_override=window_override)
+            aux = aux + a
+            if return_cache:
+                cache["rem"][f"r{r}"] = c
+    x = apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    if return_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+# -------------------------------------------------------------------- cache
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               window_override: Optional[int] = None):
+    """ShapeDtypeStruct cache tree (materialize with jnp.zeros for real)."""
+    tree: Dict[str, Any] = {"units": {}}
+    for slot, kind in enumerate(cfg.pattern):
+        tree["units"][f"b{slot}"] = _block_cache(
+            cfg, kind, batch, max_len, cfg.n_units, window_override)
+    rem = {}
+    for r in range(cfg.n_rem_layers):
+        kind = cfg.pattern[r % len(cfg.pattern)]
+        rem[f"r{r}"] = _block_cache(cfg, kind, batch, max_len, 0,
+                                    window_override)
+    if rem:
+        tree["rem"] = rem
+    return tree
+
+
+def materialize_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      window_override: Optional[int] = None):
+    return jax.tree_util.tree_map(lambda sds: jnp.zeros(sds.shape, sds.dtype),
+                                  init_cache(cfg, batch, max_len,
+                                             window_override))
+
+
+# --------------------------------------------------------------- decode step
+def decode_step(cfg: ArchConfig, params: Dict, cache, tokens, pos, *,
+                enc_out=None, window_override: Optional[int] = None):
+    """One-token decode. tokens: (B, 1) int32, pos: scalar position.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = params["embed"][tokens]
+    if cfg.pos_emb == "learned":
+        tbl = params["pos_table"]
+        x = x + tbl[pos % tbl.shape[0]][None, None].astype(x.dtype)
+
+    def unit_body(carry, scanned):
+        x = carry
+        unit_p, unit_c = scanned
+        new_c = {}
+        for slot, kind in enumerate(cfg.pattern):
+            x, c = _block_decode(cfg, kind, unit_p[f"b{slot}"], x,
+                                 unit_c[f"b{slot}"], pos, enc_out,
+                                 window_override)
+            new_c[f"b{slot}"] = c
+        return x, new_c
+
+    x, new_unit_caches = jax.lax.scan(unit_body, x,
+                                      (params["units"], cache["units"]))
+    new_cache = {"units": new_unit_caches}
+    if cfg.n_rem_layers:
+        new_cache["rem"] = {}
+        for r in range(cfg.n_rem_layers):
+            kind = cfg.pattern[r % len(cfg.pattern)]
+            x, c = _block_decode(cfg, kind, params["rem"][f"r{r}"], x,
+                                 cache["rem"][f"r{r}"], pos, enc_out,
+                                 window_override)
+            new_cache["rem"][f"r{r}"] = c
+    x = apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    return logits, new_cache

@@ -1,0 +1,268 @@
+"""xLSTM blocks (arXiv:2405.04517): chunkwise-parallel mLSTM (matrix memory,
+exponential gating) and sequential sLSTM (scalar memory, recurrent h).
+
+The mLSTM chunkwise formulation carries (C, n, m) across chunks of length
+``MLSTM_CHUNK`` — intra-chunk work is parallel (MXU-friendly), inter-chunk
+is a short scan. This is the TPU-native adaptation: quadratic-but-tiled
+within chunks, linear across them, so train_4k fits memory and long_500k
+decode is O(1) per token from the (C, n, m) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ArchConfig, rms_norm, spec
+
+MLSTM_CHUNK = 256
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_spec(cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    du = int(cfg.proj_factor * d)
+    nh = cfg.mlstm_heads or cfg.n_heads
+    st = (stack,) if stack else ()
+    sa = (None,) if stack else ()
+    return {
+        "w_up": spec(st + (d, 2 * du), sa + (None, "model")),
+        "conv_k": spec(st + (cfg.conv_width, du), sa + (None, "model"),
+                       scale=0.5),
+        "w_q": spec(st + (du, du), sa + (None, "model")),
+        "w_k": spec(st + (du, du), sa + (None, "model")),
+        "w_v": spec(st + (du, du), sa + (None, "model")),
+        "w_if": spec(st + (du, 2 * nh), sa + (None, None), scale=0.3,
+                     dtype=jnp.float32),
+        "skip": spec(st + (du,), sa + (None,), init="ones",
+                     dtype=jnp.float32),
+        "out_norm": spec(st + (du,), sa + (None,), init="ones",
+                         dtype=jnp.float32),
+        "w_down": spec(st + (du, d), sa + ("model", None)),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: (B, H, S, D); li, lf: (B, H, S) log input/forget gates.
+    Returns h: (B, H, S, D).
+    """
+    b, h, s, d = q.shape
+    L = min(MLSTM_CHUNK, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    scale = 1.0 / np.sqrt(d)
+
+    qc = q.reshape(b, h, nc, L, d) * scale
+    kc = k.reshape(b, h, nc, L, d)
+    vc = v.reshape(b, h, nc, L, d)
+    lic = li.reshape(b, h, nc, L)
+    lfc = lf.reshape(b, h, nc, L)
+    bc = jnp.cumsum(lfc, axis=-1)                       # inclusive decay sums
+
+    def step(carry, inp):
+        C, n, m = carry         # (B,H,D,D), (B,H,D), (B,H)
+        qi, ki, vi, lii, bi = inp
+        # bi: inclusive cumsum of lf within chunk; decay from chunk start
+        # to position j (inclusive of f_j).
+        m_inter = bi + m[..., None]                      # (B,H,L)
+        # intra-chunk log weights D_jk = b_j - b_k + li_k (k <= j)
+        Djk = bi[..., :, None] - bi[..., None, :] + lii[..., None, :]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        Djk = jnp.where(mask, Djk, -jnp.inf)
+        m_intra = jnp.max(Djk, axis=-1)                  # (B,H,L)
+        m_j = jnp.maximum(m_inter, m_intra)              # (B,H,L)
+        # intra scores
+        Sjk = jnp.einsum("bhjd,bhkd->bhjk", qi, ki) * jnp.exp(
+            Djk - m_j[..., None])
+        num = jnp.einsum("bhjk,bhkd->bhjd", Sjk, vi)
+        den = jnp.sum(Sjk, axis=-1)                      # k-normalizer part 1
+        # inter contribution
+        w_int = jnp.exp(m_inter - m_j)                   # (B,H,L)
+        num = num + w_int[..., None] * jnp.einsum("bhjd,bhde->bhje", qi, C)
+        den = den + w_int * jnp.einsum("bhjd,bhd->bhj", qi, n)
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]
+        # state update to end of chunk
+        btot = bi[..., -1]                               # (B,H)
+        m_new = jnp.maximum(btot + m, jnp.max(
+            btot[..., None] - bi + lii, axis=-1))
+        wk = jnp.exp(btot[..., None] - bi + lii - m_new[..., None])  # (B,H,L)
+        C_new = jnp.exp(btot + m - m_new)[..., None, None] * C + \
+            jnp.einsum("bhk,bhkd,bhke->bhde", wk, ki, vi)
+        n_new = jnp.exp(btot + m - m_new)[..., None] * n + \
+            jnp.einsum("bhk,bhkd->bhd", wk, ki)
+        return (C_new, n_new, m_new), hout
+
+    C0 = jnp.zeros((b, h, d, d), jnp.float32)
+    n0 = jnp.zeros((b, h, d), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    inputs = (qc.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+              kc.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+              vc.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+              lic.transpose(2, 0, 1, 3),
+              bc.transpose(2, 0, 1, 3))
+    carry, hs = jax.lax.scan(step, (C0, n0, m0), inputs)
+    return hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, d), carry
+
+
+def mlstm_apply(cfg: ArchConfig, p: Dict, x, positions=None, *,
+                return_cache: bool = False):
+    """Full-sequence mLSTM block. x: (B, S, d_model)."""
+    from .ssm import _causal_depthwise_conv
+    b, s, d = x.shape
+    du = int(cfg.proj_factor * d)
+    nh = cfg.mlstm_heads or cfg.n_heads
+    hd = du // nh
+    up = x @ p["w_up"]
+    xm, z = up[..., :du], up[..., du:]
+    xc = jax.nn.silu(_causal_depthwise_conv(xm, p["conv_k"]))
+    q = (xc @ p["w_q"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = (xc @ p["w_k"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    v = (xm @ p["w_v"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    gif = xc.astype(jnp.float32) @ p["w_if"]                 # (B,S,2*nh)
+    li = gif[..., :nh].transpose(0, 2, 1)                    # log input gate
+    lf = jax.nn.log_sigmoid(gif[..., nh:]).transpose(0, 2, 1)
+    h, (C, n, m) = _mlstm_chunk_scan(q, k, v, li, lf)        # (B,H,S,hd)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, du).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"]) + xc * p["skip"].astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = h @ p["w_down"]
+    if return_cache:
+        w = cfg.conv_width
+        hist = xm[:, -(w - 1):, :]
+        pad = (w - 1) - hist.shape[1]
+        if pad > 0:
+            hist = jnp.pad(hist, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"C": C, "n": n, "m": m,
+                     "conv": hist.astype(cfg.jdtype)}
+    return out
+
+
+def mlstm_cache_spec(cfg: ArchConfig, batch: int, stack: int = 0):
+    du = int(cfg.proj_factor * cfg.d_model)
+    nh = cfg.mlstm_heads or cfg.n_heads
+    hd = du // nh
+    st = (stack,) if stack else ()
+    return {
+        "C": jax.ShapeDtypeStruct(st + (batch, nh, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct(st + (batch, nh, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct(st + (batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(st + (batch, cfg.conv_width - 1, du),
+                                     cfg.jdtype),
+    }
+
+
+def mlstm_decode(cfg: ArchConfig, p: Dict, x, cache: Dict, pos):
+    """One-step mLSTM from (C, n, m) state. x: (B, 1, d)."""
+    b = x.shape[0]
+    du = int(cfg.proj_factor * cfg.d_model)
+    nh = cfg.mlstm_heads or cfg.n_heads
+    hd = du // nh
+    up = x @ p["w_up"]
+    xm, z = up[..., :du], up[..., du:]
+    hist = jnp.concatenate([cache["conv"],
+                            xm.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_k"].shape[0]
+    xc = jnp.einsum("bwc,wc->bc", hist[:, -w:, :].astype(x.dtype),
+                    p["conv_k"])
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["w_q"]).reshape(b, nh, hd).astype(jnp.float32)
+    k = (xc @ p["w_k"]).reshape(b, nh, hd).astype(jnp.float32)
+    v = (xm[:, 0] @ p["w_v"]).reshape(b, nh, hd).astype(jnp.float32)
+    gif = xc.astype(jnp.float32) @ p["w_if"]
+    li, lf_raw = gif[..., :nh], gif[..., nh:]
+    lf = jax.nn.log_sigmoid(lf_raw)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    C_new = fp[..., None, None] * C + ip[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = fp[..., None] * n + ip[..., None] * k
+    scale = 1.0 / np.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q * scale, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(b, du).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"]) + xc * p["skip"].astype(x.dtype)
+    h = (h * jax.nn.silu(z[:, 0]))[:, None, :]
+    return h @ p["w_down"], {"C": C_new, "n": n_new, "m": m_new,
+                             "conv": hist[:, 1:, :]}
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_spec(cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    st = (stack,) if stack else ()
+    sa = (None,) if stack else ()
+    dff = int(d * 4 / 3)
+    return {
+        "w_gates": spec(st + (d, 4 * d), sa + (None, "model")),
+        "r_gates": spec(st + (d, 4 * d), sa + (None, "model"), scale=0.5),
+        "out_norm": spec(st + (d,), sa + (None,), init="ones",
+                         dtype=jnp.float32),
+        "ff_gate": spec(st + (d, dff), sa + (None, "model")),
+        "ff_up": spec(st + (d, dff), sa + (None, "model")),
+        "ff_out": spec(st + (dff, d), sa + ("model", None)),
+    }
+
+
+def _slstm_cell(p, zx_t, state):
+    """zx_t: (B, 4d) PRE-PROJECTED input gates (x_t @ w_gates — hoisted out
+    of the sequential scan since it is time-parallel; EXPERIMENTS.md
+    hillclimb D). state: (c, n, m, h)."""
+    c, n, m, h = state
+    z4 = zx_t + h.astype(zx_t.dtype) @ p["r_gates"]
+    zi, zf, zz, zo = jnp.split(z4.astype(jnp.float32), 4, axis=-1)
+    li = zi
+    lf = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(lf + m, li)
+    ip = jnp.exp(li - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(zz)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(cfg: ArchConfig, p: Dict, x, positions=None, *,
+                return_cache: bool = False):
+    """Sequential sLSTM block + GeGLU FFN. x: (B, S, d)."""
+    b, s, d = x.shape
+    z0 = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    zx = x @ p["w_gates"]                    # (B, S, 4d), one big matmul
+
+    def step(state, zx_t):
+        new = _slstm_cell(p, zx_t, state)
+        return new, new[3]
+
+    carry, hs = jax.lax.scan(step, (z0, z0, m0, z0), zx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"])
+    ff = (jax.nn.gelu(h @ p["ff_gate"]) * (h @ p["ff_up"])) @ p["ff_out"]
+    out = h + ff
+    if return_cache:
+        return out, {"c": carry[0], "n": carry[1], "m": carry[2],
+                     "h": carry[3]}
+    return out
+
+
+def slstm_cache_spec(cfg: ArchConfig, batch: int, stack: int = 0):
+    d = cfg.d_model
+    st = (stack,) if stack else ()
+    sds = lambda: jax.ShapeDtypeStruct(st + (batch, d), jnp.float32)
+    return {"c": sds(), "n": sds(), "m": sds(), "h": sds()}
+
+
+def slstm_decode(cfg: ArchConfig, p: Dict, x, cache: Dict, pos):
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    new = _slstm_cell(p, x[:, 0, :] @ p["w_gates"], state)
+    h = new[3][:, None, :].astype(x.dtype)
+    h = rms_norm(h, p["out_norm"])
+    ff = (jax.nn.gelu(h @ p["ff_gate"]) * (h @ p["ff_up"])) @ p["ff_out"]
+    out = h + ff
+    return out, {"c": new[0], "n": new[1], "m": new[2], "h": new[3]}

@@ -1,0 +1,88 @@
+"""AdamW built from scratch (no optax dependency), pytree-native.
+
+The second-moment EMA ``v`` doubles as the per-parameter empirical Fisher
+diagonal — exactly the 1/Vhat weight the paper's Prop 4.4/4.7 uses for
+diagonal/max consensus. ``fisher_diag(state)`` exposes it; the consensus
+trainer reads it with zero extra communication (the paper's key point about
+max-consensus weights being locally computable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(zeros, params),
+                      v=jax.tree_util.tree_map(zeros, params))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m_new, v_new
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def fisher_diag(state: AdamWState):
+    """Per-parameter empirical Fisher proxy (bias-corrected grad^2 EMA).
+
+    This is the paper's 1/Vhat^i_aa diagonal weight at pod granularity —
+    available with NO extra communication (Prop 4.4's practical advantage).
+    """
+    b2c = 1 - 0.95 ** jnp.maximum(state.step.astype(jnp.float32), 1.0)
+    return jax.tree_util.tree_map(lambda v: v / b2c, state.v)

@@ -1,0 +1,31 @@
+"""Cross-entropy LM loss with label masking and z-loss regularization.
+
+Computed in float32 regardless of activation dtype; padded-vocab logits are
+safe because labels never index the padding region.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 1e-4):
+    """logits: (B, S, V); labels: (B, S) int32, -1 = masked.
+
+    Returns (mean_loss, metrics dict).
+    """
+    lf = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe_labels = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    zl = z_loss * jnp.square(lse) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll + zl).sum() / denom
+    metrics = {
+        "nll": nll.sum() / denom,
+        "z_loss": zl.sum() / denom,
+        "n_tokens": mask.sum(),
+    }
+    return loss, metrics

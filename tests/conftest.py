@@ -1,0 +1,9 @@
+import os
+
+# Keep tests on the single real CPU device (the dry-run sets its own flags in
+# a separate process). Cap intra-op threads for stable CI timing.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,150 @@
+"""Validation of the paper's asymptotic theory (Sec. 4) against exact
+computation and simulation: info-unbiasedness, Thm 4.1/4.3, Prop 4.4/4.6,
+Claim 4.9 orderings and the Claim 4.10 phase boundary."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+
+
+def two_node_model(theta_e, s1, s2):
+    g = C.Graph(2, ((0, 1),))
+    th = np.array([s1, s2, theta_e], dtype=np.float32)
+    return C.IsingModel(g, jax.numpy.asarray(th))
+
+
+def test_info_unbiasedness_exact():
+    """Conditional likelihoods are information-unbiased: V = H^{-1} at theta*."""
+    g = C.star_graph(6)
+    m = C.random_model(g, 0.6, 0.4, jax.random.PRNGKey(0))
+    for i in range(g.p):
+        loc = C.exact_local(m, i)
+        np.testing.assert_allclose(loc.V, np.linalg.inv(loc.H),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_max_consensus_variance_is_min_owner_variance():
+    """Thm 4.3/Prop 4.4: max-consensus var per param = min_i V^i_aa."""
+    g = C.star_graph(5)
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(1))
+    locs = C.exact_locals(m, include_singleton=False)
+    _, per = C.exact_consensus_variance(m, locs, "max",
+                                        include_singleton=False)
+    owners = C.param_owners(g, include_singleton=False)
+    for a, own in owners.items():
+        vmin = min(locs[i].V[pos, pos] for (i, pos) in own)
+        np.testing.assert_allclose(per[a], vmin, rtol=1e-4)
+
+
+def test_optimal_weights_are_optimal():
+    """Prop 4.6: V_a^{-1} e beats random weight vectors (exact variance)."""
+    g = C.star_graph(5)
+    m = C.random_model(g, 0.7, 0.3, jax.random.PRNGKey(2))
+    locs = C.exact_locals(m, include_singleton=False)
+    _, per_opt = C.exact_consensus_variance(m, locs, "optimal",
+                                            include_singleton=False)
+    owners = C.param_owners(g, include_singleton=False)
+    rng = np.random.RandomState(0)
+    for a, own in owners.items():
+        Va = C.cross_cov(locs, a, own)
+        for _ in range(25):
+            w = rng.rand(len(own)) + 1e-3
+            w = w / w.sum()
+            assert per_opt[a] <= w @ Va @ w + 1e-10
+
+
+@given(st.floats(-1.2, 1.2), st.floats(-1.5, 1.5), st.floats(-1.5, 1.5))
+@settings(max_examples=25, deadline=None)
+def test_claim_4_9_ordering(theta_e, s1, s2):
+    """linOpt <= joint <= linUnif and linOpt <= maxOpt (exact, toy model)."""
+    m = two_node_model(theta_e, s1, s2)
+    locs = C.exact_locals(m, include_singleton=False)
+    v = {}
+    for sch in ("uniform", "optimal", "max"):
+        v[sch], _ = C.exact_consensus_variance(m, locs, sch,
+                                               include_singleton=False)
+    v["joint"], _ = C.exact_joint_mple_variance(m, include_singleton=False)
+    tol = 1e-5 + 1e-3 * abs(v["joint"])
+    assert v["optimal"] <= v["joint"] + tol
+    assert v["joint"] <= v["uniform"] + tol
+    assert v["optimal"] <= v["max"] + tol
+
+
+@given(st.floats(-1.0, 1.0), st.floats(-1.5, 1.5), st.floats(-1.5, 1.5))
+@settings(max_examples=25, deadline=None)
+def test_claim_4_10_phase_boundary(theta_e, s1, s2):
+    """joint <= maxOpt iff rho12 <= sqrt(gamma)(gamma+1)/2 (Claim 4.10)."""
+    m = two_node_model(theta_e, s1, s2)
+    locs = C.exact_locals(m, include_singleton=False)
+    v1 = locs[0].V[0, 0]
+    v2 = locs[1].V[0, 0]
+    probs = locs[0].probs
+    v12 = float((locs[0].S[:, 0] * probs) @ locs[1].S[:, 0])
+    rho = v12 / np.sqrt(v1 * v2)
+    gam = min(v1 / v2, v2 / v1)
+    v_joint, _ = C.exact_joint_mple_variance(m, include_singleton=False)
+    v_max, _ = C.exact_consensus_variance(m, locs, "max",
+                                          include_singleton=False)
+    lhs_leq = v_joint <= v_max[0] if isinstance(v_max, tuple) else v_joint <= v_max
+    boundary = 0.5 * np.sqrt(gam) * (gam + 1)
+    margin = 0.02  # skip razor-edge cases (numerical)
+    if rho < boundary - margin:
+        assert v_joint <= v_max + 1e-5 + 1e-3 * v_max
+    elif rho > boundary + margin:
+        assert v_joint >= v_max - 1e-5 - 1e-3 * v_max
+
+
+def test_joint_equals_hessian_weighted_matrix_consensus():
+    """Cor 4.2 (empirical): matrix consensus with W=H ~ joint MPLE estimate."""
+    g = C.grid_graph(2, 3)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(3))
+    X = C.exact_sample(m, 8000, jax.random.PRNGKey(4))
+    fits = C.fit_all_local(g, X)
+    th_matrix = C.combine(g, fits, "matrix")
+    th_joint = C.fit_mple(g, X)
+    # asymptotically equivalent: difference is o_p(1/sqrt(n))
+    assert np.linalg.norm(th_matrix - th_joint) < 0.12
+
+
+def test_mle_is_cramer_rao_floor():
+    """No consensus scheme beats the exact MLE variance (Sec. 2.3)."""
+    g = C.star_graph(6)
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(5))
+    locs = C.exact_locals(m, include_singleton=False)
+    tr_mle, _ = C.exact_mle_variance(m, include_singleton=False)
+    for sch in ("uniform", "diagonal", "optimal", "max"):
+        tr, _ = C.exact_consensus_variance(m, locs, sch,
+                                           include_singleton=False)
+        assert tr >= tr_mle * (1 - 1e-4)
+    tr_joint, _ = C.exact_joint_mple_variance(m, include_singleton=False)
+    assert tr_joint >= tr_mle * (1 - 1e-4)
+
+
+@pytest.mark.slow
+def test_exact_matches_empirical_efficiency_star():
+    """Fig 2(b): empirical n*MSE must track the exact asymptotic variance."""
+    g = C.star_graph(6)
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(6))
+    tf = np.asarray(m.theta).copy()
+    locs = C.exact_locals(m, include_singleton=False)
+    free = C.free_indices(g, include_singleton=False)
+
+    exact = {}
+    for sch in ("uniform", "max"):
+        exact[sch], _ = C.exact_consensus_variance(m, locs, sch,
+                                                   include_singleton=False)
+    n, R = 4000, 25
+    emp = {sch: [] for sch in exact}
+    for r in range(R):
+        X = C.exact_sample(m, n, jax.random.PRNGKey(100 + r))
+        fits = C.fit_all_local(g, X, include_singleton=False,
+                               theta_fixed=jax.numpy.asarray(tf))
+        for sch in exact:
+            th = C.combine(g, fits, sch, include_singleton=False,
+                           theta_fixed=tf)
+            emp[sch].append(n * C.mse(th, np.asarray(m.theta), free))
+    for sch in exact:
+        ratio = np.mean(emp[sch]) / exact[sch]
+        assert 0.6 < ratio < 1.6, (sch, ratio, np.mean(emp[sch]), exact[sch])

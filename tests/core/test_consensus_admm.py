@@ -1,0 +1,99 @@
+"""Consensus combiners + ADMM behaviour (Sec. 3, Thm 3.1, Fig 3c)."""
+import jax
+import numpy as np
+import pytest
+
+import repro.core as C
+
+
+@pytest.fixture(scope="module")
+def grid_setup():
+    g = C.grid_graph(3, 3)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(0))
+    X = C.exact_sample(m, 3000, jax.random.PRNGKey(1))
+    fits = C.fit_all_local(g, X)
+    return g, m, X, fits
+
+
+def test_all_schemes_finite_and_reasonable(grid_setup):
+    g, m, X, fits = grid_setup
+    base = C.mse(C.fit_mple(g, X), np.asarray(m.theta))
+    for sch in C.SCHEMES:
+        th = C.combine(g, fits, sch)
+        assert np.all(np.isfinite(th))
+        assert C.mse(th, np.asarray(m.theta)) < 30 * base + 0.5
+
+
+def test_singleton_passthrough(grid_setup):
+    """Singletons have one owner: every scheme returns the local estimate."""
+    g, m, X, fits = grid_setup
+    ths = {sch: C.combine(g, fits, sch) for sch in
+           ("uniform", "diagonal", "optimal", "max")}
+    for i in range(g.p):
+        vals = {sch: th[i] for sch, th in ths.items()}
+        assert np.ptp(list(vals.values())) < 1e-9
+        assert abs(vals["uniform"] - fits[i].theta[0]) < 1e-9
+
+
+def test_uniform_is_plain_average(grid_setup):
+    g, m, X, fits = grid_setup
+    th = C.combine(g, fits, "uniform")
+    owners = C.param_owners(g)
+    for a, own in owners.items():
+        avg = np.mean([fits[i].theta[pos] for (i, pos) in own])
+        np.testing.assert_allclose(th[a], avg, rtol=1e-6, atol=1e-7)
+
+
+def test_max_picks_min_variance_owner(grid_setup):
+    g, m, X, fits = grid_setup
+    th = C.combine(g, fits, "max")
+    owners = C.param_owners(g)
+    for a, own in owners.items():
+        best = min(own, key=lambda ip: fits[ip[0]].V[ip[1], ip[1]])
+        np.testing.assert_allclose(th[a], fits[best[0]].theta[best[1]])
+
+
+def test_admm_converges_to_mple(grid_setup):
+    g, m, X, fits = grid_setup
+    th_mple = C.fit_mple(g, X)
+    res = C.admm_mple(g, X, n_iters=25, init="diagonal", fits=fits)
+    assert np.linalg.norm(res.trajectory[-1] - th_mple) < 1e-3
+    # primal residual decreases
+    assert res.primal_residual[-1] < res.primal_residual[0]
+
+
+def test_admm_anytime_consistency(grid_setup):
+    """Thm 3.1: with consensus init, every iterate stays near theta*
+    (error never blows past the one-step estimate's error)."""
+    g, m, X, fits = grid_setup
+    res = C.admm_mple(g, X, n_iters=15, init="diagonal", fits=fits)
+    errs = [C.mse(t, np.asarray(m.theta)) for t in res.trajectory]
+    assert max(errs) <= errs[0] * 2.0 + 1e-3  # no divergence at any iterate
+
+
+def test_admm_consensus_init_faster_than_zero(grid_setup):
+    """Fig 3(c): one-step initialization accelerates ADMM convergence."""
+    g, m, X, fits = grid_setup
+    th_mple = C.fit_mple(g, X)
+    res_d = C.admm_mple(g, X, n_iters=6, init="diagonal", fits=fits)
+    res_0 = C.admm_mple(g, X, n_iters=6, init="zero")
+    err_d = np.linalg.norm(res_d.trajectory[-1] - th_mple)
+    err_0 = np.linalg.norm(res_0.trajectory[-1] - th_mple)
+    assert err_d < err_0
+
+
+def test_star_max_beats_uniform():
+    """The paper's headline: on stars, max >> uniform consensus."""
+    g = C.star_graph(8)
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(5))
+    tf = np.asarray(m.theta).copy()
+    errs = {"uniform": [], "max": []}
+    for r in range(6):
+        X = C.exact_sample(m, 1500, jax.random.PRNGKey(50 + r))
+        fits = C.fit_all_local(g, X, include_singleton=False,
+                               theta_fixed=jax.numpy.asarray(tf))
+        for sch in errs:
+            th = C.combine(g, fits, sch, include_singleton=False,
+                           theta_fixed=tf)
+            errs[sch].append(C.mse(th, tf))
+    assert np.mean(errs["max"]) < np.mean(errs["uniform"])

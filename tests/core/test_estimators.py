@@ -1,0 +1,94 @@
+"""Estimator correctness: stationarity, consistency, local CL = logistic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.ising import pseudo_loglik
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = C.grid_graph(2, 3)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(0))
+    X = C.exact_sample(m, 4000, jax.random.PRNGKey(1))
+    return g, m, X
+
+
+def test_mple_stationarity(setup):
+    g, m, X = setup
+    th = C.fit_mple(g, X)
+    grad = jax.grad(lambda t: pseudo_loglik(g, t, X))(jnp.asarray(th))
+    assert float(jnp.abs(grad).max()) < 1e-4
+
+
+def test_mle_stationarity(setup):
+    g, m, X = setup
+    th = C.fit_mle_exact(g, X)
+    mean_u = jnp.mean(C.suff_stats(g, X), axis=0)
+    ll = lambda t: t @ mean_u - C.log_partition(g, t)
+    grad = jax.grad(ll)(jnp.asarray(th))
+    assert float(jnp.abs(grad).max()) < 1e-4
+
+
+def test_local_cl_stationarity(setup):
+    g, m, X = setup
+    for i in [0, 3]:
+        fit = C.fit_local_cl(g, X, i)
+        fun, d = __import__("repro.core.estimators", fromlist=["node_cl_fn"]).node_cl_fn(
+            g, X, i, True, jnp.zeros(g.n_params))
+        grad = jax.grad(fun)(jnp.asarray(fit.theta, dtype=jnp.float32))
+        assert float(jnp.abs(grad).max()) < 1e-4
+
+
+def test_consistency_with_n(setup):
+    """MSE of MPLE decreases roughly like 1/n (consistency)."""
+    g, m, _ = setup
+    errs = []
+    for k, n in enumerate([500, 8000]):
+        X = C.exact_sample(m, n, jax.random.PRNGKey(10 + k))
+        th = C.fit_mple(g, X)
+        errs.append(C.mse(th, np.asarray(m.theta)))
+    assert errs[1] < errs[0]
+
+
+def test_mle_beats_or_ties_mple_avg():
+    """Across a few seeds, exact MLE MSE <= MPLE MSE on average (efficiency)."""
+    g = C.grid_graph(2, 3)
+    r_mle, r_mple = [], []
+    for s in range(4):
+        m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(100 + s))
+        X = C.exact_sample(m, 3000, jax.random.PRNGKey(200 + s))
+        r_mle.append(C.mse(C.fit_mle_exact(g, X), np.asarray(m.theta)))
+        r_mple.append(C.mse(C.fit_mple(g, X), np.asarray(m.theta)))
+    assert np.mean(r_mle) <= np.mean(r_mple) * 1.15  # slack for noise
+
+
+def test_local_cl_is_logistic_regression(setup):
+    """Node CL fit must equal logistic regression of x_i on neighbors."""
+    g, m, X = setup
+    i = 2
+    fit = C.fit_local_cl(g, X, i)
+    # hand-rolled logistic regression via jax on the same design
+    Z = np.asarray(C.node_design(g, X, i))
+    xi = np.asarray(X[:, i])
+    Zb = np.concatenate([np.ones((Z.shape[0], 1)), Z], axis=1)
+
+    def nll(w):
+        eta = Zb @ w
+        return -jnp.mean(jax.nn.log_sigmoid(2.0 * xi * eta))
+
+    w = C.newton_maximize(lambda w: -nll(w), jnp.zeros(Zb.shape[1]))
+    np.testing.assert_allclose(fit.theta, np.asarray(w), atol=1e-4)
+
+
+def test_fixed_singleton_mode(setup):
+    g, m, X = setup
+    tf = jnp.asarray(m.theta)  # true singletons fixed
+    fit = C.fit_local_cl(g, X, 0, include_singleton=False, theta_fixed=tf)
+    assert len(fit.beta) == g.degree(0)
+    assert all(a >= g.p for a in fit.beta)
+    free = C.free_indices(g, include_singleton=False)
+    th = C.fit_mple(g, X, free_idx=free, theta_fixed=tf)
+    np.testing.assert_allclose(th[: g.p], np.asarray(m.theta[: g.p]), atol=1e-6)

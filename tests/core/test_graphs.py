@@ -1,0 +1,93 @@
+"""Structure tests + hypothesis property tests for graph utilities."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+
+
+def test_star():
+    g = C.star_graph(6)
+    assert g.p == 6 and g.m == 5
+    assert g.degree(0) == 5
+    assert all(g.degree(i) == 1 for i in range(1, 6))
+    assert g.neighbors(0) == [1, 2, 3, 4, 5]
+
+
+def test_grid():
+    g = C.grid_graph(3, 4)
+    assert g.p == 12
+    assert g.m == 3 * 3 + 2 * 4  # horizontal + vertical
+    degs = sorted(g.degree(i) for i in range(g.p))
+    assert degs[0] == 2 and degs[-1] == 4
+
+
+def test_chain_and_complete():
+    assert C.chain_graph(5).m == 4
+    assert C.complete_graph(5).m == 10
+
+
+def test_scale_free_connected_and_hubby():
+    g = C.scale_free_graph(60, m=1, seed=1)
+    assert g.p == 60
+    degs = np.array([g.degree(i) for i in range(g.p)])
+    assert degs.max() >= 6          # preferential attachment creates hubs
+    assert degs.min() >= 1
+
+
+def test_euclidean_radius():
+    g = C.euclidean_graph(50, radius=0.3, seed=2)
+    assert g.p == 50 and g.m > 0
+
+
+def test_bad_edges_rejected():
+    with pytest.raises(ValueError):
+        C.Graph(3, ((1, 1),))
+    with pytest.raises(ValueError):
+        C.Graph(3, ((0, 1), (0, 1)))
+    with pytest.raises(ValueError):
+        C.Graph(3, ((2, 5),))
+
+
+@st.composite
+def random_graphs(draw):
+    p = draw(st.integers(3, 8))
+    all_edges = [(i, j) for i in range(p) for j in range(i + 1, p)]
+    k = draw(st.integers(1, len(all_edges)))
+    idx = draw(st.permutations(range(len(all_edges))))
+    edges = tuple(sorted(all_edges[i] for i in idx[:k]))
+    return C.Graph(p, edges)
+
+
+@given(random_graphs())
+@settings(max_examples=40, deadline=None)
+def test_beta_covers_all_params(g):
+    """Union of beta_i must cover the whole index set (paper Sec. 3)."""
+    covered = set()
+    for i in range(g.p):
+        covered.update(g.beta(i))
+    assert covered == set(range(g.n_params))
+
+
+@given(random_graphs())
+@settings(max_examples=40, deadline=None)
+def test_param_owner_counts(g):
+    """Each singleton has 1 owner; each edge has exactly 2 owners."""
+    owners = C.param_owners(g)
+    for a, own in owners.items():
+        if a < g.p:
+            assert own == [(a, 0)]
+        else:
+            i, j = g.edges[a - g.p]
+            assert sorted(o[0] for o in own) == [i, j]
+
+
+@given(random_graphs())
+@settings(max_examples=40, deadline=None)
+def test_incident_edge_positions_match_design(g):
+    """node_design column order must match beta ordering (edge block)."""
+    for i in range(g.p):
+        ks = g.incident_edges(i)
+        beta = g.beta(i)
+        assert beta[0] == i
+        assert beta[1:] == [g.p + k for k in ks]

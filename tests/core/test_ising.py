@@ -1,0 +1,86 @@
+"""Model-math correctness: exact enumeration, conditionals, samplers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+
+
+def _rand_model(p_edges="grid", key=0, sp=0.5, ss=0.3):
+    g = C.grid_graph(2, 3) if p_edges == "grid" else C.star_graph(5)
+    return C.random_model(g, sp, ss, jax.random.PRNGKey(key))
+
+
+def test_exact_probs_normalized():
+    m = _rand_model()
+    pr = C.exact_probs(m.graph, m.theta)
+    assert pr.shape == (2 ** m.graph.p,)
+    np.testing.assert_allclose(float(pr.sum()), 1.0, rtol=1e-5)
+
+
+def test_conditional_matches_joint():
+    """sigmoid(2 x_i eta_i) must equal the exact conditional p(x_i | x_rest)."""
+    m = _rand_model(key=3)
+    g = m.graph
+    states = C.all_states(g.p)
+    pr = np.asarray(C.exact_probs(g, m.theta))
+    eta = np.asarray(C.conditional_logits(g, m.theta, jnp.asarray(states)))
+    for i in range(g.p):
+        # brute-force conditional: group states by x_{-i}
+        flip = states.copy()
+        flip[:, i] = -flip[:, i]
+        # index of flipped state
+        bits = ((flip + 1) / 2).astype(np.int64)
+        idx = (bits << np.arange(g.p)).sum(1)
+        p_cond = pr / (pr + pr[idx])
+        pred = 1.0 / (1.0 + np.exp(-2.0 * states[:, i] * eta[:, i]))
+        np.testing.assert_allclose(p_cond, pred, rtol=2e-4, atol=2e-5)
+
+
+def test_log_partition_bruteforce():
+    m = _rand_model(key=5)
+    g = m.graph
+    states = C.all_states(g.p)
+    U = np.asarray(C.suff_stats(g, jnp.asarray(states)))
+    lz = np.log(np.exp(U @ np.asarray(m.theta)).sum())
+    np.testing.assert_allclose(float(C.log_partition(g, m.theta)), lz, rtol=1e-5)
+
+
+def test_exact_sample_moments():
+    m = _rand_model(key=7)
+    mu, _ = C.exact_moments(m.graph, m.theta)
+    X = C.exact_sample(m, 20000, jax.random.PRNGKey(1))
+    emp = np.asarray(C.suff_stats(m.graph, X)).mean(0)
+    np.testing.assert_allclose(emp, np.asarray(mu), atol=0.03)
+
+
+def test_gibbs_matches_exact_moments():
+    m = _rand_model(key=9)
+    mu, _ = C.exact_moments(m.graph, m.theta)
+    X = C.gibbs_sample(m, 4000, jax.random.PRNGKey(2), burnin=300, thin=3)
+    emp = np.asarray(C.suff_stats(m.graph, X)).mean(0)
+    np.testing.assert_allclose(emp, np.asarray(mu), atol=0.06)
+
+
+def test_pseudo_loglik_value():
+    """Pseudo-likelihood equals the sum of per-node conditional logliks."""
+    m = _rand_model(key=11)
+    X = C.exact_sample(m, 64, jax.random.PRNGKey(3))
+    pll = float(C.pseudo_loglik(m.graph, m.theta, X))
+    cll = np.asarray(C.cond_loglik(m.graph, m.theta, X))
+    np.testing.assert_allclose(pll, cll.sum(1).mean(), rtol=1e-5)
+    assert pll < 0.0
+
+
+@given(st.integers(0, 10000))
+@settings(max_examples=20, deadline=None)
+def test_suff_stats_range(seed):
+    """Sufficient statistics of +-1 data are +-1 (hypothesis sweep)."""
+    g = C.grid_graph(2, 2)
+    X = np.sign(np.random.RandomState(seed).randn(8, g.p)).astype(np.float32)
+    X[X == 0] = 1.0
+    U = np.asarray(C.suff_stats(g, jnp.asarray(X)))
+    assert U.shape == (8, g.n_params)
+    assert np.all(np.abs(U) == 1.0)

@@ -1,0 +1,83 @@
+"""Unit tests for the loop-aware HLO analyzer (the §Roofline measurement
+instrument — it must itself be correct)."""
+import textwrap
+
+from repro.launch import hloparse
+
+
+SYNTH = textwrap.dedent("""\
+    HloModule m
+
+    %body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+      %p = (s32[], f32[128,128]) parameter(0)
+      %dot.1 = f32[128,128]{1,0} dot(f32[128,128]{1,0} %a, f32[128,128]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[128,128]{1,0} all-reduce(%dot.1), replica_groups=[16,16]<=[256]
+      ROOT %t = (s32[], f32[128,128]) tuple(%i, %ar)
+    }
+
+    %cond (p: (s32[], f32[128,128])) -> pred[] {
+      %p = (s32[], f32[128,128]) parameter(0)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[128,128], b: f32[128,128]) -> f32[128,128] {
+      %a = f32[128,128]{1,0} parameter(0)
+      %b = f32[128,128]{1,0} parameter(1)
+      %w = (s32[], f32[128,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+      %ag = f32[256,128]{1,0} all-gather(%a), replica_groups={{0,256},{1,257}}, dimensions={0}
+      ROOT %gte = f32[128,128]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_loop_multiplied_collectives_and_flops():
+    r = hloparse.analyze(SYNTH)
+    # all-reduce inside the 12-trip loop: 12 instances
+    assert r["collectives"]["all-reduce"]["count"] == 12
+    assert r["collectives"]["all-reduce"]["bytes"] == 12 * 128 * 128 * 4
+    # dot: 2*M*N*K * trip
+    assert r["dot_flops"] == 12 * 2 * 128 * 128 * 128
+    assert r["max_trip"] == 12
+
+
+def test_cross_pod_classification():
+    r = hloparse.analyze(SYNTH)
+    # the all-gather's groups {{0,256},...} span the 256-device pod boundary
+    ag_bytes = 256 * 128 * 4
+    assert r["cross_pod_bytes"] == ag_bytes
+    # the within-pod all-reduce ([16,16]<=[256]) contributes nothing
+    assert hloparse.crosses_pod(
+        "x all-reduce(%y), replica_groups=[16,16]<=[256]") is False
+    assert hloparse.crosses_pod(
+        "x all-reduce(%y), replica_groups=[256,2]<=[2,256]T(1,0)") is True
+
+
+def test_bookkeeping_ops_are_free():
+    r = hloparse.analyze(SYNTH)
+    # GTE / tuple / parameter contribute zero bytes; the total is the dot
+    # line (result + 2 inline operands) + the all-reduce result, x12 trips,
+    # + the entry all-gather + the while-carry tuple.
+    per_trip = (3 + 1) * 128 * 128 * 4
+    expected = 12 * per_trip + 256 * 128 * 4 + 128 * 128 * 4 + 4
+    assert abs(r["hbm_bytes"] - expected) <= 64
+
+
+def test_probe_scan_counts_once_without_correction():
+    """Regression-documenting probe: jax cost_analysis counts loop bodies
+    once; our analyzer must multiply."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    raw = c.cost_analysis()["flops"]
+    deep = hloparse.analyze(c.as_text())
+    one = 2 * 64 ** 3
+    assert raw < 1.1 * one                 # XLA: body counted once (+eps)
+    assert deep["dot_flops"] == 7 * one    # ours: trip-corrected

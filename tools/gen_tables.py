@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline markdown tables from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python tools/gen_tables.py > experiments/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+
+import repro.configs as CFG               # noqa: E402
+from benchmarks.roofline import (model_flops_per_device, PEAK, HBM,   # noqa
+                                 LINK)
+
+
+def fmt(x, unit=""):
+    if x is None:
+        return "-"
+    for div, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(x) >= div:
+            return f"{x/div:.2f}{suf}{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def main():
+    recs = {}
+    for path in glob.glob("experiments/dryrun/*.json"):
+        r = json.load(open(path))
+        if "arch" in r:
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+
+    print("### Dry-run (all 40 combos x 2 meshes)\n")
+    print("| arch | shape | mesh | ok | compile_s | args GiB/dev | "
+          "temp GiB/dev | dot FLOPs/dev | HBM B/dev | coll B/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if not r.get("ok"):
+            print(f"| {arch} | {shape} | {mesh} | FAIL | - | - | - | - | - "
+                  f"| {r.get('error', '?')[:40]} |")
+            continue
+        m = r["memory"]
+        print(f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']} | "
+              f"{m['argument_bytes']/2**30:.2f} | "
+              f"{m['temp_bytes']/2**30:.2f} | "
+              f"{fmt(r.get('dot_flops'))} | {fmt(r.get('hbm_bytes'))} | "
+              f"{fmt(r.get('collective_bytes_total'))} |")
+
+    print("\n### Roofline (single-pod 16x16, per device)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_FLOPs/dev | useful ratio | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != "16x16" or not r.get("ok"):
+            continue
+        cfg = CFG.get(arch)
+        tc = r.get("dot_flops", 0) / PEAK
+        tm = r.get("hbm_bytes", 0) / HBM
+        tl = r.get("collective_bytes_total", 0) / LINK
+        dom = max((("compute", tc), ("memory", tm), ("collective", tl)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(cfg, shape)
+        ratio = mf / r["dot_flops"] if r.get("dot_flops") else float("nan")
+        note = ""
+        if r.get("window_override"):
+            note = f"SWA w={r['window_override']}"
+        print(f"| {arch} | {shape} | {tc:.2e} | {tm:.2e} | {tl:.2e} | "
+              f"{dom} | {fmt(mf)} | {ratio:.2f} | {note} |")
+
+
+if __name__ == "__main__":
+    main()
