@@ -1,0 +1,133 @@
+"""Local-estimator engine benchmark: seed per-node loop vs the
+degree-bucketed batched Newton-IRLS engine, plus sequential vs chromatic
+Gibbs, on the fig4 scale-free configuration (p=100, n=1000 by default).
+
+Emits CSV rows for the harness and writes ``BENCH_estimators.json`` so the
+perf trajectory is machine-readable across PRs. Cold timings include XLA
+compilation (what a fresh fig4 replicate pays); warm timings are steady
+state.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import repro.core as C
+from repro.core.batched import _solve_bucket
+from .util import emit, emit_json, scale
+
+
+def _wall(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree_util.tree_leaves(
+        [f.theta if isinstance(f, C.LocalFit) else f for f in out])
+        if isinstance(out, list) else out)
+    return time.perf_counter() - t0, out
+
+
+def bench_fit_all_local(g, X):
+    # fresh caches so "cold" includes compilation for both paths
+    from repro.core import estimators as E
+    E._solve_cl.clear_cache()
+    _solve_bucket.clear_cache()
+
+    cold_loop, fits_loop = _wall(lambda: C.fit_all_local(g, X, method="loop"))
+    warm_loop, _ = _wall(lambda: C.fit_all_local(g, X, method="loop"))
+    cold_bat, fits_bat = _wall(lambda: C.fit_all_local(g, X))
+    warm_bat, _ = _wall(lambda: C.fit_all_local(g, X))
+
+    max_diff = max(float(np.max(np.abs(a.theta - b.theta)))
+                   for a, b in zip(fits_loop, fits_bat))
+    n_buckets = len(C.degree_buckets(g))
+    compiles = _solve_bucket._cache_size()
+    # the fig4 full config fits each graph 150 times (5 models x 10 sets x
+    # 3 sample sizes): the wall-clock that matters is one compile plus 149
+    # steady-state fits, which is what this workload metric measures.
+    reps = 150
+    wl_loop = cold_loop + (reps - 1) * warm_loop
+    wl_bat = cold_bat + (reps - 1) * warm_bat
+    return {
+        "fit_loop_cold_s": cold_loop, "fit_loop_warm_s": warm_loop,
+        "fit_batched_cold_s": cold_bat, "fit_batched_warm_s": warm_bat,
+        "fit_speedup_cold": cold_loop / cold_bat,
+        "fit_speedup_warm": warm_loop / warm_bat,
+        "fit_fig4_workload_loop_s": wl_loop,
+        "fit_fig4_workload_batched_s": wl_bat,
+        "fit_speedup_fig4_workload": wl_loop / wl_bat,
+        "fit_max_abs_diff_theta": max_diff,
+        "n_degree_buckets": n_buckets,
+        "bucket_compile_count": compiles,
+    }, fits_bat
+
+
+def bench_gibbs(m, n):
+    key = jax.random.PRNGKey(7)
+    # warm both compile caches, then time steady-state sampling
+    C.gibbs_sample(m, 64, key, burnin=10, thin=1, method="sequential")
+    C.gibbs_sample(m, 64, key, burnin=10, thin=1, method="chromatic")
+    t_seq, _ = _wall(lambda: C.gibbs_sample(m, n, key, burnin=150, thin=2,
+                                            method="sequential"))
+    t_chr, _ = _wall(lambda: C.gibbs_sample(m, n, key, burnin=150, thin=2,
+                                            method="chromatic"))
+    n_colors = int(m.graph.greedy_coloring().max()) + 1
+    return {
+        "gibbs_sequential_s": t_seq,
+        "gibbs_chromatic_s": t_chr,
+        "gibbs_speedup": t_seq / t_chr,
+        "n_colors": n_colors,
+    }
+
+
+def bench_combine(g, fits):
+    for sch in ("uniform", "diagonal", "optimal", "max"):
+        C.combine(g, fits, sch)                      # warm any lazy setup
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        for sch in ("uniform", "diagonal", "optimal", "max"):
+            C.combine(g, fits, sch)
+    return {"combine_all_schemes_s": (time.perf_counter() - t0) / reps}
+
+
+def main() -> None:
+    p = scale(100, 100)
+    n = scale(1000, 1000)
+    g = C.scale_free_graph(p, m=1, seed=0)
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(37))
+    X = C.gibbs_sample(m, n, jax.random.PRNGKey(1000), burnin=150, thin=2)
+
+    metrics, fits = bench_fit_all_local(g, X)
+    metrics.update(bench_gibbs(m, n))
+    metrics.update(bench_combine(g, fits))
+
+    emit("estimator_fit_loop", metrics["fit_loop_cold_s"] * 1e6,
+         f"p={p} n={n} cold_s={metrics['fit_loop_cold_s']:.2f} "
+         f"warm_s={metrics['fit_loop_warm_s']:.2f}")
+    emit("estimator_fit_batched", metrics["fit_batched_cold_s"] * 1e6,
+         f"p={p} n={n} cold_s={metrics['fit_batched_cold_s']:.2f} "
+         f"warm_s={metrics['fit_batched_warm_s']:.2f} "
+         f"speedup_cold={metrics['fit_speedup_cold']:.1f}x "
+         f"speedup_warm={metrics['fit_speedup_warm']:.1f}x "
+         f"speedup_fig4={metrics['fit_speedup_fig4_workload']:.1f}x "
+         f"maxdiff={metrics['fit_max_abs_diff_theta']:.1e} "
+         f"buckets={metrics['n_degree_buckets']} "
+         f"compiles={metrics['bucket_compile_count']}")
+    emit("estimator_gibbs_chromatic", metrics["gibbs_chromatic_s"] * 1e6,
+         f"seq_s={metrics['gibbs_sequential_s']:.2f} "
+         f"chrom_s={metrics['gibbs_chromatic_s']:.2f} "
+         f"speedup={metrics['gibbs_speedup']:.1f}x "
+         f"colors={metrics['n_colors']}")
+    emit("estimator_combine", metrics["combine_all_schemes_s"] * 1e6,
+         "vectorized combine, 4 schemes")
+
+    emit_json("BENCH_estimators.json", {
+        "config": {"p": p, "n": n, "graph": "scale_free(m=1, seed=0)"},
+        "metrics": metrics,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 """Fig. 4 reproduction: 100-node scale-free + Euclidean graphs.
 
-Estimates BOTH singleton and pairwise parameters, data via Gibbs sampling.
-Quick mode shrinks graphs/replicates; REPRO_BENCH_FULL=1 restores 100 nodes.
+Estimates BOTH singleton and pairwise parameters, data via chromatic Gibbs
+sampling (both graphs color sparsely), local fits via the degree-bucketed
+batched Newton-IRLS engine. Quick mode shrinks graphs/replicates;
+REPRO_BENCH_FULL=1 restores 100 nodes.
 """
 from __future__ import annotations
 
@@ -25,8 +27,8 @@ def run_graph(name: str, g: C.Graph, ns, n_models: int, n_sets: int,
                 m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(37 + mm))
                 for r in range(n_sets):
                     X = C.gibbs_sample(m, n, jax.random.PRNGKey(1000 + mm * 97 + r),
-                                       burnin=150, thin=2)
-                    fits = C.fit_all_local(g, X)
+                                       burnin=150, thin=2, method="auto")
+                    fits = C.fit_all_local(g, X, method="batched")
                     for sch in SCHEMES:
                         th = C.combine(g, fits, sch)
                         acc[sch].append(C.mse(th, np.asarray(m.theta)))

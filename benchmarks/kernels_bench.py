@@ -1,23 +1,25 @@
-"""Kernel micro-benchmarks: interpret-mode correctness timing plus the
-pure-jnp reference path timing at paper-relevant sizes. (Wall-clock MFU is
-not measurable on CPU; these benches verify the kernels run and give the
-oracle a throughput baseline. On TPU the same harness times the Pallas
-path via use_pallas=True.)"""
+"""Kernel micro-benchmarks: the pure-jnp reference path AND the Pallas
+kernel path (interpret mode on CPU) at paper-relevant sizes, each emitted as
+its own metric so the perf trajectory of both paths is machine-readable
+(``BENCH_kernels.json``). Wall-clock MFU is not measurable on CPU; on TPU
+the same harness times the compiled Pallas path via use_pallas=True."""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.ising_cl.kernel import ising_cl_logits
-from repro.kernels.ising_cl.ref import ising_cl_logits_ref
+from repro.kernels.ising_cl.ref import ising_cl_logits_ref, ising_cl_score_ref
+from repro.kernels.ising_cl.score import ising_cl_score
 from repro.kernels.gram.kernel import gram
 from repro.kernels.gram.ref import gram_ref
 from repro.kernels.swa.kernel import swa_attention
 from repro.kernels.swa.ref import swa_attention_ref
-from .util import emit, scale
+from .util import emit, emit_json, scale
+
+RESULTS = {}
 
 
 def _time(fn, *args, reps=3):
@@ -28,6 +30,15 @@ def _time(fn, *args, reps=3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def _record(name: str, shape_desc: str, us_ref: float, us_kernel: float,
+            err: float) -> None:
+    """Emit ref and kernel-path rows separately; stash for the JSON dump."""
+    emit(f"{name}_ref", us_ref, f"{shape_desc} maxerr={err:.2e}")
+    emit(f"{name}_pallas", us_kernel, f"{shape_desc} maxerr={err:.2e}")
+    RESULTS[name] = {"ref_us": us_ref, "kernel_us": us_kernel,
+                     "shape": shape_desc, "max_err": err}
 
 
 def bench_ising_cl():
@@ -41,9 +52,21 @@ def bench_ising_cl():
     us_k, out = _time(lambda *a: ising_cl_logits(*a, interpret=True),
                       x, theta, mask, bias, reps=1)
     err = float(jnp.max(jnp.abs(out - ref)))
-    emit("kernel_ising_cl", us_ref,
-         f"n={n} p={p} ref_us={us_ref:.0f} interp_us={us_k:.0f} "
-         f"maxerr={err:.2e}")
+    _record("kernel_ising_cl", f"n={n} p={p}", us_ref, us_k, err)
+
+
+def bench_ising_cl_score():
+    n, p = scale((512, 100), (4096, 256))
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jnp.sign(jax.random.normal(ks[0], (n, p)))
+    theta = 0.3 * jax.random.normal(ks[1], (p, p))
+    mask = (jax.random.uniform(ks[2], (p, p)) < 0.1).astype(jnp.float32)
+    bias = 0.1 * jax.random.normal(ks[0], (p,))
+    us_ref, ref = _time(jax.jit(ising_cl_score_ref), x, theta, mask, bias)
+    us_k, out = _time(lambda *a: ising_cl_score(*a, interpret=True),
+                      x, theta, mask, bias, reps=1)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(out, ref))
+    _record("kernel_ising_cl_score", f"n={n} p={p}", us_ref, us_k, err)
 
 
 def bench_gram():
@@ -52,9 +75,7 @@ def bench_gram():
     us_ref, ref = _time(jax.jit(gram_ref), s)
     us_k, out = _time(lambda a: gram(a, interpret=True), s, reps=1)
     err = float(jnp.max(jnp.abs(out - ref)))
-    emit("kernel_gram", us_ref,
-         f"n={n} d={d} ref_us={us_ref:.0f} interp_us={us_k:.0f} "
-         f"maxerr={err:.2e}")
+    _record("kernel_gram", f"n={n} d={d}", us_ref, us_k, err)
 
 
 def bench_swa():
@@ -69,15 +90,20 @@ def bench_swa():
                                                     interpret=True),
                       q, k, v, reps=1)
     err = float(jnp.max(jnp.abs(out - ref)))
-    emit("kernel_swa", us_ref,
-         f"s={s} window={w} ref_us={us_ref:.0f} interp_us={us_k:.0f} "
-         f"maxerr={err:.2e}")
+    _record("kernel_swa", f"s={s} window={w}", us_ref, us_k, err)
 
 
 def main() -> None:
     bench_ising_cl()
+    bench_ising_cl_score()
     bench_gram()
     bench_swa()
+    emit_json("BENCH_kernels.json", {
+        "backend": jax.default_backend(),
+        "kernel_path": "interpret" if jax.default_backend() != "tpu"
+        else "pallas",
+        "kernels": RESULTS,
+    })
 
 
 if __name__ == "__main__":

@@ -1,20 +1,34 @@
-"""Benchmark harness utilities: timing + CSV emission.
+"""Benchmark harness utilities: timing + CSV/JSON emission.
 
 Every benchmark prints ``name,us_per_call,derived`` rows so ``benchmarks.run``
 output is machine-parsable. ``derived`` is the figure's scientific payload
-(efficiency, MSE, ...) as a compact string.
+(efficiency, MSE, ...) as a compact string. Benchmarks that track a perf
+trajectory additionally write a ``BENCH_*.json`` file at the repo root via
+:func:`emit_json`.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 from contextlib import contextmanager
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(filename: str, payload: dict) -> str:
+    """Write a machine-readable benchmark record to the repo root."""
+    path = os.path.join(REPO_ROOT, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path
 
 
 @contextmanager

@@ -7,9 +7,12 @@ from .graphs import (Graph, chain_graph, star_graph, grid_graph,
 from .ising import (IsingModel, random_model, conditional_logits, cond_loglik,
                     pseudo_loglik, suff_stats, log_partition, exact_probs,
                     loglik, exact_moments, all_states, pair_matrix)
-from .sampling import exact_sample, gibbs_sample
+from .sampling import exact_sample, gibbs_sample, chromatic_gibbs_sample
 from .estimators import (LocalFit, newton_maximize, fit_local_cl,
-                         fit_all_local, fit_mple, fit_mle_exact, node_design)
+                         fit_all_local, fit_all_local_loop, fit_mple,
+                         fit_mle_exact, node_design)
+from .batched import (DegreeBucket, degree_buckets, fit_all_local_batched,
+                      bucket_compile_count)
 from .asymptotics import (ExactLocal, exact_local, exact_locals, param_owners,
                           free_indices, exact_consensus_variance,
                           exact_joint_mple_variance, exact_mle_variance,

@@ -31,52 +31,101 @@ def empirical_cross_cov(fits: List[LocalFit],
     return cols.T @ cols / n
 
 
+def _owner_groups(owners: Dict[int, List[Tuple[int, int]]]):
+    """Group params by owner count k -> (param_idx (P,), node (P,k), pos (P,k)).
+
+    Owner counts are tiny (1 for singletons, 2 for edges), so grouping by k
+    turns the per-parameter Python loop into a handful of batched array ops.
+    """
+    by_k: Dict[int, List[Tuple[int, List[Tuple[int, int]]]]] = {}
+    for a, own in owners.items():
+        by_k.setdefault(len(own), []).append((a, own))
+    out = {}
+    for k, items in by_k.items():
+        aidx = np.array([a for a, _ in items], dtype=np.int64)
+        node = np.array([[i for (i, _) in own] for _, own in items],
+                        dtype=np.int64)
+        pos = np.array([[p_ for (_, p_) in own] for _, own in items],
+                       dtype=np.int64)
+        out[k] = (aidx, node, pos)
+    return out
+
+
 def combine(graph: Graph, fits: List[LocalFit], scheme: str,
             include_singleton: bool = True,
             theta_fixed: Optional[np.ndarray] = None) -> np.ndarray:
-    """One-step consensus estimate; returns the full flat theta vector."""
+    """One-step consensus estimate; returns the full flat theta vector.
+
+    Vectorized over the owner structure: parameters are grouped by owner
+    count and every group's weights/averages are computed with batched
+    float64 array ops (no per-parameter Python loop). Single-owner
+    parameters — the singletons — pass the local estimate through exactly.
+    """
     if theta_fixed is None:
         theta_fixed = np.zeros(graph.n_params, dtype=np.float64)
     theta = np.array(theta_fixed, dtype=np.float64, copy=True)
 
     if scheme == "matrix":
         return _matrix_consensus(graph, fits, include_singleton, theta)
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    # pad per-node results into dense (p, dmax) float64 stacks
+    dmax = max(len(f.theta) for f in fits)
+    theta_mat = np.zeros((graph.p, dmax), dtype=np.float64)
+    vdiag_mat = np.ones((graph.p, dmax), dtype=np.float64)
+    for f in fits:
+        d = len(f.theta)
+        theta_mat[f.i, :d] = f.theta
+        vdiag_mat[f.i, :d] = np.diag(f.V)
+    s_pad = None
+    if scheme == "optimal":
+        n = fits[0].s.shape[0]
+        s_pad = np.zeros((graph.p, n, dmax), dtype=np.float64)
+        for f in fits:
+            s_pad[f.i, :, :len(f.theta)] = f.s
 
     owners = param_owners(graph, include_singleton)
-    for a, own in owners.items():
-        est = np.array([fits[i].theta[pos] for (i, pos) in own])
-        diag = np.array([max(fits[i].V[pos, pos], 1e-12) for (i, pos) in own])
+    for k, (aidx, node, pos) in _owner_groups(owners).items():
+        est = theta_mat[node, pos]                          # (P, k)
+        diag = np.maximum(vdiag_mat[node, pos], 1e-12)
         # Robustness guard: a saturated/diverged local fit (quasi-separation,
         # e.g. high-degree hubs at small n) yields non-finite estimates or a
         # deceptively tiny Vhat. Treat such owners as infinite-variance so
         # every weighting scheme zeroes them out; keep uniform truly uniform
         # only over sane owners.
         bad = (~np.isfinite(est)) | (~np.isfinite(diag)) | (np.abs(est) > 25.0)
-        if bad.all():
-            theta[a] = 0.0
+        est = np.where(bad, 0.0, est)
+        all_bad = bad.all(axis=1)
+
+        if k == 1:
+            # exact passthrough: a parameter with one owner (the singletons)
+            # IS the local estimate under every weighting scheme.
+            theta[aidx] = np.where(all_bad, 0.0, est[:, 0])
             continue
+
         diag = np.where(bad, np.inf, diag)
-        k = len(own)
         if scheme == "uniform":
             w = np.where(bad, 0.0, 1.0)
         elif scheme == "diagonal":
             w = 1.0 / diag
         elif scheme == "max":
-            w = np.zeros(k)
-            w[int(np.argmin(diag))] = 1.0
-        elif scheme == "optimal":
-            Va = empirical_cross_cov(fits, own)
-            if bad.any() or not np.all(np.isfinite(Va)):
-                w = 1.0 / diag                # fall back to diagonal weights
-            else:
-                w = np.linalg.solve(Va + 1e-10 * np.eye(k), np.ones(k))
-                if abs(w.sum()) < 1e-12:      # degenerate; fall back
-                    w = 1.0 / diag
-        else:
-            raise ValueError(f"unknown scheme {scheme!r}")
+            w = np.zeros_like(est)
+            w[np.arange(len(aidx)), np.argmin(diag, axis=1)] = 1.0
+        else:                                               # optimal
+            cols = s_pad[node, :, pos]                      # (P, k, n)
+            n = cols.shape[-1]
+            Va = cols @ cols.transpose(0, 2, 1) / n         # (P, k, k)
+            finite = np.isfinite(Va).all(axis=(1, 2))
+            Va = np.where(finite[:, None, None], Va, np.eye(k))
+            w = np.linalg.solve(Va + 1e-10 * np.eye(k),
+                                np.ones((len(aidx), k, 1)))[..., 0]
+            fallback = (bad.any(axis=1) | ~finite
+                        | (np.abs(w.sum(axis=1)) < 1e-12))
+            w = np.where(fallback[:, None], 1.0 / diag, w)
         w = np.where(bad, 0.0, w)
-        est = np.where(bad, 0.0, est)
-        theta[a] = float(w @ est / w.sum())
+        wsum = np.where(all_bad, 1.0, w.sum(axis=1))
+        theta[aidx] = np.where(all_bad, 0.0, (w * est).sum(axis=1) / wsum)
     return theta
 
 

@@ -16,8 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graphs import Graph
-from .ising import (IsingModel, exact_moments, pseudo_loglik, suff_stats,
-                    log_partition)
+from .ising import pseudo_loglik, suff_stats, log_partition
 
 
 # ---------------------------------------------------------------- solvers
@@ -50,6 +49,27 @@ def node_design(graph: Graph, X: jnp.ndarray, i: int):
     return Z
 
 
+def _cl_objective(Z: jnp.ndarray, xi: jnp.ndarray, offset,
+                  include_singleton: bool):
+    """(fun, d): average conditional loglik of one node's CL criterion.
+
+    ``w`` is ordered singleton-first (when free) then incident-edge
+    couplings; ``offset`` is the fixed singleton theta_i otherwise.
+    Shared by the per-node and loop paths so the criterion is defined once.
+    """
+    if include_singleton:
+        def fun(w):
+            eta = w[0] + Z @ w[1:]
+            return jnp.mean(jax.nn.log_sigmoid(2.0 * xi * eta))
+        d = 1 + Z.shape[1]
+    else:
+        def fun(w):
+            eta = offset + Z @ w
+            return jnp.mean(jax.nn.log_sigmoid(2.0 * xi * eta))
+        d = Z.shape[1]
+    return fun, d
+
+
 def node_cl_fn(graph: Graph, X: jnp.ndarray, i: int,
                include_singleton: bool, theta_fixed: jnp.ndarray):
     """Returns (fun, d) where fun(w) is node i's average conditional loglik.
@@ -58,20 +78,7 @@ def node_cl_fn(graph: Graph, X: jnp.ndarray, i: int,
     (if free) then incident-edge couplings.
     """
     Z = node_design(graph, X, i)
-    xi = X[:, i]
-    fixed_single = theta_fixed[i]
-
-    if include_singleton:
-        def fun(w):
-            eta = w[0] + Z @ w[1:]
-            return jnp.mean(jax.nn.log_sigmoid(2.0 * xi * eta))
-        d = 1 + Z.shape[1]
-    else:
-        def fun(w):
-            eta = fixed_single + Z @ w
-            return jnp.mean(jax.nn.log_sigmoid(2.0 * xi * eta))
-        d = Z.shape[1]
-    return fun, d
+    return _cl_objective(Z, X[:, i], theta_fixed[i], include_singleton)
 
 
 @dataclasses.dataclass
@@ -94,19 +101,8 @@ def _solve_cl(Z: jnp.ndarray, xi: jnp.ndarray, offset: jnp.ndarray,
     Returns (w, H, J, V, s). ``offset`` is the fixed singleton theta_i (only
     used when include_singleton=False).
     """
-    deg = Z.shape[1]
-    d = deg + (1 if include_singleton else 0)
     n = Z.shape[0]
-
-    if include_singleton:
-        def fun(w):
-            eta = w[0] + Z @ w[1:]
-            return jnp.mean(jax.nn.log_sigmoid(2.0 * xi * eta))
-    else:
-        def fun(w):
-            eta = offset + Z @ w
-            return jnp.mean(jax.nn.log_sigmoid(2.0 * xi * eta))
-
+    fun, d = _cl_objective(Z, xi, offset, include_singleton)
     w = newton_maximize(fun, jnp.zeros(d, Z.dtype), n_iter=n_iter)
 
     # per-sample score at w_hat; dl/deta = 2 x sigmoid(-2 x eta)
@@ -138,11 +134,35 @@ def fit_local_cl(graph: Graph, X: jnp.ndarray, i: int,
                     V=np.asarray(V), s=np.asarray(s))
 
 
-def fit_all_local(graph: Graph, X: jnp.ndarray,
-                  include_singleton: bool = True,
-                  theta_fixed: Optional[jnp.ndarray] = None) -> List[LocalFit]:
+def fit_all_local_loop(graph: Graph, X: jnp.ndarray,
+                       include_singleton: bool = True,
+                       theta_fixed: Optional[jnp.ndarray] = None
+                       ) -> List[LocalFit]:
+    """Seed per-node loop: one jitted solve per degree, autodiff Hessians.
+
+    Kept as the reference path; ``fit_all_local`` dispatches to the
+    degree-bucketed batched engine in :mod:`repro.core.batched`.
+    """
     return [fit_local_cl(graph, X, i, include_singleton, theta_fixed)
             for i in range(graph.p)]
+
+
+def fit_all_local(graph: Graph, X: jnp.ndarray,
+                  include_singleton: bool = True,
+                  theta_fixed: Optional[jnp.ndarray] = None,
+                  method: str = "batched") -> List[LocalFit]:
+    """Fit all p local CL estimators.
+
+    method="batched" (default) groups nodes into degree buckets and solves
+    each bucket in one vmapped Newton-IRLS program with closed-form
+    gradients/Hessians; method="loop" is the legacy per-node path.
+    """
+    if method == "batched":
+        from .batched import fit_all_local_batched
+        return fit_all_local_batched(graph, X, include_singleton, theta_fixed)
+    if method == "loop":
+        return fit_all_local_loop(graph, X, include_singleton, theta_fixed)
+    raise ValueError(f"unknown method {method!r}")
 
 
 # ------------------------------------------------------------- joint fits

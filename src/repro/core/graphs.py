@@ -8,6 +8,7 @@ then edges in ``graph.edges`` order); see :mod:`repro.core.ising`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Tuple
 
 import numpy as np
@@ -76,6 +77,34 @@ class Graph:
         idx = [i] if include_singleton else []
         idx += [self.p + k for k in self.incident_edges(i)]
         return idx
+
+    def greedy_coloring(self) -> np.ndarray:
+        """Proper vertex coloring by greedy largest-degree-first assignment.
+
+        Returns a (p,) int array of color ids in [0, n_colors). Nodes of the
+        same color are mutually non-adjacent, so a Gibbs sweep may update a
+        whole color class in parallel (chromatic Gibbs). Cached per graph
+        (graphs are frozen); callers in sampler replicate loops hit the
+        cache instead of redoing the Python sweep.
+        """
+        return _greedy_coloring_cached(self).copy()
+
+
+@functools.lru_cache(maxsize=64)
+def _greedy_coloring_cached(graph: Graph) -> np.ndarray:
+    nbrs = {i: set() for i in range(graph.p)}
+    for (a, b) in graph.edges:
+        nbrs[a].add(b)
+        nbrs[b].add(a)
+    colors = np.full(graph.p, -1, dtype=np.int64)
+    order = sorted(range(graph.p), key=lambda i: -len(nbrs[i]))
+    for i in order:
+        used = {colors[j] for j in nbrs[i] if colors[j] >= 0}
+        c = 0
+        while c in used:
+            c += 1
+        colors[i] = c
+    return colors
 
 
 # ---------------------------------------------------------------- factories

@@ -1,9 +1,10 @@
-"""Jit'd public wrapper: picks the Pallas kernel on TPU, the pure-jnp
+"""Jit'd public wrappers: pick the Pallas kernel on TPU, the pure-jnp
 reference elsewhere (CPU dry-run / tests use interpret mode explicitly)."""
 import jax
 
 from .kernel import ising_cl_logits
-from .ref import ising_cl_logits_ref
+from .ref import ising_cl_logits_ref, ising_cl_score_ref
+from .score import ising_cl_score
 
 
 def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
@@ -12,3 +13,12 @@ def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
     if use_pallas:
         return ising_cl_logits(x, theta, mask, bias, interpret=False)
     return ising_cl_logits_ref(x, theta, mask, bias)
+
+
+def score_stats_op(x, theta, mask, bias, *, use_pallas=None):
+    """Fused (eta, r, S) pseudo-likelihood score statistics."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return ising_cl_score(x, theta, mask, bias, interpret=False)
+    return ising_cl_score_ref(x, theta, mask, bias)

@@ -1,6 +1,17 @@
-"""Pure-jnp oracle for the ising_cl kernel."""
+"""Pure-jnp oracles for the ising_cl kernels."""
+import jax
 import jax.numpy as jnp
 
 
 def ising_cl_logits_ref(x, theta, mask, bias):
     return (x @ (theta * mask) + bias[None, :]).astype(x.dtype)
+
+
+def ising_cl_score_ref(x, theta, mask, bias):
+    """(eta, r, S): conditional logits, score residuals, score Gram."""
+    eta = x.astype(jnp.float32) @ (theta * mask).astype(jnp.float32) \
+        + bias[None, :].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    r = 2.0 * xf * jax.nn.sigmoid(-2.0 * xf * eta)
+    s = r.T @ xf / x.shape[0]
+    return eta.astype(x.dtype), r.astype(x.dtype), s

@@ -157,9 +157,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    hlo = compiled.as_text()
     from repro.launch import hloparse
+    cost = hloparse.normalize_cost_analysis(compiled.cost_analysis())
+    hlo = compiled.as_text()
     deep = hloparse.analyze(hlo)
     coll = deep["collectives"]
     if save_hlo_dir:

@@ -43,6 +43,20 @@ DOT_RE = re.compile(r"\sdot\(")
 LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 
+def normalize_cost_analysis(cost) -> Dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one properties dict; newer JAX returns a list with one
+    dict per executable module. Always returns a plain dict (empty if the
+    compiler reported nothing).
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _dims(s: str) -> List[int]:
     return [int(d) for d in s.split(",") if d]
 

@@ -4,6 +4,7 @@ Claim 4.9 orderings and the Claim 4.10 phase boundary."""
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core as C

@@ -1,0 +1,166 @@
+"""Batched local-estimator engine vs the seed per-node path, plus the
+chromatic Gibbs sampler vs exact/sequential sampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.batched import _gauss_jordan_solve, _pad_degree, _solve_bucket
+
+
+# ------------------------------------------------------------ infrastructure
+def test_pad_degree_powers_of_four():
+    assert [_pad_degree(d) for d in [0, 1, 2, 3, 4, 5, 16, 17]] == \
+        [1, 1, 4, 4, 4, 16, 16, 64]
+
+
+def test_degree_buckets_cover_all_nodes():
+    g = C.scale_free_graph(30, m=1, seed=3)
+    buckets = C.degree_buckets(g)
+    seen = sorted(int(i) for b in buckets for i in b.nodes)
+    assert seen == list(range(g.p))
+    for b in buckets:
+        for row, i in enumerate(b.nodes):
+            deg = g.degree(int(i))
+            assert deg <= b.deg_pad
+            assert b.mask[row].sum() == deg
+            # neighbor order matches the seed design (incident-edge order)
+            ks = g.incident_edges(int(i))
+            others = [g.edges[k][0] if g.edges[k][1] == int(i)
+                      else g.edges[k][1] for k in ks]
+            assert list(b.nbrs[row, :deg]) == others
+
+
+def test_gauss_jordan_matches_linalg_solve():
+    rng = np.random.RandomState(0)
+    for d in (1, 2, 5, 9):
+        A = rng.randn(7, d, d).astype(np.float32)
+        # well-conditioned negative definite (jax runs float32 by default)
+        A = -(A @ A.transpose(0, 2, 1) + d * np.eye(d, dtype=np.float32))
+        B = rng.randn(7, d, 2).astype(np.float32)
+        X = np.asarray(_gauss_jordan_solve(jnp.asarray(A), jnp.asarray(B)))
+        np.testing.assert_allclose(X, np.linalg.solve(A, B),
+                                   atol=2e-5, rtol=2e-4)
+
+
+# ----------------------------------------------------- batched == seed solver
+@pytest.fixture(scope="module")
+def grid_setup():
+    g = C.grid_graph(3, 3)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(0))
+    X = C.exact_sample(m, 3000, jax.random.PRNGKey(1))
+    return g, m, X
+
+
+def test_batched_matches_loop_free_singleton(grid_setup):
+    g, m, X = grid_setup
+    loop = C.fit_all_local_loop(g, X)
+    bat = C.fit_all_local(g, X, method="batched")
+    for a, b in zip(loop, bat):
+        assert a.i == b.i and a.beta == b.beta
+        np.testing.assert_allclose(a.theta, b.theta, atol=1e-5)
+        np.testing.assert_allclose(a.H, b.H, atol=1e-4)
+        np.testing.assert_allclose(a.J, b.J, atol=1e-4)
+
+
+def test_batched_matches_loop_fixed_singleton(grid_setup):
+    g, m, X = grid_setup
+    tf = jnp.asarray(np.asarray(m.theta))
+    loop = C.fit_all_local_loop(g, X, include_singleton=False, theta_fixed=tf)
+    bat = C.fit_all_local(g, X, include_singleton=False, theta_fixed=tf,
+                          method="batched")
+    for a, b in zip(loop, bat):
+        assert a.beta == b.beta
+        assert len(a.theta) == g.degree(a.i)
+        np.testing.assert_allclose(a.theta, b.theta, atol=1e-5)
+
+
+def test_batched_matches_loop_scale_free():
+    """Heterogeneous degrees (the bucketing actually has work to do)."""
+    g = C.scale_free_graph(24, m=1, seed=0)
+    m = C.random_model(g, 0.4, 0.3, jax.random.PRNGKey(2))
+    X = C.gibbs_sample(m, 1500, jax.random.PRNGKey(3), burnin=100, thin=2)
+    loop = C.fit_all_local_loop(g, X)
+    bat = C.fit_all_local(g, X, method="batched")
+    max_diff = max(float(np.max(np.abs(a.theta - b.theta)))
+                   for a, b in zip(loop, bat))
+    assert max_diff <= 1e-5
+
+
+def test_compile_count_bounded_by_buckets():
+    """One XLA compile per degree bucket, reused across data/replicates."""
+    g = C.scale_free_graph(26, m=1, seed=7)
+    m = C.random_model(g, 0.4, 0.3, jax.random.PRNGKey(4))
+    _solve_bucket.clear_cache()
+    n_buckets = len(C.degree_buckets(g))
+    for r in range(3):
+        X = C.gibbs_sample(m, 400, jax.random.PRNGKey(10 + r),
+                           burnin=50, thin=1)
+        C.fit_all_local(g, X, method="batched")
+    assert C.bucket_compile_count() == n_buckets
+
+
+def test_batched_feeds_consensus(grid_setup):
+    """End-to-end: batched fits drive every consensus scheme sanely."""
+    g, m, X = grid_setup
+    fits = C.fit_all_local(g, X, method="batched")
+    for sch in C.SCHEMES:
+        th = C.combine(g, fits, sch)
+        assert np.all(np.isfinite(th))
+        assert C.mse(th, np.asarray(m.theta)) < 5.0
+
+
+# ------------------------------------------------------------ chromatic Gibbs
+def test_greedy_coloring_proper():
+    for g in (C.grid_graph(4, 4), C.scale_free_graph(40, m=2, seed=1),
+              C.complete_graph(6), C.star_graph(9)):
+        colors = g.greedy_coloring()
+        assert colors.min() >= 0
+        for (i, j) in g.edges:
+            assert colors[i] != colors[j]
+
+
+def test_coloring_sparse_graphs_few_colors():
+    # grids are bipartite; greedy colorings of sparse BA graphs stay small
+    assert int(C.grid_graph(4, 4).greedy_coloring().max()) + 1 == 2
+    assert int(C.scale_free_graph(50, m=1, seed=0).greedy_coloring().max()) + 1 <= 3
+    # complete graph needs p colors -> auto dispatch falls back to sequential
+    assert int(C.complete_graph(6).greedy_coloring().max()) + 1 == 6
+
+
+def test_chromatic_gibbs_matches_exact_marginals():
+    """Chromatic Gibbs must hit the exact singleton/pair moments (p=9)."""
+    g = C.grid_graph(3, 3)
+    m = C.random_model(g, 0.4, 0.3, jax.random.PRNGKey(5))
+    mu, _ = C.exact_moments(g, m.theta)
+    n = 6000
+    Xc = C.chromatic_gibbs_sample(m, n, jax.random.PRNGKey(6),
+                                  burnin=300, thin=3)
+    emp = np.mean(np.asarray(C.suff_stats(g, Xc)), axis=0)
+    # MC tolerance ~4 sigma: se <= 1/sqrt(n) per +-1 statistic
+    assert np.max(np.abs(emp - np.asarray(mu))) < 4.5 / np.sqrt(n)
+
+
+def test_chromatic_matches_sequential_marginals():
+    """Both Gibbs schedules target the same stationary law (p=12)."""
+    g = C.scale_free_graph(12, m=1, seed=2)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(7))
+    n = 5000
+    Xs = C.gibbs_sample(m, n, jax.random.PRNGKey(8), burnin=300, thin=3,
+                        method="sequential")
+    Xc = C.gibbs_sample(m, n, jax.random.PRNGKey(9), burnin=300, thin=3,
+                        method="chromatic")
+    es = np.mean(np.asarray(C.suff_stats(g, Xs)), axis=0)
+    ec = np.mean(np.asarray(C.suff_stats(g, Xc)), axis=0)
+    assert np.max(np.abs(es - ec)) < 6.0 / np.sqrt(n)
+
+
+def test_gibbs_auto_dispatch_runs():
+    g_sparse = C.grid_graph(3, 3)
+    g_dense = C.complete_graph(6)
+    for g in (g_sparse, g_dense):
+        m = C.random_model(g, 0.3, 0.2, jax.random.PRNGKey(11))
+        X = C.gibbs_sample(m, 100, jax.random.PRNGKey(12), burnin=20, thin=1)
+        assert X.shape == (100, g.p)
+        assert set(np.unique(np.asarray(X))) <= {-1.0, 1.0}

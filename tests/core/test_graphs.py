@@ -1,6 +1,7 @@
 """Structure tests + hypothesis property tests for graph utilities."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core as C
