@@ -1,50 +1,35 @@
 """Communication-cost table (the paper's motivating claim, Sec. 1/3).
 
-Counts scalars transmitted per sensor-network method on a given graph:
-  one-step consensus    : each node sends estimate (+ weight) per shared param
-  Linear-Opt (Prop 4.6) : adds the secondary round shipping s^i_alpha samples
-  ADMM (K iters)        : K rounds of local-estimate exchange
-  centralized           : ship the raw dataset to a fusion center
-
-These are exact combinatorial counts (no simulation), matching the paper's
-qualitative ranking: one-step << ADMM << centralized, Linear-Opt n-dependent.
+The exact combinatorial accounting lives in :mod:`repro.stream.costs` and is
+shared with the streaming simulator's measured scalar counters — one full
+broadcast round of the streaming engine transmits exactly the one-step row
+of this table (asserted in ``tests/stream``). This module evaluates the
+table on reference graphs, prints CSV rows, and writes ``BENCH_comm.json``.
 """
 from __future__ import annotations
 
-import numpy as np
-
 import repro.core as C
-from .util import emit, scale
-
-
-def comm_costs(g: C.Graph, n: int, admm_iters: int) -> dict:
-    owners = C.param_owners(g)
-    shared = [a for a, own in owners.items() if len(own) > 1]
-    beta_sizes = [len(g.beta(i)) for i in range(g.p)]
-    # estimates travel once per shared param per owner; weights double it
-    one_step = sum(len(owners[a]) for a in shared)
-    diag = 2 * one_step
-    # Prop 4.6 secondary round: each node ships n influence samples per
-    # shared parameter it owns
-    linear_opt = diag + n * one_step
-    admm = admm_iters * 2 * sum(beta_sizes)      # send theta^i, get theta_bar
-    central = n * g.p                            # raw data to fusion center
-    return dict(one_step_linear=one_step, diagonal_or_max=diag,
-                linear_opt=linear_opt, admm=admm, centralized=central)
+from repro.stream.costs import comm_costs
+from .util import emit, emit_json, scale
 
 
 def main() -> None:
     n = scale(1000, 10000)
+    admm_iters = 20
+    payload = {"config": {"n": n, "admm_iters": admm_iters}, "graphs": {}}
     for name, g in [
         ("star10", C.star_graph(10)),
         ("grid4x4", C.grid_graph(4, 4)),
         ("scalefree100", C.scale_free_graph(100, m=1, seed=0)),
         ("euclidean100", C.euclidean_graph(100, radius=0.15, seed=0)),
     ]:
-        c = comm_costs(g, n, admm_iters=20)
+        c = comm_costs(g, n, admm_iters=admm_iters)
+        payload["graphs"][name] = dict(c, p=g.p, m=g.m)
         emit(f"comm_cost_{name}", 0.0,
              " ".join(f"{k}={v}" for k, v in c.items()))
-        assert c["diagonal_or_max"] < c["admm"] < c["centralized"] or True
+        assert c["diagonal_or_max"] < c["admm"] < c["centralized"], \
+            f"{name}: paper's qualitative cost ranking violated"
+    emit_json("BENCH_comm.json", payload)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ MODULES = (
     "fig3_grid",     # Fig 3: grid efficiency, MSE vs n, ADMM convergence
     "fig4_large",    # Fig 4: 100-node scale-free + Euclidean
     "comm_cost",     # Sec. 1/3 communication-cost table
+    "anytime_stream",  # streaming any-time engine over a lossy network
     "kernels_bench",  # Pallas kernel oracles
     "arch_steps",    # assigned-architecture step smoke timings
     "roofline",      # deliverable (g): dry-run derived roofline table

@@ -1,0 +1,52 @@
+"""Streaming sensors: the paper's any-time claim as a live system.
+
+A 3x4 grid of sensors observes an Ising field. Samples trickle in at
+heterogeneous Poisson rates, sensors re-fit their local conditional-
+likelihood estimators incrementally (warm-started batched Newton over a
+shape-stable buffer), and estimates of shared couplings travel to neighbors
+over a lossy, laggy message network. Query the network at any round and you
+get a consistent estimate whose error shrinks as data and messages flow —
+while total communication stays a tiny fraction of centralizing the data.
+
+    PYTHONPATH=src python examples/streaming_sensors.py
+"""
+import jax
+import numpy as np
+
+import repro.core as C
+import repro.stream as S
+
+
+def main():
+    g = C.grid_graph(3, 4)
+    model = C.random_model(g, sigma_pair=0.5, sigma_single=0.5,
+                           key=jax.random.PRNGKey(0))
+    theta_star = np.asarray(model.theta)
+    pool = np.asarray(C.exact_sample(model, 4000, jax.random.PRNGKey(1)))
+
+    rounds = 15
+    net = S.NetworkConfig(drop_prob=0.2, delay=1, jitter=1, seed=42)
+    sim = S.StreamSimulator(
+        g, pool, scheme="diagonal", theta_star=theta_star,
+        network=net, arrivals=S.ArrivalSpec(kind="poisson", rate=40.0),
+        capacity=256, seed=7)
+    res = sim.run(rounds, record_score=True)
+
+    central = S.comm_costs(g, int(res.samples_seen[-1]), 20)["centralized"]
+    print(f"{'round':>5s} {'n/node':>7s} {'scalars':>8s} {'stale':>6s} "
+          f"{'|score|':>8s} {'MSE':>8s}")
+    for k in range(len(res.rounds)):
+        print(f"{res.rounds[k]:5d} {res.samples_seen[k]:7.0f} "
+              f"{res.scalars_sent[k]:8d} {res.staleness[k]:6.2f} "
+              f"{res.score_norm[k]:8.4f} {res.err[k]:8.4f}")
+
+    print(f"\nany-time query, round 5:  MSE="
+          f"{C.mse(res.estimate_at(5), theta_star):.4f}")
+    print(f"any-time query, round {rounds}: MSE="
+          f"{C.mse(res.estimate_at(rounds), theta_star):.4f}")
+    print(f"\nscalars communicated: {res.scalars_sent[-1]} "
+          f"(centralizing the same data: {central})")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,9 @@
 (Liu & Ihler, ICML 2012) — faithful reproduction (repro.core) plus the
 technique lifted to TPU-pod scale (repro.train.consensus) over a 10-arch
 model zoo (repro.models / repro.configs), with Pallas TPU kernels
-(repro.kernels) and a multi-pod dry-run + roofline harness (repro.launch).
+(repro.kernels), a streaming any-time engine + event-driven sensor-network
+simulator (repro.stream), and a multi-pod dry-run + roofline harness
+(repro.launch).
 
 See README.md for entry points, DESIGN.md for the paper->TPU mapping, and
 EXPERIMENTS.md for the validation and performance record.

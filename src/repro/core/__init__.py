@@ -12,7 +12,7 @@ from .estimators import (LocalFit, newton_maximize, fit_local_cl,
                          fit_all_local, fit_all_local_loop, fit_mple,
                          fit_mle_exact, node_design)
 from .batched import (DegreeBucket, degree_buckets, fit_all_local_batched,
-                      bucket_compile_count)
+                      prox_update_batched, bucket_compile_count)
 from .asymptotics import (ExactLocal, exact_local, exact_locals, param_owners,
                           free_indices, exact_consensus_variance,
                           exact_joint_mple_variance, exact_mle_variance,

@@ -28,13 +28,21 @@ vanish and the Hessian is block-diagonal with a ``-1`` placeholder on padded
 coordinates; the Newton direction on real coordinates is untouched.
 
 Public entry points: :func:`degree_buckets`, :func:`fit_all_local_batched`,
-and the per-bucket compile-count probe :func:`bucket_compile_count`.
+the streaming-ADMM primal update :func:`prox_update_batched`, and the
+per-bucket compile-count probe :func:`bucket_compile_count`.
+
+Streaming support (used by :mod:`repro.stream`): ``sample_weight`` lets every
+node weight the shared sample pool independently — a 0/1 prefix mask per node
+expresses "sensor i has only seen its first n_i rows" without changing array
+shapes, so a growing stream stays on one compiled program per (bucket,
+capacity); ``warm_start`` seeds Newton at the previous fit so incremental
+re-fits converge in a couple of damped steps instead of from scratch.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +50,37 @@ import numpy as np
 
 from .estimators import LocalFit
 from .graphs import Graph
+
+# Backtracking candidates for clipped Newton steps, largest first so ties at
+# the optimum keep the full step; 0 is the "every direction hurts" escape.
+_LS_CAND = np.array([1.0, 0.5, 0.25, 0.125, 0.0625, 0.015625, 0.0],
+                    dtype=np.float32)
+# Gradient-direction scales tried alongside the Newton candidates: when the
+# Hessian is near-singular (saturated fits) the Newton direction can be
+# useless at every scale, but a small enough ascent step along the gradient
+# of a concave criterion always improves off-optimum — so nodes cannot get
+# permanently stuck.
+_LS_GRAD = np.array([1.0, 0.25, 0.0625, 0.015625, 0.00390625],
+                    dtype=np.float32)
+
+
+def _backtrack_step(objective, W, dirn, g, max_step):
+    """Pick, per node, the best step among scaled Newton and gradient
+    candidates by the concave per-node ``objective``; returns (k, d) steps.
+
+    Convention matches the solvers: the update is ``W - step``, so Newton
+    candidates are ``s * dirn`` and ascent candidates ``-s * g_unit``.
+    """
+    k = W.shape[0]
+    ncand = jnp.asarray(_LS_CAND, W.dtype)[:, None, None] * dirn[None]
+    gnorm = jnp.linalg.norm(g, axis=1, keepdims=True)
+    gdir = -g * (max_step / (gnorm + 1e-30))
+    gcand = jnp.asarray(_LS_GRAD, W.dtype)[:, None, None] * gdir[None]
+    steps = jnp.concatenate([ncand, gcand], axis=0)          # (c, k, d)
+    vals = objective(W[None] - steps)
+    vals = jnp.where(jnp.isfinite(vals), vals, -jnp.inf)
+    best = jnp.argmax(vals, axis=0)                          # (k,)
+    return steps[best, jnp.arange(k)]
 
 
 def _pad_degree(deg: int) -> int:
@@ -125,29 +164,13 @@ def _gauss_jordan_solve(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return M[:, :, d:]
 
 
-@functools.partial(jax.jit, static_argnames=("include_singleton", "n_iter"))
-def _solve_bucket(X, nodes, nbrs, mask, offsets, include_singleton: bool,
-                  n_iter: int, tol: float = 2e-6,
-                  ridge: float = 1e-8, max_step: float = 5.0):
-    """Solve every node of one degree bucket in a single XLA program.
+def _bucket_design(X, nodes, nbrs, mask, offsets, include_singleton: bool):
+    """Build the (k, d, n) bucket design + per-node targets and masks.
 
-    X: (n, p) samples; nodes: (k,); nbrs: (k, deg_pad); mask: (k, deg_pad);
-    offsets: (k,) fixed singleton thetas (used when include_singleton=False).
-
-    Designs live in (k, d, n) layout so the per-iteration Hessian is one
-    batched matmul contracting over the contiguous sample axis. The
-    curvature weights use the x in {-1,+1} identity
-    ``kappa = 4 sigma(2 eta) sigma(-2 eta) = r (2 x - r)``, which costs no
-    extra transcendentals beyond the residual ``r``. ``tol`` (on the damped
-    step's inf-norm) is chosen just above the float32 jitter floor: iterating
-    past it only bounces around the optimum, which is all the seed's fixed
-    40-iteration schedule does after convergence.
-
-    Returns (W, H, J, V, S) with leading bucket dimension k and parameter
-    dimension d = deg_pad (+1 with a free singleton); padded coordinates are
-    exactly zero in W and carry a ``-1`` placeholder diagonal in H.
+    Shared by the plain and proximal bucket solvers. Returns
+    ``(Zb, xi, base, cmask)``: stacked designs, node samples, fixed-singleton
+    offsets folded into ``base``, and the d-length coordinate mask.
     """
-    n = X.shape[0]
     # (k, deg_pad, n): gather neighbor columns, zero the padded ones
     Zt = jnp.swapaxes(jnp.swapaxes(X[:, nbrs], 0, 1), 1, 2) * mask[:, :, None]
     xi = X[:, nodes].T                                       # (k, n)
@@ -162,7 +185,43 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, include_singleton: bool,
         Zb = Zt
         cmask = mask
         base = offsets[:, None] * jnp.ones_like(xi)
+    return Zb, xi, base, cmask
 
+
+@functools.partial(jax.jit,
+                   static_argnames=("include_singleton", "n_iter", "weighted",
+                                    "guarded"))
+def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
+                  include_singleton: bool, n_iter: int, weighted: bool = False,
+                  guarded: bool = False, tol: float = 2e-6,
+                  ridge: float = 1e-8, max_step: float = 5.0):
+    """Solve every node of one degree bucket in a single XLA program.
+
+    X: (n, p) samples; nodes: (k,); nbrs: (k, deg_pad); mask: (k, deg_pad);
+    offsets: (k,) fixed singleton thetas (used when include_singleton=False);
+    W0: (k, d) Newton warm start (zeros for a cold fit); sw: (k, n) per-node
+    sample weights, only read when ``weighted`` — a 0/1 prefix mask lets each
+    node of the bucket see a different prefix of a shared streaming pool at
+    fixed array shapes.
+
+    Designs live in (k, d, n) layout so the per-iteration Hessian is one
+    batched matmul contracting over the contiguous sample axis. The
+    curvature weights use the x in {-1,+1} identity
+    ``kappa = 4 sigma(2 eta) sigma(-2 eta) = r (2 x - r)``, which costs no
+    extra transcendentals beyond the residual ``r``. ``tol`` (on the damped
+    step's inf-norm) is chosen just above the float32 jitter floor: iterating
+    past it only bounces around the optimum, which is all the seed's fixed
+    40-iteration schedule does after convergence.
+
+    Returns (W, H, J, V, S) with leading bucket dimension k and parameter
+    dimension d = deg_pad (+1 with a free singleton); padded coordinates are
+    exactly zero in W and carry a ``-1`` placeholder diagonal in H. A node
+    whose weights sum to zero (nothing observed yet) stays at W0 untouched by
+    data: its gradient vanishes and the guarded denominator keeps it finite.
+    """
+    n = X.shape[0]
+    Zb, xi, base, cmask = _bucket_design(X, nodes, nbrs, mask, offsets,
+                                         include_singleton)
     k, d, _ = Zb.shape
     ZbT = jnp.swapaxes(Zb, 1, 2)                             # (k, n, d)
     eye = jnp.eye(d, dtype=Zb.dtype)
@@ -170,12 +229,28 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, include_singleton: bool,
     # uniformly negative definite without touching the real block's
     # Newton direction.
     pad_diag = (1.0 - cmask)[:, :, None] * eye[None, :, :]
+    if weighted:
+        denom = jnp.maximum(jnp.sum(sw, axis=1), 1.0)        # (k,)
+    else:
+        denom = jnp.full((k,), float(n), Zb.dtype)
 
     def score_curvature(W):
         eta = base + jnp.einsum("kdn,kd->kn", Zb, W)
         r = 2.0 * xi * jax.nn.sigmoid(-2.0 * xi * eta)       # dl/deta
         kap = r * (2.0 * xi - r)
+        if weighted:
+            r = r * sw
+            kap = kap * sw
         return r, kap
+
+    def objective(Ws):
+        # per-node average conditional loglik for a (c, k, d) stack of
+        # candidate parameter points; returns (c, k)
+        etas = base[None] + jnp.einsum("kdn,ckd->ckn", Zb, Ws)
+        ll = jax.nn.log_sigmoid(2.0 * xi[None] * etas)
+        if weighted:
+            ll = ll * sw[None]
+        return ll.sum(axis=2) / denom[None, :]
 
     def cond(carry):
         _, it, delta = carry
@@ -184,27 +259,50 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, include_singleton: bool,
     def newton_step(carry):
         W, it, _ = carry
         r, kap = score_curvature(W)
-        g = jnp.einsum("kdn,kn->kd", Zb, r) / n
-        H = -(Zb * kap[:, None, :]) @ ZbT / n \
+        g = jnp.einsum("kdn,kn->kd", Zb, r) / denom[:, None]
+        H = -(Zb * kap[:, None, :]) @ ZbT / denom[:, None, None] \
             - ridge * eye[None, :, :] - pad_diag
         dirn = _gauss_jordan_solve(H, g[..., None])[..., 0]  # (k, d)
+        # an untrusted direction: non-finite (curvature underflow at a
+        # saturated point makes the solve blow up) or clipped (outside
+        # Newton's trust region). NaN directions are zeroed so they cannot
+        # poison the bucket-wide convergence check.
+        finite = jnp.all(jnp.isfinite(dirn), axis=1, keepdims=True)
+        dirn = jnp.where(finite, dirn, 0.0)
         norm = jnp.linalg.norm(dirn, axis=1, keepdims=True)
+        untrusted = (norm > max_step) | ~finite
         dirn = jnp.where(norm > max_step,
                          dirn * (max_step / (norm + 1e-30)), dirn)
-        # a node that NaN'd (degenerate data, quasi-separation) must not
-        # poison the bucket-wide convergence check and freeze its siblings:
-        # treat non-finite steps as converged — NaN is absorbing anyway.
-        delta = jnp.max(jnp.where(jnp.isfinite(dirn), jnp.abs(dirn), 0.0))
-        return W - dirn, it + 1, delta
+        if guarded:
+            # An untrusted direction means the quadratic model failed there
+            # — a full clipped step from a saturated warm start can land
+            # where the next clipped step points exactly back (a period-2
+            # cycle), and a near-singular Hessian can make the direction
+            # useless at any scale. Guard with a per-node backtracking
+            # search over Newton + gradient candidates on the concave CL
+            # objective. Only warm-started solves compile this branch: the
+            # pathologies need a saturated starting point, and cold starts
+            # from zero (the benchmarked hot path) never produce one.
+            step = jax.lax.cond(
+                jnp.any(untrusted),
+                lambda: _backtrack_step(objective, W, dirn, g, max_step),
+                lambda: dirn)
+        else:
+            step = dirn
+        delta = jnp.max(jnp.abs(step))
+        return W - step, it + 1, delta
 
-    W0 = jnp.zeros((k, d), Zb.dtype)
     W, _, _ = jax.lax.while_loop(cond, newton_step, (W0, 0, jnp.inf))
 
-    # sandwich diagnostics at W_hat (closed forms again; no autodiff)
+    # sandwich diagnostics at W_hat (closed forms again; no autodiff).
+    # Under 0/1 weights the masked-out samples' scores are zeroed, so their
+    # rows of S are exactly zero and J/H average only the live samples;
+    # consumers that normalize influence columns by the row count (the
+    # "optimal" combiner) should use the live count, not the buffer size.
     r, kap = score_curvature(W)
     G = Zb * r[:, None, :]                                   # (k, d, n)
-    J = G @ jnp.swapaxes(G, 1, 2) / n
-    H = (Zb * kap[:, None, :]) @ ZbT / n                     # = -hessian(fun)
+    J = G @ jnp.swapaxes(G, 1, 2) / denom[:, None, None]
+    H = (Zb * kap[:, None, :]) @ ZbT / denom[:, None, None]  # = -hessian(fun)
     Hreg = H + 1e-9 * eye[None, :, :] + pad_diag
     Hinv = _gauss_jordan_solve(Hreg, jnp.broadcast_to(eye, Hreg.shape))
     V = Hinv @ J @ jnp.swapaxes(Hinv, 1, 2)
@@ -223,36 +321,232 @@ def bucket_compile_count() -> int:
     return int(probe()) if callable(probe) else -1
 
 
+def _bucket_weights(sample_weight, nodes: np.ndarray, n: int):
+    """Per-bucket (k, n) weight rows from a global (n,) or per-node (p, n)
+    sample-weight array; ``None`` means unweighted."""
+    if sample_weight is None:
+        return None
+    sample_weight = jnp.asarray(sample_weight)
+    if sample_weight.ndim == 1:
+        return jnp.broadcast_to(sample_weight[None, :], (len(nodes), n))
+    return sample_weight[jnp.asarray(nodes)]
+
+
+def _bucket_warm_start(warm_start, b: DegreeBucket, d: int, lead: int,
+                       dtype) -> jnp.ndarray:
+    """Stack per-node warm-start thetas into the bucket's padded (k, d)."""
+    W0 = np.zeros((len(b.nodes), d), dtype=np.float32)
+    if warm_start is not None:
+        degs = b.mask.sum(axis=1).astype(np.int64)
+        for row, i in enumerate(b.nodes):
+            w = warm_start[int(i)]
+            if w is None:
+                continue
+            di = lead + int(degs[row])
+            W0[row, :di] = np.asarray(w, dtype=np.float32)[:di]
+    return jnp.asarray(W0, dtype=dtype)
+
+
 def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
                           include_singleton: bool = True,
                           theta_fixed: Optional[jnp.ndarray] = None,
-                          n_iter: int = 40) -> List[LocalFit]:
+                          n_iter: int = 40,
+                          sample_weight: Optional[jnp.ndarray] = None,
+                          warm_start: Optional[Sequence] = None
+                          ) -> List[LocalFit]:
     """Fit all p local CL estimators via degree-bucketed batched solves.
 
     Drop-in replacement for the per-node loop: returns the same
     ``List[LocalFit]`` (ordered by node), with per-node results trimmed back
     to the node's true degree.
+
+    Streaming extensions:
+      sample_weight — ``(n,)`` shared or ``(p, n)`` per-node 0/1 observation
+        masks over the sample pool; rows with weight 0 are invisible to the
+        fit (so a zero-padded, capacity-doubling buffer compiles once per
+        capacity, not once per sample count). Weights are meant to be masks;
+        the sandwich J uses the masked scores directly.
+      warm_start — optional length-p sequence of previous per-node thetas
+        (``None`` entries allowed) used to seed Newton; incremental re-fits
+        then converge in a couple of damped steps.
     """
     if theta_fixed is None:
         theta_fixed = jnp.zeros(graph.n_params, X.dtype)
     theta_fixed = jnp.asarray(theta_fixed)
+    n = X.shape[0]
+    lead = 1 if include_singleton else 0
 
     out: List[Optional[LocalFit]] = [None] * graph.p
     for b in degree_buckets(graph):
         offsets = theta_fixed[jnp.asarray(b.nodes)]
+        d = b.deg_pad + lead
+        sw = _bucket_weights(sample_weight, b.nodes, n)
+        W0 = _bucket_warm_start(warm_start, b, d, lead, X.dtype)
+        if sw is None:
+            sw = jnp.ones((1, 1), X.dtype)   # placeholder, never read
         W, H, J, V, S = _solve_bucket(
             X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
-            jnp.asarray(b.mask), offsets, include_singleton, n_iter)
+            jnp.asarray(b.mask), offsets, W0, sw, include_singleton, n_iter,
+            sample_weight is not None, warm_start is not None)
         W, H, J, V, S = (np.asarray(W), np.asarray(H), np.asarray(J),
                          np.asarray(V), np.asarray(S))
-        lead = 1 if include_singleton else 0
         degs = b.mask.sum(axis=1).astype(np.int64)
         for row, i in enumerate(b.nodes):
             i = int(i)
-            d = lead + int(degs[row])
+            di = lead + int(degs[row])
             out[i] = LocalFit(
                 i=i, beta=graph.beta(i, include_singleton),
-                theta=W[row, :d].copy(), H=H[row, :d, :d].copy(),
-                J=J[row, :d, :d].copy(), V=V[row, :d, :d].copy(),
-                s=S[row, :, :d].copy())
+                theta=W[row, :di].copy(), H=H[row, :di, :di].copy(),
+                J=J[row, :di, :di].copy(), V=V[row, :di, :di].copy(),
+                s=S[row, :, :di].copy())
+    return out  # type: ignore[return-value]
+
+
+# ------------------------------------------------------- proximal updates
+@functools.partial(jax.jit,
+                   static_argnames=("include_singleton", "n_iter", "weighted"))
+def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
+                       include_singleton: bool, n_iter: int,
+                       weighted: bool = False, tol: float = 2e-6,
+                       ridge: float = 1e-8, max_step: float = 5.0):
+    """ADMM primal update for a whole degree bucket in one XLA program.
+
+    Maximizes, per node,  ``l^i(w) - lam'w - sum_a rho_a (w_a - tbar_a)^2/2``
+    (the objective of :func:`repro.core.admm._prox_solve`) with the same
+    closed-form Newton machinery as :func:`_solve_bucket`: the prox terms
+    only shift the gradient by ``-lam - rho*(w - tbar)`` and the Hessian by
+    ``-diag(rho)``, so the bucket stays uniformly negative definite. lam,
+    rho, tbar: (k, d) with zeros on padded coordinates. Returns W only.
+    """
+    n = X.shape[0]
+    Zb, xi, base, cmask = _bucket_design(X, nodes, nbrs, mask, offsets,
+                                         include_singleton)
+    k, d, _ = Zb.shape
+    ZbT = jnp.swapaxes(Zb, 1, 2)
+    eye = jnp.eye(d, dtype=Zb.dtype)
+    pad_diag = (1.0 - cmask)[:, :, None] * eye[None, :, :]
+    rho_diag = rho[:, :, None] * eye[None, :, :]
+    if weighted:
+        denom = jnp.maximum(jnp.sum(sw, axis=1), 1.0)
+    else:
+        denom = jnp.full((k,), float(n), Zb.dtype)
+
+    def objective(Ws):
+        # (c, k): penalized criterion for a stack of candidate points
+        etas = base[None] + jnp.einsum("kdn,ckd->ckn", Zb, Ws)
+        ll = jax.nn.log_sigmoid(2.0 * xi[None] * etas)
+        if weighted:
+            ll = ll * sw[None]
+        pen = (lam[None] * Ws).sum(axis=2) \
+            + 0.5 * (rho[None] * (Ws - tbar[None]) ** 2).sum(axis=2)
+        return ll.sum(axis=2) / denom[None, :] - pen
+
+    def cond(carry):
+        _, it, delta = carry
+        return (it < n_iter) & (delta > tol)
+
+    def newton_step(carry):
+        W, it, _ = carry
+        eta = base + jnp.einsum("kdn,kd->kn", Zb, W)
+        r = 2.0 * xi * jax.nn.sigmoid(-2.0 * xi * eta)
+        kap = r * (2.0 * xi - r)
+        if weighted:
+            r = r * sw
+            kap = kap * sw
+        g = jnp.einsum("kdn,kn->kd", Zb, r) / denom[:, None] \
+            - lam - rho * (W - tbar)
+        H = -(Zb * kap[:, None, :]) @ ZbT / denom[:, None, None] \
+            - rho_diag - ridge * eye[None, :, :] - pad_diag
+        dirn = _gauss_jordan_solve(H, g[..., None])[..., 0]
+        finite = jnp.all(jnp.isfinite(dirn), axis=1, keepdims=True)
+        dirn = jnp.where(finite, dirn, 0.0)
+        norm = jnp.linalg.norm(dirn, axis=1, keepdims=True)
+        untrusted = (norm > max_step) | ~finite
+        dirn = jnp.where(norm > max_step,
+                         dirn * (max_step / (norm + 1e-30)), dirn)
+
+        # same saturation guard as _solve_bucket, on the penalized objective
+        step = jax.lax.cond(
+            jnp.any(untrusted),
+            lambda: _backtrack_step(objective, W, dirn, g, max_step),
+            lambda: dirn)
+        delta = jnp.max(jnp.abs(step))
+        return W - step, it + 1, delta
+
+    W, _, _ = jax.lax.while_loop(cond, newton_step, (W0, 0, jnp.inf))
+    return W
+
+
+def prox_update_batched(graph: Graph, X: jnp.ndarray,
+                        theta_bar: np.ndarray,
+                        lambdas: Sequence[np.ndarray],
+                        rhos: Sequence[np.ndarray],
+                        thetas0: Optional[Sequence[np.ndarray]] = None,
+                        include_singleton: bool = True,
+                        theta_fixed: Optional[jnp.ndarray] = None,
+                        sample_weight: Optional[jnp.ndarray] = None,
+                        n_iter: int = 15) -> List[np.ndarray]:
+    """Batched ADMM primal update across all nodes (one solve per bucket).
+
+    Per-node inputs follow :func:`repro.core.admm.admm_mple`: ``lambdas`` /
+    ``rhos`` are length-p lists of ``beta_i``-length vectors, ``theta_bar``
+    is the full flat consensus iterate — or, for asynchronous streaming
+    where every node holds its own possibly-stale consensus view, a
+    length-p list of ``beta_i``-length vectors. ``thetas0`` are optional
+    warm starts (defaults to the consensus view restricted to ``beta_i``).
+    Supports the same ``sample_weight`` masks as
+    :func:`fit_all_local_batched`, which is what lets the streaming engine
+    run ADMM rounds over a growing buffer without recompiling. Returns the
+    updated per-node theta vectors.
+    """
+    if theta_fixed is None:
+        theta_fixed = jnp.zeros(graph.n_params, X.dtype)
+    theta_fixed = jnp.asarray(theta_fixed)
+    per_node_bar = isinstance(theta_bar, (list, tuple))
+    if not per_node_bar:
+        theta_bar = np.asarray(theta_bar)
+    n = X.shape[0]
+    lead = 1 if include_singleton else 0
+
+    out: List[Optional[np.ndarray]] = [None] * graph.p
+    for b in degree_buckets(graph):
+        k = len(b.nodes)
+        d = b.deg_pad + lead
+        degs = b.mask.sum(axis=1).astype(np.int64)
+        lam = np.zeros((k, d), dtype=np.float32)
+        rho = np.zeros((k, d), dtype=np.float32)
+        tbar = np.zeros((k, d), dtype=np.float32)
+        for row, i in enumerate(b.nodes):
+            i = int(i)
+            di = lead + int(degs[row])
+            lam[row, :di] = np.asarray(lambdas[i])[:di]
+            rho[row, :di] = np.asarray(rhos[i])[:di]
+            if per_node_bar:
+                tbar[row, :di] = np.asarray(theta_bar[i])[:di]
+            else:
+                beta = np.asarray(graph.beta(i, include_singleton))
+                tbar[row, :di] = theta_bar[beta][:di]
+        # warm-start at the previous iterate where given; nodes without one
+        # (thetas0 absent or a None entry) start at their consensus view
+        W0 = np.array(tbar, copy=True)
+        if thetas0 is not None:
+            for row, i in enumerate(b.nodes):
+                t0 = thetas0[int(i)]
+                if t0 is not None:
+                    di = lead + int(degs[row])
+                    W0[row, :di] = np.asarray(t0, dtype=np.float32)[:di]
+        W0 = jnp.asarray(W0, dtype=X.dtype)
+        sw = _bucket_weights(sample_weight, b.nodes, n)
+        if sw is None:
+            sw = jnp.ones((1, 1), X.dtype)
+        offsets = theta_fixed[jnp.asarray(b.nodes)]
+        W = _solve_bucket_prox(
+            X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
+            jnp.asarray(b.mask), offsets, W0, sw,
+            jnp.asarray(lam), jnp.asarray(rho), jnp.asarray(tbar),
+            include_singleton, n_iter, sample_weight is not None)
+        W = np.asarray(W)
+        for row, i in enumerate(b.nodes):
+            di = lead + int(degs[row])
+            out[int(i)] = W[row, :di].copy()
     return out  # type: ignore[return-value]

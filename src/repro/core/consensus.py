@@ -22,6 +22,11 @@ from .graphs import Graph
 
 SCHEMES = ("uniform", "diagonal", "optimal", "max", "matrix")
 
+#: estimates beyond this magnitude mark a diverged local fit
+#: (quasi-separation); shared with repro.stream's warm-start reset and
+#: message guards so streaming disqualifies owners exactly when combine does
+TRUST_RADIUS = 25.0
+
 
 def empirical_cross_cov(fits: List[LocalFit],
                         owners_a: List[Tuple[int, int]]) -> np.ndarray:
@@ -94,7 +99,8 @@ def combine(graph: Graph, fits: List[LocalFit], scheme: str,
         # deceptively tiny Vhat. Treat such owners as infinite-variance so
         # every weighting scheme zeroes them out; keep uniform truly uniform
         # only over sane owners.
-        bad = (~np.isfinite(est)) | (~np.isfinite(diag)) | (np.abs(est) > 25.0)
+        bad = (~np.isfinite(est)) | (~np.isfinite(diag)) \
+            | (np.abs(est) > TRUST_RADIUS)
         est = np.where(bad, 0.0, est)
         all_bad = bad.all(axis=1)
 

@@ -112,3 +112,23 @@ def ising_cl_score(x, theta, mask, bias, *, interpret: bool = True):
         interpret=interpret,
     )(xp, tp, mp, bp)
     return eta[:n, :p], r[:n, :p], s[:p, :p]
+
+
+def ising_cl_score_padded(x_pad, theta, mask, bias, n_seen: int, *,
+                          interpret: bool = True):
+    """Fused score statistics over a zero-padded streaming buffer.
+
+    ``x_pad`` is a capacity-doubling sample buffer whose rows past ``n_seen``
+    are all-zero padding. Zero rows are exactly invisible to the score
+    pipeline (``x = 0`` makes ``r = 2 x sigma(-2 x eta) = 0``), so the only
+    correction needed is the Gram normalizer: the kernel divides by the
+    buffer capacity, we rescale to the live sample count. Keeping the buffer
+    shape fixed between capacity doublings means a growing stream re-uses
+    one compiled kernel instead of one per sample count.
+
+    Returns (eta, r, S) like :func:`ising_cl_score`, with ``S`` normalized
+    by ``n_seen`` and rows of ``r`` past ``n_seen`` guaranteed zero.
+    """
+    eta, r, S = ising_cl_score(x_pad, theta, mask, bias, interpret=interpret)
+    scale = x_pad.shape[0] / max(int(n_seen), 1)
+    return eta, r, S * scale

@@ -1,0 +1,25 @@
+"""Streaming any-time estimation engine + event-driven sensor-network
+simulator.
+
+The paper's headline claims — any-time behavior of consensus iterates and
+low communication cost (Sec. 1, Sec. 3, Thm 3.1) — become measurable system
+properties here: samples arrive at sensors over time (:class:`ArrivalSpec`),
+per-node online estimators re-fit incrementally by warm-starting the batched
+Newton-IRLS engine over a shape-stable sample buffer
+(:class:`StreamingEstimator`), estimates flow over an explicit lossy/laggy
+message network (:class:`Network`), and the event-driven
+:class:`StreamSimulator` traces error-vs-samples-seen and
+error-vs-scalars-communicated trajectories queryable at any round via
+``StreamResult.estimate_at(t)``.
+
+Communication accounting (:mod:`repro.stream.costs`) is shared with
+``benchmarks/comm_cost.py`` so the simulator's measured scalar counts and
+the combinatorial table agree exactly.
+"""
+from .buffer import SampleBuffer
+from .costs import (SCHEME_SCALARS_PER_PARAM, admm_message_scalars,
+                    comm_costs, one_step_message_scalars)
+from .network import Message, Network, NetworkConfig
+from .online import StreamingEstimator, pseudo_score
+from .simulator import (ONE_STEP_SCHEMES, ArrivalSpec, StreamResult,
+                        StreamSimulator)

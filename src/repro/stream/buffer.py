@@ -1,0 +1,70 @@
+"""Shape-stable growing sample buffer for streaming estimation.
+
+JAX recompiles per distinct array shape, so a naive "re-fit on X[:n]" stream
+pays one XLA compile per sample count. The buffer instead zero-pads to a
+capacity that doubles on overflow: every consumer sees a (capacity, p) array
+whose shape changes only O(log n) times over the whole stream, and expresses
+"only the first n rows are real" with 0/1 prefix masks (which the batched
+engine and the fused score kernel treat exactly — see
+``repro.core.batched`` and ``repro.kernels.ising_cl.score``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SampleBuffer:
+    """Append-only (capacity, p) sample store with power-of-two growth."""
+
+    def __init__(self, p: int, capacity: int = 64,
+                 dtype=np.float32) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be positive")
+        self._X = np.zeros((int(capacity), int(p)), dtype=dtype)
+        self.n = 0
+
+    @property
+    def p(self) -> int:
+        return self._X.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self._X.shape[0]
+
+    @property
+    def data(self) -> np.ndarray:
+        """The full zero-padded (capacity, p) array (live view, do not
+        mutate)."""
+        return self._X
+
+    @property
+    def rows(self) -> np.ndarray:
+        """Only the real samples, shape (n, p)."""
+        return self._X[: self.n]
+
+    def append(self, rows) -> None:
+        rows = np.asarray(rows, dtype=self._X.dtype)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        if rows.shape[1] != self.p:
+            raise ValueError(f"expected {self.p} columns, got {rows.shape}")
+        need = self.n + rows.shape[0]
+        cap = self.capacity
+        if need > cap:
+            while cap < need:
+                cap *= 2
+            grown = np.zeros((cap, self.p), dtype=self._X.dtype)
+            grown[: self.n] = self._X[: self.n]
+            self._X = grown
+        self._X[self.n: need] = rows
+        self.n = need
+
+    def prefix_masks(self, counts: np.ndarray) -> np.ndarray:
+        """(len(counts), capacity) 0/1 masks: row i covers the first
+        ``counts[i]`` samples. This is how heterogeneous per-sensor arrival
+        counts over the shared pool reach the weighted batched engine."""
+        counts = np.asarray(counts, dtype=np.int64)
+        if np.any(counts > self.n):
+            raise ValueError("count exceeds samples in buffer")
+        idx = np.arange(self.capacity, dtype=np.int64)
+        return (idx[None, :] < counts[:, None]).astype(np.float32)

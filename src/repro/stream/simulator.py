@@ -1,0 +1,376 @@
+"""Event-driven sensor-network simulator with an any-time query API.
+
+Discrete rounds; each round:
+
+  1. every sensor's arrival process delivers new samples from the
+     environment pool (heterogeneous rates supported);
+  2. the online estimator bank re-fits (warm-started, incremental) on a
+     configurable cadence — or, in ADMM mode, every node takes one proximal
+     primal step (Sec. 3.2) on its current data;
+  3. fresh estimates of *shared* parameters travel to neighbor sensors as
+     explicit messages through the :class:`~repro.stream.network.Network`
+     (link schedules, drops, delays — every scalar is counted);
+  4. each parameter's home sensor combines whatever owner estimates have
+     arrived (possibly stale) with the paper's one-step weighting schemes —
+     or, in ADMM mode, updates its consensus average and dual variable.
+
+``run`` records an error/communication trajectory; ``StreamResult.
+estimate_at(t)`` answers "what would the network report if queried at round
+t" — the any-time property as a measurable quantity rather than a theorem.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.asymptotics import free_indices, param_owners
+from ..core.batched import prox_update_batched
+from ..core.consensus import TRUST_RADIUS
+from ..core.graphs import Graph
+from .costs import admm_message_scalars, one_step_message_scalars
+from .network import Network, NetworkConfig
+from .online import StreamingEstimator
+
+ONE_STEP_SCHEMES = ("uniform", "diagonal", "max")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """Per-round, per-node sample arrival process.
+
+    kind — "fixed" (exactly ``rate`` samples each round), "poisson"
+    (Poisson(``rate``)), or "bursty" (a burst of ``burst`` samples with
+    probability ``rate/burst``, same mean as the others). ``rate`` may be a
+    scalar or a length-p tuple for sensors sampling at different speeds.
+    """
+    kind: str = "fixed"
+    rate: object = 1.0
+    burst: int = 8
+
+    def draw(self, rng: np.random.RandomState, p: int) -> np.ndarray:
+        rate = np.broadcast_to(np.asarray(self.rate, dtype=np.float64), (p,))
+        if self.kind == "fixed":
+            return np.round(rate).astype(np.int64)
+        if self.kind == "poisson":
+            return rng.poisson(rate).astype(np.int64)
+        if self.kind == "bursty":
+            prob = np.minimum(1.0, rate / max(self.burst, 1))
+            return (rng.binomial(1, prob) * self.burst).astype(np.int64)
+        raise ValueError(f"unknown arrival kind {self.kind!r}")
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Recorded trajectory of one simulation; the any-time query surface."""
+    rounds: np.ndarray        # (R,) round indices of the snapshots
+    theta: np.ndarray         # (R, n_params) combined estimate per snapshot
+    samples_seen: np.ndarray  # (R,) mean samples per node
+    samples_total: np.ndarray  # (R,) total samples across nodes
+    scalars_sent: np.ndarray  # (R,) cumulative scalars transmitted
+    err: Optional[np.ndarray]         # (R,) MSE vs theta_star (if given)
+    score_norm: Optional[np.ndarray]  # (R,) pseudo-likelihood score norm
+    staleness: np.ndarray     # (R,) mean age (rounds) of received views
+
+    def estimate_at(self, t: int) -> np.ndarray:
+        """Combined theta as of round ``t`` (last snapshot at or before t;
+        the earliest snapshot if queried before any)."""
+        idx = int(np.searchsorted(self.rounds, t, side="right")) - 1
+        return self.theta[max(idx, 0)]
+
+
+def _guard(est: float, w: float) -> bool:
+    """Same sanity guard as core.consensus.combine's bad-owner logic."""
+    return bool(np.isfinite(est) and np.isfinite(w)
+                and abs(est) <= TRUST_RADIUS)
+
+
+class StreamSimulator:
+    """Streaming distributed estimation over an explicit message network.
+
+    Parameters
+    ----------
+    graph : the conditional-independence graph == the sensor network.
+    pool : (N, p) pre-drawn environment samples; arrivals reveal prefixes.
+    estimator : "one_step" (online local fits + one-step consensus of
+        whatever has arrived) or "admm" (streaming ADMM: one warm-started
+        proximal round per simulator round over the growing buffers).
+    scheme : one-step weighting — "uniform", "diagonal", or "max". (The
+        paper's "optimal" scheme ships n influence samples per shared param
+        — see costs.comm_costs — and is deliberately not a streaming mode.)
+    """
+
+    def __init__(self, graph: Graph, pool, *,
+                 estimator: str = "one_step", scheme: str = "diagonal",
+                 theta_star: Optional[np.ndarray] = None,
+                 include_singleton: bool = True,
+                 theta_fixed: Optional[np.ndarray] = None,
+                 network: Optional[NetworkConfig] = None,
+                 arrivals: ArrivalSpec = ArrivalSpec(rate=8.0),
+                 refit_every: int = 1, newton_iters: int = 40,
+                 admm_rho: float = 1.0, capacity: int = 64,
+                 seed: int = 0) -> None:
+        if estimator not in ("one_step", "admm"):
+            raise ValueError(f"unknown estimator {estimator!r}")
+        if scheme not in ONE_STEP_SCHEMES:
+            raise ValueError(f"unknown streaming scheme {scheme!r}")
+        self.graph = graph
+        self.pool = np.asarray(pool, dtype=np.float32)
+        self.estimator = estimator
+        self.scheme = scheme
+        self.include_singleton = include_singleton
+        self.theta_fixed = (np.zeros(graph.n_params)
+                            if theta_fixed is None
+                            else np.asarray(theta_fixed, dtype=np.float64))
+        self.theta_star = (None if theta_star is None
+                           else np.asarray(theta_star, dtype=np.float64))
+        self.free = np.asarray(free_indices(graph, include_singleton))
+        self.arrivals = arrivals
+        self.refit_every = max(int(refit_every), 1)
+        self.newton_iters = newton_iters
+        self._arr_rng = np.random.RandomState(seed)
+
+        self.est = StreamingEstimator(graph, include_singleton, theta_fixed,
+                                      capacity=capacity, n_iter=newton_iters)
+        links = [(i, j) for (a, b) in graph.edges for (i, j) in ((a, b),
+                                                                (b, a))]
+        self.net = Network(links, network or NetworkConfig())
+        # params shared between the endpoints of each directed link: exactly
+        # the link's own edge coupling (beta_i ∩ beta_j, paper Sec. 3.1)
+        self._shared: Dict[Tuple[int, int], List[int]] = {}
+        owners = param_owners(graph, include_singleton)
+        for (i, j) in links:
+            self._shared[(i, j)] = sorted(
+                a for a, own in owners.items()
+                if {i, j} <= {node for node, _ in own})
+        self._owners = owners
+        # (dst, src) -> {"vals": {a: (est, weight)}, "version", "sent_round"}
+        self._view: Dict[Tuple[int, int], Dict] = {}
+        self._last_sent = {link: -1 for link in links}
+        self.round = 0
+        self._fed = 0
+
+        if estimator == "admm":
+            betas = [graph.beta(i, include_singleton) for i in range(graph.p)]
+            self._betas = betas
+            self._admm_theta = [self.theta_fixed[np.asarray(b)].copy()
+                                for b in betas]
+            self._admm_lam = [np.zeros(len(b)) for b in betas]
+            self._admm_rho = [np.full(len(b), float(admm_rho))
+                              for b in betas]
+            self._admm_bar = [self.theta_fixed[np.asarray(b)].copy()
+                              for b in betas]
+
+    # ------------------------------------------------------------- stepping
+    def step(self) -> None:
+        rnd = self.round
+        p = self.graph.p
+        # 1. arrivals: reveal new environment samples to each sensor
+        draw = self.arrivals.draw(self._arr_rng, p)
+        target = np.minimum(self.est.counts + draw, len(self.pool))
+        need = int(target.max()) if p else 0
+        if need > self._fed:
+            self.est.extend_pool(self.pool[self._fed: need])
+            self._fed = need
+        self.est.advance(target)
+
+        if self.estimator == "one_step":
+            self._step_one_step(rnd)
+        else:
+            self._step_admm(rnd)
+        self.round += 1
+
+    def _step_one_step(self, rnd: int) -> None:
+        # 2. incremental warm-started re-fit on the configured cadence
+        if rnd % self.refit_every == 0:
+            self.est.refit()
+        fits = self.est.fits
+        if fits is None:
+            return
+        # 3. broadcast fresh shared-parameter estimates over live links
+        for (i, j) in self.net.links:
+            shared = self._shared[(i, j)]
+            if not shared or self.est.versions[i] <= self._last_sent[(i, j)]:
+                continue
+            if self.est.counts[i] == 0:
+                continue            # no data yet -> nothing worth sending
+            if not self.net.link_active(rnd, i, j):
+                continue            # retry while the version stays fresh
+            vals = {}
+            n_i = int(self.est.counts[i])
+            for a in shared:
+                pos = fits[i].beta.index(a)
+                if self.scheme == "uniform":
+                    # weights are identically 1 and not transmitted — the
+                    # billed scalar count must match the information sent
+                    vals[a] = (float(fits[i].theta[pos]), 1.0)
+                else:
+                    # weight = the *estimator's* variance V_aa / n_i, so
+                    # owners with more data genuinely count for more
+                    # (Prop 4.7); the asymptotic V_aa alone is O(1) in n and
+                    # would weight a 10-sample sensor like a 10000-sample one
+                    vals[a] = (float(fits[i].theta[pos]),
+                               float(fits[i].V[pos, pos]) / n_i)
+            payload = {"vals": vals, "version": int(self.est.versions[i]),
+                       "sent_round": rnd}
+            if self.net.send(rnd, i, j, payload,
+                             one_step_message_scalars(len(shared),
+                                                      self.scheme)):
+                # a drop is only "paid for" — the update is still owed, so
+                # the link keeps retrying until a copy gets through
+                self._last_sent[(i, j)] = int(self.est.versions[i])
+        # 4. deliveries update the receiver's view of its peers
+        self._deliver_views(rnd)
+
+    def _step_admm(self, rnd: int) -> None:
+        # 2. one warm-started proximal primal round over the growing buffers
+        masks = self.est.buffer.prefix_masks(self.est.counts)
+        self._admm_theta = prox_update_batched(
+            self.graph, self.est.buffer.data,
+            [bar for bar in self._admm_bar],
+            self._admm_lam, self._admm_rho,
+            thetas0=self._admm_theta,
+            include_singleton=self.include_singleton,
+            theta_fixed=self.theta_fixed.astype(np.float32),
+            sample_weight=masks, n_iter=self.newton_iters)
+        # NaN or runaway primal iterates (degenerate small-n prox solves)
+        # would be absorbing through the warm start and the dual update —
+        # reset the offending coordinates to their consensus view instead.
+        self._admm_theta = [
+            np.where(np.isfinite(t) & (np.abs(t) <= TRUST_RADIUS), t, b)
+            for t, b in zip(self._admm_theta, self._admm_bar)]
+        # 3. exchange shared coordinates
+        for (i, j) in self.net.links:
+            shared = self._shared[(i, j)]
+            if not shared or not self.net.link_active(rnd, i, j):
+                continue
+            beta = self._betas[i]
+            vals = {a: (float(self._admm_theta[i][beta.index(a)]), 1.0)
+                    for a in shared}
+            payload = {"vals": vals, "version": rnd, "sent_round": rnd}
+            self.net.send(rnd, i, j, payload,
+                          admm_message_scalars(len(shared)))
+        self._deliver_views(rnd)
+        # 4. consensus averaging from possibly-stale views + dual ascent
+        for i in range(self.graph.p):
+            beta = self._betas[i]
+            rho = self._admm_rho[i]
+            for pos, a in enumerate(beta):
+                own = float(self._admm_theta[i][pos])
+                num = rho[pos] * own
+                den = rho[pos]
+                for (node, _) in self._owners[a]:
+                    if node == i:
+                        continue
+                    view = self._view.get((i, node))
+                    if view is not None and a in view["vals"]:
+                        val = view["vals"][a][0]
+                        if _guard(val, 1.0):
+                            num += rho[pos] * val
+                            den += rho[pos]
+                self._admm_bar[i][pos] = num / den
+            self._admm_lam[i] = self._admm_lam[i] + rho * (
+                np.asarray(self._admm_theta[i]) - self._admm_bar[i])
+
+    def _deliver_views(self, rnd: int) -> None:
+        """Apply due messages to receiver views, freshest version wins."""
+        for msg in self.net.deliver(rnd):
+            key = (msg.dst, msg.src)
+            cur = self._view.get(key)
+            if cur is None or msg.payload["version"] >= cur["version"]:
+                self._view[key] = msg.payload
+
+    # ------------------------------------------------------------- querying
+    def current_estimate(self) -> np.ndarray:
+        """Combined network estimate right now (home-sensor convention:
+        each parameter is reported by its lowest-index owner, which fuses
+        its own estimate with the freshest peer estimates it has
+        received)."""
+        theta = self.theta_fixed.copy()
+        if self.estimator == "admm":
+            for a, own in self._owners.items():
+                home = min(node for node, _ in own)
+                pos = self._betas[home].index(a)
+                val = float(self._admm_bar[home][pos])
+                if _guard(val, 1.0):
+                    theta[a] = val
+            return theta
+
+        fits = self.est.fits
+        if fits is None:
+            return theta
+        for a, own in self._owners.items():
+            home = min(node for node, _ in own)
+            cands = []
+            if self.est.counts[home] > 0:
+                pos = fits[home].beta.index(a)
+                if self.scheme == "uniform":
+                    cands.append((float(fits[home].theta[pos]), 1.0))
+                else:
+                    cands.append((float(fits[home].theta[pos]),
+                                  float(fits[home].V[pos, pos])
+                                  / int(self.est.counts[home])))
+            for (node, _) in own:
+                if node == home:
+                    continue
+                view = self._view.get((home, node))
+                if view is not None and a in view["vals"]:
+                    cands.append(view["vals"][a])
+            # data-free owners never make it here (they are excluded at the
+            # source: a count-0 node neither broadcasts nor contributes its
+            # own V = 0 "infinite precision" fit); the clamp below only
+            # steadies legitimate near-saturated variances, mirroring
+            # consensus.combine
+            cands = [(e, max(v, 1e-12)) for (e, v) in cands if _guard(e, v)]
+            if not cands:
+                continue
+            if self.scheme == "uniform":
+                theta[a] = float(np.mean([e for e, _ in cands]))
+            elif self.scheme == "diagonal":
+                w = np.array([1.0 / v for _, v in cands])
+                e = np.array([e for e, _ in cands])
+                theta[a] = float((w @ e) / w.sum())
+            else:  # max
+                theta[a] = min(cands, key=lambda c: c[1])[0]
+        return theta
+
+    def mean_staleness(self) -> float:
+        """Mean age in rounds of the peer views backing the estimate."""
+        ages = [self.round - 1 - v["sent_round"]
+                for v in self._view.values()]
+        return float(np.mean(ages)) if ages else 0.0
+
+    # ------------------------------------------------------------ trajectory
+    def run(self, rounds: int, record_every: int = 1,
+            record_score: bool = False) -> StreamResult:
+        recs: List[dict] = []
+        for r in range(rounds):
+            self.step()
+            if (r + 1) % record_every == 0 or r == rounds - 1:
+                theta = self.current_estimate()
+                rec = {
+                    "round": self.round,
+                    "theta": theta,
+                    "seen": float(self.est.counts.mean()),
+                    "total": int(self.est.counts.sum()),
+                    "scalars": int(self.net.scalars_sent),
+                    "stale": self.mean_staleness(),
+                }
+                if self.theta_star is not None:
+                    d = (theta - self.theta_star)[self.free]
+                    rec["err"] = float(d @ d)
+                if record_score:
+                    rec["score"] = self.est.score_norm(theta)
+                recs.append(rec)
+        return StreamResult(
+            rounds=np.array([r["round"] for r in recs]),
+            theta=np.stack([r["theta"] for r in recs]),
+            samples_seen=np.array([r["seen"] for r in recs]),
+            samples_total=np.array([r["total"] for r in recs]),
+            scalars_sent=np.array([r["scalars"] for r in recs]),
+            err=(np.array([r["err"] for r in recs])
+                 if self.theta_star is not None else None),
+            score_norm=(np.array([r["score"] for r in recs])
+                        if record_score else None),
+            staleness=np.array([r["stale"] for r in recs]))

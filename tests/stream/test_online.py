@@ -1,0 +1,120 @@
+"""Streaming invariants of the online estimator bank: chunked ingestion
+reproduces the batch fit, heterogeneous prefixes match per-node subset fits,
+and the fused-kernel score diagnostic equals autodiff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.stream as S
+from repro.core.ising import pseudo_loglik
+
+
+@pytest.fixture(scope="module")
+def grid_setup():
+    g = C.grid_graph(3, 3)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(0))
+    X = np.asarray(C.exact_sample(m, 1600, jax.random.PRNGKey(1)))
+    return g, m, X
+
+
+def test_chunked_ingestion_matches_one_shot(grid_setup):
+    """Feeding the same data in k chunks (refitting after each) agrees with
+    the one-shot batch fit to Newton tolerance — the headline streaming
+    invariant."""
+    g, m, X = grid_setup
+    est = S.StreamingEstimator(g, capacity=64)
+    for chunk in np.array_split(X[:1200], 5):
+        est.ingest(chunk)
+        est.refit()
+    oneshot = C.fit_all_local(g, jnp.asarray(X[:1200]))
+    for a, b in zip(est.fits, oneshot):
+        assert a.i == b.i and a.beta == b.beta
+        np.testing.assert_allclose(a.theta, b.theta, atol=1e-5)
+
+
+def test_uneven_chunk_sizes_and_regrowth(grid_setup):
+    """Capacity doubling mid-stream must not disturb the fits."""
+    g, m, X = grid_setup
+    est = S.StreamingEstimator(g, capacity=16)   # forces several regrowths
+    for size in (7, 50, 3, 301, 239):
+        lo = est.n_pool
+        est.ingest(X[lo: lo + size])
+        est.refit()
+    n = est.n_pool
+    oneshot = C.fit_all_local(g, jnp.asarray(X[:n]))
+    diff = max(float(np.max(np.abs(a.theta - b.theta)))
+               for a, b in zip(est.fits, oneshot))
+    assert diff <= 1e-5
+
+
+def test_heterogeneous_prefixes_match_subset_fits(grid_setup):
+    """A node that has seen n_i samples fits exactly X[:n_i]."""
+    g, m, X = grid_setup
+    est = S.StreamingEstimator(g, capacity=64)
+    est.extend_pool(X[:900])
+    counts = 300 + (np.arange(g.p) * 61) % 600
+    est.advance(counts)
+    est.refit()
+    for i in (0, 4, 8):
+        ref = C.fit_all_local(g, jnp.asarray(X[: counts[i]]))[i]
+        np.testing.assert_allclose(est.fits[i].theta, ref.theta, atol=1e-5)
+
+
+def test_zero_count_nodes_are_finite(grid_setup):
+    """A sensor that has observed nothing yields a finite (zero) fit and
+    does not break consensus."""
+    g, m, X = grid_setup
+    est = S.StreamingEstimator(g, capacity=64)
+    est.extend_pool(X[:400])
+    counts = np.full(g.p, 400)
+    counts[2] = 0
+    est.advance(counts)
+    fits = est.refit()
+    assert np.all(fits[2].theta == 0.0)
+    for scheme in ("uniform", "diagonal", "max"):
+        th = C.combine(g, fits, scheme)
+        assert np.all(np.isfinite(th))
+
+
+def test_counts_must_be_monotone(grid_setup):
+    g, m, X = grid_setup
+    est = S.StreamingEstimator(g, capacity=64)
+    est.ingest(X[:100])
+    with pytest.raises(ValueError):
+        est.advance(np.full(g.p, 50))
+
+
+def test_warm_start_escapes_saturated_point(grid_setup):
+    """A diverged (finite but saturated) warm start must not pin the fit —
+    the regression behind the batched engine's backtracking guard."""
+    g, m, X = grid_setup
+    Xj = jnp.asarray(X[:800])
+    cold = C.fit_all_local(g, Xj)
+    warm = [None] * g.p
+    warm[4] = np.full(len(cold[4].theta), 8.0, dtype=np.float32)
+    warmed = C.fit_all_local(g, Xj, warm_start=warm)
+    np.testing.assert_allclose(warmed[4].theta, cold[4].theta, atol=1e-4)
+
+
+def test_pseudo_score_matches_autodiff(grid_setup):
+    """Fused-kernel score over the padded buffer == jax.grad of the average
+    pseudo-likelihood on the live rows."""
+    g, m, X = grid_setup
+    est = S.StreamingEstimator(g, capacity=64)
+    est.ingest(X[:700])
+    theta = np.asarray(m.theta, dtype=np.float64) * 0.7
+    ref = np.asarray(jax.grad(
+        lambda t: pseudo_loglik(g, t, jnp.asarray(X[:700])))(
+            jnp.asarray(theta, dtype=jnp.float32)))
+    got = S.pseudo_score(g, theta, est.buffer.data, est.n_pool)
+    np.testing.assert_allclose(got, ref, atol=2e-4)
+
+
+def test_score_norm_shrinks_toward_optimum(grid_setup):
+    g, m, X = grid_setup
+    est = S.StreamingEstimator(g, capacity=64)
+    est.ingest(X[:1000])
+    th_mple = C.fit_mple(g, jnp.asarray(X[:1000]))
+    assert est.score_norm(th_mple) < est.score_norm(np.zeros(g.n_params))

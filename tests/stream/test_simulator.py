@@ -1,0 +1,217 @@
+"""Simulator invariants: perfect-network streaming reproduces the global
+one-step consensus, lossy/stale networks degrade gracefully (finite,
+improving), and measured communication matches the shared cost accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.stream as S
+
+
+@pytest.fixture(scope="module")
+def star_setup():
+    g = C.star_graph(8)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(2))
+    pool = np.asarray(C.exact_sample(m, 1200, jax.random.PRNGKey(3)))
+    return g, m, pool
+
+
+@pytest.mark.parametrize("scheme", S.ONE_STEP_SCHEMES)
+def test_perfect_network_equals_global_combine(star_setup, scheme):
+    """No drops, no delay: the home-sensor streamed estimate is exactly the
+    global one-step combine on the data everyone has seen."""
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool, scheme=scheme,
+                            theta_star=np.asarray(m.theta),
+                            arrivals=S.ArrivalSpec(rate=120.0), capacity=128)
+    res = sim.run(8)
+    n = int(res.samples_seen[-1])
+    fits = C.fit_all_local(g, jnp.asarray(pool[:n]))
+    ref = C.combine(g, fits, scheme)
+    np.testing.assert_allclose(res.theta[-1], ref, atol=1e-5)
+
+
+def test_error_decreases_with_data(star_setup):
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool, scheme="diagonal",
+                            theta_star=np.asarray(m.theta),
+                            arrivals=S.ArrivalSpec(rate=100.0), capacity=128)
+    res = sim.run(10)
+    assert np.all(np.isfinite(res.err))
+    assert res.err[-1] < res.err[0]
+
+
+def test_lossy_stale_network_degrades_gracefully(star_setup):
+    """Drops + delay + gossip scheduling: estimates stay finite, views go
+    stale but bounded, and error still improves in expectation."""
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(
+        g, pool, scheme="diagonal", theta_star=np.asarray(m.theta),
+        network=S.NetworkConfig(drop_prob=0.5, delay=2, jitter=2,
+                                link_prob=0.7, seed=11),
+        arrivals=S.ArrivalSpec(kind="poisson", rate=40.0), capacity=128,
+        seed=5)
+    res = sim.run(14)
+    assert np.all(np.isfinite(res.theta))
+    assert np.all(np.isfinite(res.err))
+    assert res.err[-1] < res.err[0]
+    assert np.all(res.staleness >= 0.0)
+
+
+def test_comm_accounting_matches_shared_table(star_setup):
+    """One full broadcast round transmits exactly the one-step row of the
+    combinatorial comm-cost table — same accounting, two code paths."""
+    g, m, pool = star_setup
+    rounds = 5
+    for scheme, key in (("uniform", "one_step_linear"),
+                        ("diagonal", "diagonal_or_max")):
+        sim = S.StreamSimulator(g, pool, scheme=scheme,
+                                arrivals=S.ArrivalSpec(rate=20.0),
+                                capacity=128)
+        sim.run(rounds)
+        table = S.comm_costs(g, int(sim.est.counts.max()), 20)
+        assert sim.net.scalars_sent == rounds * table[key]
+
+
+def test_heterogeneous_rates_weight_by_data(star_setup):
+    """diagonal weights are the estimator variance V_aa/n_i: an owner with
+    100x the data dominates the combined edge estimate."""
+    g, m, pool = star_setup
+    rates = [200.0] + [2.0] * (g.p - 1)       # hub fast, leaves slow
+    sim = S.StreamSimulator(g, pool, scheme="diagonal",
+                            theta_star=np.asarray(m.theta),
+                            arrivals=S.ArrivalSpec(rate=tuple(rates)),
+                            capacity=128)
+    res = sim.run(5)
+    fits = sim.est.fits
+    counts = sim.est.counts
+    owners = C.param_owners(g)
+    for a, own in owners.items():
+        if len(own) < 2:
+            continue
+        cands, plain = [], []
+        hub_idx = None
+        for (node, pos) in own:
+            est = float(fits[node].theta[pos])
+            v = float(fits[node].V[pos, pos])
+            if np.isfinite(est) and np.isfinite(v) and abs(est) <= 25.0:
+                if node == 0:
+                    hub_idx = len(cands)
+                cands.append((est, max(v / max(int(counts[node]), 1),
+                                       1e-12)))
+                plain.append(max(v, 1e-12))
+        w = np.array([1.0 / v for _, v in cands])
+        expect = float(w @ np.array([e for e, _ in cands]) / w.sum())
+        np.testing.assert_allclose(res.theta[-1][a], expect, atol=1e-6)
+        # the data-rich hub's weight share must beat what the asymptotic
+        # V_aa alone (the pre-fix weighting) would have granted it
+        if hub_idx is not None and len(cands) == 2:
+            w_plain = 1.0 / np.array(plain)
+            assert (w[hub_idx] / w.sum()
+                    > w_plain[hub_idx] / w_plain.sum())
+
+
+def test_zero_data_owner_cannot_dominate(star_setup):
+    """An owner with no observations reports V_aa = 0; that is 'no
+    information', and it must be excluded — not granted 1/eps weight that
+    collapses the shared estimate to its theta = 0."""
+    g, m, pool = star_setup
+    rates = [0.0] + [100.0] * (g.p - 1)       # the hub (every edge's home
+    for scheme in ("diagonal", "max"):        # owner) never observes
+        sim = S.StreamSimulator(g, pool, scheme=scheme,
+                                theta_star=np.asarray(m.theta),
+                                arrivals=S.ArrivalSpec(rate=tuple(rates)),
+                                capacity=128)
+        res = sim.run(4)
+        fits = sim.est.fits
+        owners = C.param_owners(g)
+        for a, own in owners.items():
+            if len(own) < 2:
+                continue
+            leaf = max(node for node, _ in own)
+            pos = fits[leaf].beta.index(a)
+            expect = float(fits[leaf].theta[pos])
+            if np.isfinite(expect) and abs(expect) <= 25.0:
+                np.testing.assert_allclose(res.theta[-1][a], expect,
+                                           atol=1e-6)
+
+
+def test_dropped_update_is_retransmitted(star_setup):
+    """A version whose message was dropped stays owed: with the pool
+    exhausted (versions frozen) the link keeps retrying until a copy lands,
+    so every view eventually reaches the final version."""
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool[:200], scheme="diagonal",
+                            network=S.NetworkConfig(drop_prob=0.6, seed=9),
+                            arrivals=S.ArrivalSpec(rate=100.0), capacity=128)
+    sim.run(25)     # pool exhausts after 2 rounds; 23 retry rounds follow
+    final_versions = {i: int(sim.est.versions[i]) for i in range(g.p)}
+    for (i, j) in sim.net.links:
+        view = sim._view.get((j, i))
+        assert view is not None and view["version"] == final_versions[i]
+
+
+def test_gossip_link_refusal_spends_no_bandwidth(star_setup):
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool, scheme="uniform",
+                            network=S.NetworkConfig(link_prob=0.0, seed=1),
+                            arrivals=S.ArrivalSpec(rate=20.0), capacity=128)
+    sim.run(4)
+    assert sim.net.scalars_sent == 0
+    assert sim.net.msgs_sent == 0
+
+
+def test_streaming_admm_converges(star_setup):
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool, estimator="admm",
+                            theta_star=np.asarray(m.theta),
+                            arrivals=S.ArrivalSpec(rate=80.0), capacity=128,
+                            newton_iters=12)
+    res = sim.run(10)
+    assert np.all(np.isfinite(res.theta))
+    assert res.err[-1] < res.err[0]
+
+
+def test_estimate_at_anytime_queries(star_setup):
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool, scheme="max",
+                            theta_star=np.asarray(m.theta),
+                            arrivals=S.ArrivalSpec(rate=50.0), capacity=128)
+    res = sim.run(6)
+    np.testing.assert_array_equal(res.estimate_at(3), res.theta[2])
+    np.testing.assert_array_equal(res.estimate_at(0), res.theta[0])
+    np.testing.assert_array_equal(res.estimate_at(99), res.theta[-1])
+
+
+def test_dropped_messages_leave_views_stale_not_empty(star_setup):
+    """With certain drop, receivers never see peers: the home estimate falls
+    back to the home fit alone and stays finite."""
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool, scheme="diagonal",
+                            theta_star=np.asarray(m.theta),
+                            network=S.NetworkConfig(drop_prob=1.0, seed=0),
+                            arrivals=S.ArrivalSpec(rate=60.0), capacity=128)
+    res = sim.run(6)
+    assert sim.net.msgs_delivered == 0
+    assert np.all(np.isfinite(res.theta))
+    # home-only estimates: every parameter reports its home node's own fit
+    fits = sim.est.fits
+    owners = C.param_owners(g)
+    for a, own in owners.items():
+        home = min(node for node, _ in own)
+        pos = fits[home].beta.index(a)
+        expect = float(fits[home].theta[pos])
+        if abs(expect) <= 25.0:
+            np.testing.assert_allclose(res.theta[-1][a], expect, atol=1e-6)
+
+
+def test_bad_inputs_rejected(star_setup):
+    g, m, pool = star_setup
+    with pytest.raises(ValueError):
+        S.StreamSimulator(g, pool, estimator="nope")
+    with pytest.raises(ValueError):
+        S.StreamSimulator(g, pool, scheme="optimal")
+    with pytest.raises(ValueError):
+        S.ArrivalSpec(kind="weird").draw(np.random.RandomState(0), 3)

@@ -1,6 +1,10 @@
 """Generate the EXPERIMENTS.md dry-run + roofline markdown tables from
 experiments/dryrun/*.json.
 
+The records are not checked in — generate them first with the dry-run
+harness (its ``--out`` default is exactly the directory this script reads):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
     PYTHONPATH=src python tools/gen_tables.py > experiments/tables.md
 """
 import glob
@@ -26,7 +30,15 @@ def fmt(x, unit=""):
 
 def main():
     recs = {}
-    for path in glob.glob("experiments/dryrun/*.json"):
+    paths = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not paths:
+        print("no dry-run records found under experiments/dryrun/ — "
+              "generate them first:\n"
+              "    PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--out experiments/dryrun", file=sys.stderr)
+        print("### Dry-run\n\n(no records)\n\n### Roofline\n\n(no records)")
+        return
+    for path in paths:
         r = json.load(open(path))
         if "arch" in r:
             recs[(r["arch"], r["shape"], r["mesh"])] = r
