@@ -92,6 +92,40 @@ def bench_combine(g, fits):
     return {"combine_all_schemes_s": (time.perf_counter() - t0) / reps}
 
 
+def bench_families(p_small, n):
+    """Per-family engine rows: cold/warm batched fit + combine + sampler
+    throughput on one shared grid topology, so the perf trajectory tracks
+    every registered family, not just Ising."""
+    from repro.core.batched import fit_all_local_batched
+    import jax.numpy as jnp
+    import math
+
+    side = max(int(math.isqrt(p_small)), 2)
+    g = C.grid_graph(side, side)
+    rows = {}
+    for fam in C.registered_families():
+        key = jax.random.PRNGKey(17)
+        theta = fam.random_params(g, key)
+        t_s, X = _wall(lambda: C.gibbs_sample_family(
+            fam, g, theta, n, jax.random.PRNGKey(18), burnin=100, thin=2))
+        _solve_bucket.clear_cache()
+        Xj = jnp.asarray(X)
+        cold, fits = _wall(lambda: fit_all_local_batched(g, Xj, family=fam))
+        warm, _ = _wall(lambda: fit_all_local_batched(g, Xj, family=fam))
+        t0 = time.perf_counter()
+        C.combine(g, fits, "diagonal", family=fam)
+        t_comb = time.perf_counter() - t0
+        rows[fam.name] = {
+            "block_dim": fam.block_dim,
+            "n_params": fam.n_params(g),
+            "sample_s": t_s,
+            "fit_batched_cold_s": cold,
+            "fit_batched_warm_s": warm,
+            "combine_diagonal_s": t_comb,
+        }
+    return rows
+
+
 def main() -> None:
     p = scale(100, 100)
     n = scale(1000, 1000)
@@ -102,6 +136,7 @@ def main() -> None:
     metrics, fits = bench_fit_all_local(g, X)
     metrics.update(bench_gibbs(m, n))
     metrics.update(bench_combine(g, fits))
+    fam_rows = bench_families(scale(36, 36), scale(600, 600))
 
     emit("estimator_fit_loop", metrics["fit_loop_cold_s"] * 1e6,
          f"p={p} n={n} cold_s={metrics['fit_loop_cold_s']:.2f} "
@@ -122,10 +157,18 @@ def main() -> None:
          f"colors={metrics['n_colors']}")
     emit("estimator_combine", metrics["combine_all_schemes_s"] * 1e6,
          "vectorized combine, 4 schemes")
+    for name, row in fam_rows.items():
+        emit(f"estimator_family_{name}", row["fit_batched_cold_s"] * 1e6,
+             f"C={row['block_dim']} cold_s={row['fit_batched_cold_s']:.2f} "
+             f"warm_s={row['fit_batched_warm_s']:.3f} "
+             f"sample_s={row['sample_s']:.2f}")
 
     emit_json("BENCH_estimators.json", {
-        "config": {"p": p, "n": n, "graph": "scale_free(m=1, seed=0)"},
+        "config": {"p": p, "n": n, "graph": "scale_free(m=1, seed=0)",
+                   "families_config": {"graph": "grid", "p": scale(36, 36),
+                                       "n": scale(600, 600)}},
         "metrics": metrics,
+        "families": fam_rows,
     })
 
 

@@ -1,13 +1,20 @@
 """Core reproduction of Liu & Ihler (ICML 2012), "Distributed Parameter
-Estimation via Pseudo-likelihood": Ising models, local conditional-likelihood
-estimators, one-step consensus (linear/max/matrix), ADMM joint MPLE, and the
-exact asymptotic-variance machinery behind the paper's theory."""
+Estimation via Pseudo-likelihood": an exponential-family model zoo (Ising,
+Gaussian MRF, q-state Potts) behind one estimator contract
+(:mod:`repro.core.families`), local conditional-likelihood estimators, the
+degree-bucketed batched engine, one-step consensus (linear/max/matrix), ADMM
+joint MPLE, and the exact asymptotic-variance machinery behind the paper's
+theory."""
 from .graphs import (Graph, chain_graph, star_graph, grid_graph,
                      complete_graph, scale_free_graph, euclidean_graph)
 from .ising import (IsingModel, random_model, conditional_logits, cond_loglik,
                     pseudo_loglik, suff_stats, log_partition, exact_probs,
                     loglik, exact_moments, all_states, pair_matrix)
-from .sampling import exact_sample, gibbs_sample, chromatic_gibbs_sample
+from .families import (ModelFamily, IsingFamily, GaussianMRF, PottsFamily,
+                       ISING, GAUSSIAN, POTTS3, register_family, get_family,
+                       registered_families, fit_mple_family, fit_node_oracle)
+from .sampling import (exact_sample, gibbs_sample, chromatic_gibbs_sample,
+                       gibbs_sample_family)
 from .estimators import (LocalFit, newton_maximize, fit_local_cl,
                          fit_all_local, fit_all_local_loop, fit_mple,
                          fit_mle_exact, node_design)

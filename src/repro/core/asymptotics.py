@@ -67,21 +67,30 @@ def exact_locals(model: IsingModel,
 
 
 # --------------------------------------------------------------- ownership
-def param_owners(graph: Graph, include_singleton: bool = True
-                 ) -> Dict[int, List[Tuple[int, int]]]:
-    """flat param index -> [(node i, position of that param in beta_i)]."""
+def param_owners(graph: Graph, include_singleton: bool = True,
+                 family=None) -> Dict[int, List[Tuple[int, int]]]:
+    """flat param index -> [(node i, position of that param in beta_i)].
+
+    With a ``family``, ownership is over parameter *blocks*: every scalar
+    of a node block is owned by its node, every scalar of an edge block by
+    both endpoints, and positions follow ``family.beta`` block order. The
+    default (``family=None``) is the seed's scalar Ising layout.
+    """
     owners: Dict[int, List[Tuple[int, int]]] = {}
     for i in range(graph.p):
-        beta = graph.beta(i, include_singleton)
+        beta = (graph.beta(i, include_singleton) if family is None
+                else family.beta(graph, i, include_singleton))
         for pos, a in enumerate(beta):
             owners.setdefault(a, []).append((i, pos))
     return owners
 
 
-def free_indices(graph: Graph, include_singleton: bool = True) -> np.ndarray:
+def free_indices(graph: Graph, include_singleton: bool = True,
+                 family=None) -> np.ndarray:
+    C = 1 if family is None else family.block_dim
     if include_singleton:
-        return np.arange(graph.n_params)
-    return np.arange(graph.p, graph.n_params)
+        return np.arange((graph.p + graph.m) * C)
+    return np.arange(graph.p * C, (graph.p + graph.m) * C)
 
 
 # --------------------------------------------- exact consensus covariances

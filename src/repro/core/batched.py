@@ -1,20 +1,26 @@
-"""Batched local-estimator engine: degree-bucketed, vmapped Newton-IRLS.
+"""Batched local-estimator engine: degree-bucketed, vmapped Newton-IRLS,
+generalized over exponential-family models.
 
-The paper's local CL estimators (Eq. 3) are p independent logistic
-regressions of x_i on its neighbors. The seed implementation fit them in a
-Python loop — one separately-jitted solve per node, each recomputing a full
-autodiff ``jax.hessian`` every Newton iteration. This module exploits the
+The paper's local CL estimators (Eq. 3) are p independent node-conditional
+GLM fits. The seed implementation fit them in a Python loop — one
+separately-jitted solve per node, each recomputing a full autodiff
+``jax.hessian`` every Newton iteration. This module exploits the
 embarrassing parallelism structurally:
 
 * nodes are grouped into **degree buckets** (degree padded up to the next
   power of four), so XLA compiles one solver per bucket instead of one per
   node;
-* within a bucket all k neighbor designs are stacked into a ``(k, n, deg)``
-  tensor and solved simultaneously by batched einsum Newton steps;
-* gradients and Hessians use the **closed forms** of the logistic CL
-  criterion — ``g = Z_b^T r / n`` with ``r = 2 x sigma(-2 x eta)`` and
-  ``H = -4 Z_b^T diag(sigma(2 eta) sigma(-2 eta)) Z_b / n`` — dropping an
-  autodiff order per iteration relative to ``jax.hessian``;
+* within a bucket all k neighbor designs are stacked into a
+  ``(k, C, deg, n)`` tensor — C the family's channel count (1 for
+  Ising/Gaussian, q-1 for Potts) — and solved simultaneously by batched
+  einsum Newton steps;
+* gradients and Hessians use each family's **closed-form** per-channel
+  score ``r = dl/deta`` and curvature ``kappa = -d2l/deta2`` hooks
+  (:class:`repro.core.families.base.ModelFamily`) — logistic
+  ``r = 2 x sigma(-2 x eta)``, Gaussian ``r = x - eta`` with constant unit
+  curvature (so the "IRLS" is a single weighted least-squares step), and
+  multinomial-softmax ``diag(pi) - pi pi'`` cross-channel curvature —
+  dropping an autodiff order per iteration relative to ``jax.hessian``;
 * Newton systems are solved by a **pure-XLA batched Gauss-Jordan sweep**
   (sign-definite systems need no pivoting), avoiding the per-matrix LAPACK
   dispatch of ``jnp.linalg.solve`` that dominates wall-clock for the tiny
@@ -26,6 +32,10 @@ embarrassing parallelism structurally:
 Padding is exact: padded design columns are zero, so their gradient entries
 vanish and the Hessian is block-diagonal with a ``-1`` placeholder on padded
 coordinates; the Newton direction on real coordinates is untouched.
+
+Per-node parameters are flat in **coordinate-major block layout**
+``[singleton block (C), edge block (C) per incident edge]``, matching
+``family.beta``; at C = 1 this is exactly the seed's scalar layout.
 
 Public entry points: :func:`degree_buckets`, :func:`fit_all_local_batched`,
 the streaming-ADMM primal update :func:`prox_update_batched`, and the
@@ -49,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .estimators import LocalFit
+from .families import ISING
 from .graphs import Graph
 
 # Backtracking candidates for clipped Newton steps, largest first so ties at
@@ -135,9 +146,9 @@ def degree_buckets(graph: Graph) -> List[DegreeBucket]:
     """Group nodes by padded degree; neighbor order matches ``node_design``.
 
     Columns are ordered like ``graph.incident_edges(i)`` (edge order), which
-    is what :func:`repro.core.estimators.node_design` and ``graph.beta`` use,
-    so bucketed estimates line up coordinate-for-coordinate with the seed
-    per-node solver. Cached per graph (graphs are frozen/hashable).
+    is what :func:`repro.core.estimators.node_design` and ``family.beta``
+    use, so bucketed estimates line up coordinate-for-coordinate with the
+    seed per-node solver. Cached per graph (graphs are frozen/hashable).
     """
     return list(_degree_buckets_cached(graph))
 
@@ -164,93 +175,161 @@ def _gauss_jordan_solve(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return M[:, :, d:]
 
 
-def _bucket_design(X, nodes, nbrs, mask, offsets, include_singleton: bool):
-    """Build the (k, d, n) bucket design + per-node targets and masks.
+def _bucket_design(family, X, nodes, nbrs, mask, offsets,
+                   include_singleton: bool):
+    """Build the channelized (k, C, d, n) bucket design + targets/masks.
 
     Shared by the plain and proximal bucket solvers. Returns
-    ``(Zb, xi, base, cmask)``: stacked designs, node samples, fixed-singleton
-    offsets folded into ``base``, and the d-length coordinate mask.
+    ``(Zb, xi, base, cmask)``: per-channel stacked designs, node samples,
+    fixed-singleton block offsets folded into ``base`` (k, C, n), and the
+    d-length coordinate mask (all channels of a coordinate share one mask
+    entry). ``offsets``: (k, C) fixed singleton blocks.
     """
-    # (k, deg_pad, n): gather neighbor columns, zero the padded ones
-    Zt = jnp.swapaxes(jnp.swapaxes(X[:, nbrs], 0, 1), 1, 2) * mask[:, :, None]
+    C = family.block_dim
+    # (n, k, deg_pad, C): family features of the gathered neighbor values
+    F = family.edge_features(X[:, nbrs])
+    Zt = jnp.transpose(F, (1, 3, 2, 0)) * mask[:, None, :, None]
     xi = X[:, nodes].T                                       # (k, n)
+    k, _, _, n = Zt.shape
 
     if include_singleton:
-        ones = jnp.ones((Zt.shape[0], 1, Zt.shape[2]), Zt.dtype)
-        Zb = jnp.concatenate([ones, Zt], axis=1)             # (k, d, n)
+        ones = jnp.ones((k, C, 1, n), Zt.dtype)
+        Zb = jnp.concatenate([ones, Zt], axis=2)             # (k, C, d, n)
         cmask = jnp.concatenate(
             [jnp.ones((mask.shape[0], 1), mask.dtype), mask], axis=1)
-        base = jnp.zeros_like(xi)
+        base = jnp.zeros((k, C, n), Zt.dtype)
     else:
         Zb = Zt
         cmask = mask
-        base = offsets[:, None] * jnp.ones_like(xi)
+        base = offsets[:, :, None] * jnp.ones((k, C, n), Zt.dtype)
     return Zb, xi, base, cmask
+
+
+def _flat_coord_mask(cmask: jnp.ndarray, C: int) -> jnp.ndarray:
+    """(k, d) coordinate mask -> (k, d*C) flat-parameter mask."""
+    k, d = cmask.shape
+    return jnp.broadcast_to(cmask[:, :, None], (k, d, C)).reshape(k, d * C)
+
+
+def _channel_ops(family, Zb, base, xi, sw, weighted, denom):
+    """Channelized-GLM contraction closures shared by the plain and proximal
+    bucket solvers, all in the flat coordinate-major (k, d*C) layout.
+
+    C == 1 (Ising/Gaussian) keeps the seed's single-channel matmul forms —
+    XLA contracts them noticeably faster than the general channelized
+    einsums. The branch is static (``block_dim`` is a trace-time constant),
+    so each family compiles only its own form.
+
+    Returns ``(score_curvature, grad_vec, curvature_matrix, avg_loglik,
+    score_matrix)``: per-sample channel score/curvature at a flat W, the
+    flat gradient vector from a channel score, the (k, dC, dC) curvature
+    matrix from a channel curvature, the (c, k) per-node average loglik of
+    a candidate stack, and the (k, dC, n) per-sample score matrix.
+    """
+    k, C, d, _ = Zb.shape
+    dC = d * C
+    Z1 = Zb[:, 0] if C == 1 else None
+
+    def eta_of(W):
+        if C == 1:
+            return base + jnp.einsum("kdn,kd->kn", Z1, W)[:, None, :]
+        return base + jnp.einsum("kcdn,kdc->kcn", Zb, W.reshape(k, d, C))
+
+    def score_curvature(W):
+        eta = eta_of(W)
+        r = family.dl_deta(eta, xi)                          # (k, C, n)
+        kap = family.curvature(eta, xi)                      # (k, C, C, n)
+        if weighted:
+            r = r * sw[:, None, :]
+            kap = kap * sw[:, None, None, :]
+        return r, kap
+
+    def grad_vec(r):
+        if C == 1:
+            return jnp.einsum("kdn,kn->kd", Z1, r[:, 0])
+        return jnp.einsum("kcdn,kcn->kdc", Zb, r).reshape(k, dC)
+
+    def curvature_matrix(kap):
+        if C == 1:
+            return (Z1 * kap[:, 0, 0][:, None, :]) @ jnp.swapaxes(Z1, 1, 2)
+        H = jnp.einsum("kcdn,kcen,kefn->kdcfe", Zb, kap, Zb)
+        return H.reshape(k, dC, dC)
+
+    def avg_loglik(Ws):
+        # per-node average conditional loglik for a (c, k, d*C) stack of
+        # candidate parameter points; returns (c, k)
+        if C == 1:
+            etas = base[None] \
+                + jnp.einsum("kdn,akd->akn", Z1, Ws)[:, :, None, :]
+        else:
+            Wb = Ws.reshape(Ws.shape[0], k, d, C)
+            etas = base[None] + jnp.einsum("kcdn,akdc->akcn", Zb, Wb)
+        ll = family.loglik_eta(etas, xi[None])
+        if weighted:
+            ll = ll * sw[None]
+        return ll.sum(axis=2) / denom[None, :]
+
+    def score_matrix(r):
+        if C == 1:
+            return Z1 * r[:, 0][:, None, :]                  # (k, d, n)
+        n = Zb.shape[-1]
+        return jnp.transpose(Zb * r[:, :, None, :],
+                             (0, 2, 1, 3)).reshape(k, dC, n)
+
+    return score_curvature, grad_vec, curvature_matrix, avg_loglik, \
+        score_matrix
 
 
 @functools.partial(jax.jit,
                    static_argnames=("include_singleton", "n_iter", "weighted",
-                                    "guarded"))
+                                    "guarded", "family"))
 def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
                   include_singleton: bool, n_iter: int, weighted: bool = False,
-                  guarded: bool = False, tol: float = 2e-6,
+                  guarded: bool = False, family=ISING, tol: float = 2e-6,
                   ridge: float = 1e-8, max_step: float = 5.0):
     """Solve every node of one degree bucket in a single XLA program.
 
     X: (n, p) samples; nodes: (k,); nbrs: (k, deg_pad); mask: (k, deg_pad);
-    offsets: (k,) fixed singleton thetas (used when include_singleton=False);
-    W0: (k, d) Newton warm start (zeros for a cold fit); sw: (k, n) per-node
-    sample weights, only read when ``weighted`` — a 0/1 prefix mask lets each
-    node of the bucket see a different prefix of a shared streaming pool at
-    fixed array shapes.
+    offsets: (k, C) fixed singleton blocks (used when
+    include_singleton=False); W0: (k, d*C) Newton warm start (zeros for a
+    cold fit); sw: (k, n) per-node sample weights, only read when
+    ``weighted`` — a 0/1 prefix mask lets each node of the bucket see a
+    different prefix of a shared streaming pool at fixed array shapes.
+    ``family`` (static) supplies the closed-form per-channel score and
+    curvature; the Ising default reproduces the seed engine exactly.
 
-    Designs live in (k, d, n) layout so the per-iteration Hessian is one
-    batched matmul contracting over the contiguous sample axis. The
-    curvature weights use the x in {-1,+1} identity
-    ``kappa = 4 sigma(2 eta) sigma(-2 eta) = r (2 x - r)``, which costs no
-    extra transcendentals beyond the residual ``r``. ``tol`` (on the damped
+    Designs live in (k, C, d, n) layout so the per-iteration Hessian is one
+    batched einsum contracting over the contiguous sample axis; for C = 1
+    the channel axes collapse and nothing is wasted. ``tol`` (on the damped
     step's inf-norm) is chosen just above the float32 jitter floor: iterating
     past it only bounces around the optimum, which is all the seed's fixed
     40-iteration schedule does after convergence.
 
-    Returns (W, H, J, V, S) with leading bucket dimension k and parameter
-    dimension d = deg_pad (+1 with a free singleton); padded coordinates are
-    exactly zero in W and carry a ``-1`` placeholder diagonal in H. A node
-    whose weights sum to zero (nothing observed yet) stays at W0 untouched by
-    data: its gradient vanishes and the guarded denominator keeps it finite.
+    Returns (W, H, J, V, S) with leading bucket dimension k and flat
+    parameter dimension d*C (coordinate-major blocks); padded coordinates
+    are exactly zero in W and carry a ``-1`` placeholder diagonal in the
+    Newton system. A node whose weights sum to zero (nothing observed yet)
+    stays at W0 untouched by data: its gradient vanishes and the guarded
+    denominator keeps it finite.
     """
     n = X.shape[0]
-    Zb, xi, base, cmask = _bucket_design(X, nodes, nbrs, mask, offsets,
-                                         include_singleton)
-    k, d, _ = Zb.shape
-    ZbT = jnp.swapaxes(Zb, 1, 2)                             # (k, n, d)
-    eye = jnp.eye(d, dtype=Zb.dtype)
+    Zb, xi, base, cmask = _bucket_design(family, X, nodes, nbrs, mask,
+                                         offsets, include_singleton)
+    k, C, d, _ = Zb.shape
+    dC = d * C
+    eye = jnp.eye(dC, dtype=Zb.dtype)
     # -1 on padded diagonals keeps the (exactly block-diagonal) system
     # uniformly negative definite without touching the real block's
     # Newton direction.
-    pad_diag = (1.0 - cmask)[:, :, None] * eye[None, :, :]
+    cflat = _flat_coord_mask(cmask, C)
+    pad_diag = (1.0 - cflat)[:, :, None] * eye[None, :, :]
     if weighted:
         denom = jnp.maximum(jnp.sum(sw, axis=1), 1.0)        # (k,)
     else:
         denom = jnp.full((k,), float(n), Zb.dtype)
 
-    def score_curvature(W):
-        eta = base + jnp.einsum("kdn,kd->kn", Zb, W)
-        r = 2.0 * xi * jax.nn.sigmoid(-2.0 * xi * eta)       # dl/deta
-        kap = r * (2.0 * xi - r)
-        if weighted:
-            r = r * sw
-            kap = kap * sw
-        return r, kap
-
-    def objective(Ws):
-        # per-node average conditional loglik for a (c, k, d) stack of
-        # candidate parameter points; returns (c, k)
-        etas = base[None] + jnp.einsum("kdn,ckd->ckn", Zb, Ws)
-        ll = jax.nn.log_sigmoid(2.0 * xi[None] * etas)
-        if weighted:
-            ll = ll * sw[None]
-        return ll.sum(axis=2) / denom[None, :]
+    score_curvature, grad_vec, curvature_matrix, objective, score_matrix = \
+        _channel_ops(family, Zb, base, xi, sw, weighted, denom)
 
     def cond(carry):
         _, it, delta = carry
@@ -259,10 +338,10 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
     def newton_step(carry):
         W, it, _ = carry
         r, kap = score_curvature(W)
-        g = jnp.einsum("kdn,kn->kd", Zb, r) / denom[:, None]
-        H = -(Zb * kap[:, None, :]) @ ZbT / denom[:, None, None] \
+        g = grad_vec(r) / denom[:, None]
+        H = -curvature_matrix(kap) / denom[:, None, None] \
             - ridge * eye[None, :, :] - pad_diag
-        dirn = _gauss_jordan_solve(H, g[..., None])[..., 0]  # (k, d)
+        dirn = _gauss_jordan_solve(H, g[..., None])[..., 0]  # (k, dC)
         # an untrusted direction: non-finite (curvature underflow at a
         # saturated point makes the solve blow up) or clipped (outside
         # Newton's trust region). NaN directions are zeroed so they cannot
@@ -300,22 +379,23 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
     # consumers that normalize influence columns by the row count (the
     # "optimal" combiner) should use the live count, not the buffer size.
     r, kap = score_curvature(W)
-    G = Zb * r[:, None, :]                                   # (k, d, n)
+    G = score_matrix(r)                                      # (k, dC, n)
     J = G @ jnp.swapaxes(G, 1, 2) / denom[:, None, None]
-    H = (Zb * kap[:, None, :]) @ ZbT / denom[:, None, None]  # = -hessian(fun)
+    H = curvature_matrix(kap) / denom[:, None, None]         # = -hessian
     Hreg = H + 1e-9 * eye[None, :, :] + pad_diag
     Hinv = _gauss_jordan_solve(Hreg, jnp.broadcast_to(eye, Hreg.shape))
     V = Hinv @ J @ jnp.swapaxes(Hinv, 1, 2)
-    S = jnp.swapaxes(G, 1, 2) @ jnp.swapaxes(Hinv, 1, 2)     # (k, n, d)
+    S = jnp.swapaxes(G, 1, 2) @ jnp.swapaxes(Hinv, 1, 2)     # (k, n, dC)
     return W, H, J, V, S
 
 
 def bucket_compile_count() -> int:
     """Bucket-solver compilations since the last ``clear_cache()``.
 
-    Counts across every graph / ``include_singleton`` variant solved so far,
-    so callers asserting "compiles == #buckets" should clear the cache first.
-    Returns -1 if the (private) jit cache probe disappears in a future JAX.
+    Counts across every graph / family / ``include_singleton`` variant
+    solved so far, so callers asserting "compiles == #buckets" should clear
+    the cache first. Returns -1 if the (private) jit cache probe disappears
+    in a future JAX.
     """
     probe = getattr(_solve_bucket, "_cache_size", None)
     return int(probe()) if callable(probe) else -1
@@ -332,17 +412,17 @@ def _bucket_weights(sample_weight, nodes: np.ndarray, n: int):
     return sample_weight[jnp.asarray(nodes)]
 
 
-def _bucket_warm_start(warm_start, b: DegreeBucket, d: int, lead: int,
-                       dtype) -> jnp.ndarray:
-    """Stack per-node warm-start thetas into the bucket's padded (k, d)."""
-    W0 = np.zeros((len(b.nodes), d), dtype=np.float32)
+def _bucket_warm_start(warm_start, b: DegreeBucket, dC: int, lead: int,
+                       C: int, dtype) -> jnp.ndarray:
+    """Stack per-node warm-start thetas into the bucket's padded (k, d*C)."""
+    W0 = np.zeros((len(b.nodes), dC), dtype=np.float32)
     if warm_start is not None:
         degs = b.mask.sum(axis=1).astype(np.int64)
         for row, i in enumerate(b.nodes):
             w = warm_start[int(i)]
             if w is None:
                 continue
-            di = lead + int(degs[row])
+            di = (lead + int(degs[row])) * C
             W0[row, :di] = np.asarray(w, dtype=np.float32)[:di]
     return jnp.asarray(W0, dtype=dtype)
 
@@ -352,13 +432,15 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
                           theta_fixed: Optional[jnp.ndarray] = None,
                           n_iter: int = 40,
                           sample_weight: Optional[jnp.ndarray] = None,
-                          warm_start: Optional[Sequence] = None
-                          ) -> List[LocalFit]:
+                          warm_start: Optional[Sequence] = None,
+                          family=None) -> List[LocalFit]:
     """Fit all p local CL estimators via degree-bucketed batched solves.
 
     Drop-in replacement for the per-node loop: returns the same
     ``List[LocalFit]`` (ordered by node), with per-node results trimmed back
-    to the node's true degree.
+    to the node's true block count. ``family`` selects the model family
+    (default Ising); local parameter vectors follow
+    ``family.beta(graph, i, include_singleton)`` block order.
 
     Streaming extensions:
       sample_weight — ``(n,)`` shared or ``(p, n)`` per-node 0/1 observation
@@ -370,32 +452,36 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
         (``None`` entries allowed) used to seed Newton; incremental re-fits
         then converge in a couple of damped steps.
     """
+    if family is None:
+        family = ISING
+    C = family.block_dim
     if theta_fixed is None:
-        theta_fixed = jnp.zeros(graph.n_params, X.dtype)
+        theta_fixed = jnp.zeros(family.n_params(graph), X.dtype)
     theta_fixed = jnp.asarray(theta_fixed)
+    node_tf = theta_fixed[: graph.p * C].reshape(graph.p, C)
     n = X.shape[0]
     lead = 1 if include_singleton else 0
 
     out: List[Optional[LocalFit]] = [None] * graph.p
     for b in degree_buckets(graph):
-        offsets = theta_fixed[jnp.asarray(b.nodes)]
-        d = b.deg_pad + lead
+        offsets = node_tf[jnp.asarray(b.nodes)]
+        dC = (b.deg_pad + lead) * C
         sw = _bucket_weights(sample_weight, b.nodes, n)
-        W0 = _bucket_warm_start(warm_start, b, d, lead, X.dtype)
+        W0 = _bucket_warm_start(warm_start, b, dC, lead, C, X.dtype)
         if sw is None:
             sw = jnp.ones((1, 1), X.dtype)   # placeholder, never read
         W, H, J, V, S = _solve_bucket(
             X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
             jnp.asarray(b.mask), offsets, W0, sw, include_singleton, n_iter,
-            sample_weight is not None, warm_start is not None)
+            sample_weight is not None, warm_start is not None, family)
         W, H, J, V, S = (np.asarray(W), np.asarray(H), np.asarray(J),
                          np.asarray(V), np.asarray(S))
         degs = b.mask.sum(axis=1).astype(np.int64)
         for row, i in enumerate(b.nodes):
             i = int(i)
-            di = lead + int(degs[row])
+            di = (lead + int(degs[row])) * C
             out[i] = LocalFit(
-                i=i, beta=graph.beta(i, include_singleton),
+                i=i, beta=family.beta(graph, i, include_singleton),
                 theta=W[row, :di].copy(), H=H[row, :di, :di].copy(),
                 J=J[row, :di, :di].copy(), V=V[row, :di, :di].copy(),
                 s=S[row, :, :di].copy())
@@ -404,42 +490,44 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
 
 # ------------------------------------------------------- proximal updates
 @functools.partial(jax.jit,
-                   static_argnames=("include_singleton", "n_iter", "weighted"))
+                   static_argnames=("include_singleton", "n_iter", "weighted",
+                                    "family"))
 def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
                        include_singleton: bool, n_iter: int,
-                       weighted: bool = False, tol: float = 2e-6,
+                       weighted: bool = False, family=ISING, tol: float = 2e-6,
                        ridge: float = 1e-8, max_step: float = 5.0):
     """ADMM primal update for a whole degree bucket in one XLA program.
 
     Maximizes, per node,  ``l^i(w) - lam'w - sum_a rho_a (w_a - tbar_a)^2/2``
     (the objective of :func:`repro.core.admm._prox_solve`) with the same
-    closed-form Newton machinery as :func:`_solve_bucket`: the prox terms
-    only shift the gradient by ``-lam - rho*(w - tbar)`` and the Hessian by
-    ``-diag(rho)``, so the bucket stays uniformly negative definite. lam,
-    rho, tbar: (k, d) with zeros on padded coordinates. Returns W only.
+    closed-form family-dispatched Newton machinery as :func:`_solve_bucket`:
+    the prox terms only shift the gradient by ``-lam - rho*(w - tbar)`` and
+    the Hessian by ``-diag(rho)``, so the bucket stays uniformly negative
+    definite. lam, rho, tbar: (k, d*C) with zeros on padded coordinates.
+    Returns W only.
     """
     n = X.shape[0]
-    Zb, xi, base, cmask = _bucket_design(X, nodes, nbrs, mask, offsets,
-                                         include_singleton)
-    k, d, _ = Zb.shape
-    ZbT = jnp.swapaxes(Zb, 1, 2)
-    eye = jnp.eye(d, dtype=Zb.dtype)
-    pad_diag = (1.0 - cmask)[:, :, None] * eye[None, :, :]
+    Zb, xi, base, cmask = _bucket_design(family, X, nodes, nbrs, mask,
+                                         offsets, include_singleton)
+    k, C, d, _ = Zb.shape
+    dC = d * C
+    eye = jnp.eye(dC, dtype=Zb.dtype)
+    cflat = _flat_coord_mask(cmask, C)
+    pad_diag = (1.0 - cflat)[:, :, None] * eye[None, :, :]
     rho_diag = rho[:, :, None] * eye[None, :, :]
     if weighted:
         denom = jnp.maximum(jnp.sum(sw, axis=1), 1.0)
     else:
         denom = jnp.full((k,), float(n), Zb.dtype)
 
+    score_curvature, grad_vec, curvature_matrix, avg_loglik, _ = \
+        _channel_ops(family, Zb, base, xi, sw, weighted, denom)
+
     def objective(Ws):
         # (c, k): penalized criterion for a stack of candidate points
-        etas = base[None] + jnp.einsum("kdn,ckd->ckn", Zb, Ws)
-        ll = jax.nn.log_sigmoid(2.0 * xi[None] * etas)
-        if weighted:
-            ll = ll * sw[None]
         pen = (lam[None] * Ws).sum(axis=2) \
             + 0.5 * (rho[None] * (Ws - tbar[None]) ** 2).sum(axis=2)
-        return ll.sum(axis=2) / denom[None, :] - pen
+        return avg_loglik(Ws) - pen
 
     def cond(carry):
         _, it, delta = carry
@@ -447,15 +535,9 @@ def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
 
     def newton_step(carry):
         W, it, _ = carry
-        eta = base + jnp.einsum("kdn,kd->kn", Zb, W)
-        r = 2.0 * xi * jax.nn.sigmoid(-2.0 * xi * eta)
-        kap = r * (2.0 * xi - r)
-        if weighted:
-            r = r * sw
-            kap = kap * sw
-        g = jnp.einsum("kdn,kn->kd", Zb, r) / denom[:, None] \
-            - lam - rho * (W - tbar)
-        H = -(Zb * kap[:, None, :]) @ ZbT / denom[:, None, None] \
+        r, kap = score_curvature(W)
+        g = grad_vec(r) / denom[:, None] - lam - rho * (W - tbar)
+        H = -curvature_matrix(kap) / denom[:, None, None] \
             - rho_diag - ridge * eye[None, :, :] - pad_diag
         dirn = _gauss_jordan_solve(H, g[..., None])[..., 0]
         finite = jnp.all(jnp.isfinite(dirn), axis=1, keepdims=True)
@@ -485,7 +567,7 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
                         include_singleton: bool = True,
                         theta_fixed: Optional[jnp.ndarray] = None,
                         sample_weight: Optional[jnp.ndarray] = None,
-                        n_iter: int = 15) -> List[np.ndarray]:
+                        n_iter: int = 15, family=None) -> List[np.ndarray]:
     """Batched ADMM primal update across all nodes (one solve per bucket).
 
     Per-node inputs follow :func:`repro.core.admm.admm_mple`: ``lambdas`` /
@@ -496,12 +578,18 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
     warm starts (defaults to the consensus view restricted to ``beta_i``).
     Supports the same ``sample_weight`` masks as
     :func:`fit_all_local_batched`, which is what lets the streaming engine
-    run ADMM rounds over a growing buffer without recompiling. Returns the
-    updated per-node theta vectors.
+    run ADMM rounds over a growing buffer without recompiling, and the same
+    ``family`` dispatch (default Ising; ``beta_i`` then follows
+    ``family.beta`` block order). Returns the updated per-node theta
+    vectors.
     """
+    if family is None:
+        family = ISING
+    C = family.block_dim
     if theta_fixed is None:
-        theta_fixed = jnp.zeros(graph.n_params, X.dtype)
+        theta_fixed = jnp.zeros(family.n_params(graph), X.dtype)
     theta_fixed = jnp.asarray(theta_fixed)
+    node_tf = theta_fixed[: graph.p * C].reshape(graph.p, C)
     per_node_bar = isinstance(theta_bar, (list, tuple))
     if not per_node_bar:
         theta_bar = np.asarray(theta_bar)
@@ -511,20 +599,20 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
     out: List[Optional[np.ndarray]] = [None] * graph.p
     for b in degree_buckets(graph):
         k = len(b.nodes)
-        d = b.deg_pad + lead
+        dC = (b.deg_pad + lead) * C
         degs = b.mask.sum(axis=1).astype(np.int64)
-        lam = np.zeros((k, d), dtype=np.float32)
-        rho = np.zeros((k, d), dtype=np.float32)
-        tbar = np.zeros((k, d), dtype=np.float32)
+        lam = np.zeros((k, dC), dtype=np.float32)
+        rho = np.zeros((k, dC), dtype=np.float32)
+        tbar = np.zeros((k, dC), dtype=np.float32)
         for row, i in enumerate(b.nodes):
             i = int(i)
-            di = lead + int(degs[row])
+            di = (lead + int(degs[row])) * C
             lam[row, :di] = np.asarray(lambdas[i])[:di]
             rho[row, :di] = np.asarray(rhos[i])[:di]
             if per_node_bar:
                 tbar[row, :di] = np.asarray(theta_bar[i])[:di]
             else:
-                beta = np.asarray(graph.beta(i, include_singleton))
+                beta = np.asarray(family.beta(graph, i, include_singleton))
                 tbar[row, :di] = theta_bar[beta][:di]
         # warm-start at the previous iterate where given; nodes without one
         # (thetas0 absent or a None entry) start at their consensus view
@@ -533,20 +621,20 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
             for row, i in enumerate(b.nodes):
                 t0 = thetas0[int(i)]
                 if t0 is not None:
-                    di = lead + int(degs[row])
+                    di = (lead + int(degs[row])) * C
                     W0[row, :di] = np.asarray(t0, dtype=np.float32)[:di]
         W0 = jnp.asarray(W0, dtype=X.dtype)
         sw = _bucket_weights(sample_weight, b.nodes, n)
         if sw is None:
             sw = jnp.ones((1, 1), X.dtype)
-        offsets = theta_fixed[jnp.asarray(b.nodes)]
+        offsets = node_tf[jnp.asarray(b.nodes)]
         W = _solve_bucket_prox(
             X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
             jnp.asarray(b.mask), offsets, W0, sw,
             jnp.asarray(lam), jnp.asarray(rho), jnp.asarray(tbar),
-            include_singleton, n_iter, sample_weight is not None)
+            include_singleton, n_iter, sample_weight is not None, family)
         W = np.asarray(W)
         for row, i in enumerate(b.nodes):
-            di = lead + int(degs[row])
+            di = (lead + int(degs[row])) * C
             out[int(i)] = W[row, :di].copy()
     return out  # type: ignore[return-value]

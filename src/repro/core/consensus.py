@@ -58,20 +58,27 @@ def _owner_groups(owners: Dict[int, List[Tuple[int, int]]]):
 
 def combine(graph: Graph, fits: List[LocalFit], scheme: str,
             include_singleton: bool = True,
-            theta_fixed: Optional[np.ndarray] = None) -> np.ndarray:
+            theta_fixed: Optional[np.ndarray] = None,
+            family=None) -> np.ndarray:
     """One-step consensus estimate; returns the full flat theta vector.
 
     Vectorized over the owner structure: parameters are grouped by owner
     count and every group's weights/averages are computed with batched
     float64 array ops (no per-parameter Python loop). Single-owner
-    parameters — the singletons — pass the local estimate through exactly.
+    parameters — the singleton blocks — pass the local estimate through
+    exactly. With a ``family``, ownership runs over the family's parameter
+    *blocks* (every scalar of an edge block shares the block's two owners,
+    at ``family.beta`` block positions); the default is the scalar Ising
+    layout.
     """
+    n_params = graph.n_params if family is None else family.n_params(graph)
     if theta_fixed is None:
-        theta_fixed = np.zeros(graph.n_params, dtype=np.float64)
+        theta_fixed = np.zeros(n_params, dtype=np.float64)
     theta = np.array(theta_fixed, dtype=np.float64, copy=True)
 
     if scheme == "matrix":
-        return _matrix_consensus(graph, fits, include_singleton, theta)
+        return _matrix_consensus(graph, fits, include_singleton, theta,
+                                 family)
     if scheme not in SCHEMES:
         raise ValueError(f"unknown scheme {scheme!r}")
 
@@ -90,7 +97,7 @@ def combine(graph: Graph, fits: List[LocalFit], scheme: str,
         for f in fits:
             s_pad[f.i, :, :len(f.theta)] = f.s
 
-    owners = param_owners(graph, include_singleton)
+    owners = param_owners(graph, include_singleton, family)
     for k, (aidx, node, pos) in _owner_groups(owners).items():
         est = theta_mat[node, pos]                          # (P, k)
         diag = np.maximum(vdiag_mat[node, pos], 1e-12)
@@ -137,13 +144,13 @@ def combine(graph: Graph, fits: List[LocalFit], scheme: str,
 
 def _matrix_consensus(graph: Graph, fits: List[LocalFit],
                       include_singleton: bool,
-                      theta: np.ndarray) -> np.ndarray:
+                      theta: np.ndarray, family=None) -> np.ndarray:
     """theta = (sum_i W^i)^{-1} sum_i W^i theta^i with W^i = Hhat^i (Eq. 7).
 
     Not distributable (global matrix inverse) — included as the reference
     point that is asymptotically equivalent to joint MPLE (Cor 4.2).
     """
-    free = free_indices(graph, include_singleton)
+    free = free_indices(graph, include_singleton, family)
     pos_of = {int(a): k for k, a in enumerate(free)}
     d = len(free)
     W_sum = np.zeros((d, d))

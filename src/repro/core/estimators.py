@@ -152,27 +152,34 @@ def fit_all_local(graph: Graph, X: jnp.ndarray,
                   theta_fixed: Optional[jnp.ndarray] = None,
                   method: str = "batched",
                   sample_weight: Optional[jnp.ndarray] = None,
-                  warm_start: Optional[Sequence] = None) -> List[LocalFit]:
+                  warm_start: Optional[Sequence] = None,
+                  family=None) -> List[LocalFit]:
     """Fit all p local CL estimators.
 
     method="batched" (default) groups nodes into degree buckets and solves
     each bucket in one vmapped Newton-IRLS program with closed-form
-    gradients/Hessians; method="loop" is the legacy per-node path.
+    gradients/Hessians; method="loop" is the legacy per-node Ising path.
 
-    ``sample_weight`` (0/1 observation masks, ``(n,)`` or ``(p, n)``) and
-    ``warm_start`` (previous per-node thetas) are streaming extensions of the
-    batched engine — see :func:`repro.core.batched.fit_all_local_batched`;
-    the loop path does not support them.
+    ``sample_weight`` (0/1 observation masks, ``(n,)`` or ``(p, n)``),
+    ``warm_start`` (previous per-node thetas), and ``family`` (any
+    registered :class:`~repro.core.families.base.ModelFamily`; default
+    Ising) are extensions of the batched engine — see
+    :func:`repro.core.batched.fit_all_local_batched`; the loop path does
+    not support them.
     """
     if method == "batched":
         from .batched import fit_all_local_batched
         return fit_all_local_batched(graph, X, include_singleton, theta_fixed,
                                      sample_weight=sample_weight,
-                                     warm_start=warm_start)
+                                     warm_start=warm_start, family=family)
     if method == "loop":
         if sample_weight is not None or warm_start is not None:
             raise ValueError(
                 "sample_weight/warm_start require method='batched'")
+        if family is not None and family.name != "ising":
+            raise ValueError(
+                "method='loop' implements only the Ising family; "
+                f"use method='batched' for {family.name!r}")
         return fit_all_local_loop(graph, X, include_singleton, theta_fixed)
     raise ValueError(f"unknown method {method!r}")
 

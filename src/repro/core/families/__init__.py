@@ -1,0 +1,56 @@
+"""Model-family registry.
+
+Families register here by name; everything downstream — the batched
+estimator engine, consensus, samplers, the streaming stack, benchmarks and
+the conformance test harness — resolves families through :func:`get_family`
+/ :func:`registered_families`, so adding a model family is: implement the
+:class:`~repro.core.families.base.ModelFamily` contract, register an
+instance, and make ``tests/families/test_conformance.py`` pass (the suite
+parametrizes over this registry automatically). See the "adding a model
+family" guide in the README.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from .base import ModelFamily, fit_mple_family, fit_node_oracle
+from .gaussian import GaussianMRF
+from .ising import IsingFamily
+from .potts import PottsFamily
+
+_REGISTRY: Dict[str, ModelFamily] = {}
+
+
+def register_family(family: ModelFamily) -> ModelFamily:
+    """Register (or replace) a family instance under ``family.name``."""
+    if not family.name:
+        raise ValueError("family needs a non-empty name")
+    _REGISTRY[family.name] = family
+    return family
+
+
+def get_family(name: str) -> ModelFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown model family {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def registered_families() -> Tuple[ModelFamily, ...]:
+    """All registered families, name-sorted (the conformance axis)."""
+    return tuple(_REGISTRY[k] for k in sorted(_REGISTRY))
+
+
+#: canonical instances — the three families of this repro
+ISING = register_family(IsingFamily())
+GAUSSIAN = register_family(GaussianMRF())
+POTTS3 = register_family(PottsFamily(q=3))
+
+__all__ = [
+    "ModelFamily", "IsingFamily", "GaussianMRF", "PottsFamily",
+    "ISING", "GAUSSIAN", "POTTS3",
+    "register_family", "get_family", "registered_families",
+    "fit_mple_family", "fit_node_oracle",
+]

@@ -1,0 +1,68 @@
+"""Ising family: the seed model re-expressed as a :class:`ModelFamily`.
+
+Single-channel (C = 1) logistic node conditionals over x in {-1, +1}; the
+flat layout and all model math delegate to :mod:`repro.core.ising`, so the
+family instance and the seed code paths agree exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs import Graph
+from .. import ising as I
+from .base import ModelFamily
+
+
+@dataclasses.dataclass(frozen=True)
+class IsingFamily(ModelFamily):
+    name: str = "ising"
+
+    @property
+    def block_dim(self) -> int:
+        return 1
+
+    # ----------------------------------------------------- channel hooks
+    def edge_features(self, x):
+        return jnp.asarray(x)[..., None]
+
+    def loglik_eta(self, eta, xi):
+        return jax.nn.log_sigmoid(2.0 * xi * eta[..., 0, :])
+
+    def dl_deta(self, eta, xi):
+        r = 2.0 * xi * jax.nn.sigmoid(-2.0 * xi * eta[..., 0, :])
+        return r[..., None, :]
+
+    def curvature(self, eta, xi):
+        r = 2.0 * xi * jax.nn.sigmoid(-2.0 * xi * eta[..., 0, :])
+        kap = r * (2.0 * xi - r)      # = 4 sigma(2 eta) sigma(-2 eta)
+        return kap[..., None, None, :]
+
+    # ---------------------------------------------------- sampling hooks
+    def init_draw(self, key, p: int):
+        return jnp.where(jax.random.uniform(key, (p,)) < 0.5, 1.0, -1.0)
+
+    def cond_draw(self, key, eta):
+        u = jax.random.uniform(key, eta.shape[:-1])
+        return jnp.where(u < jax.nn.sigmoid(2.0 * eta[..., 0]), 1.0, -1.0)
+
+    # ------------------------------------------------------------- model
+    def suff_stats(self, graph: Graph, X):
+        return I.suff_stats(graph, jnp.asarray(X))
+
+    # ------------------------------------------------------------ oracle
+    def exact_moments(self, graph: Graph, theta) -> np.ndarray:
+        mu, _ = I.exact_moments(graph, jnp.asarray(theta))
+        return np.asarray(mu, dtype=np.float64)
+
+    def exact_sample(self, graph: Graph, theta, n: int, key):
+        from ..sampling import exact_sample
+        return exact_sample(I.IsingModel(graph, jnp.asarray(theta)), n, key)
+
+    def random_params(self, graph: Graph, key, scale_edge: float = 0.4,
+                      scale_node: float = 0.3):
+        m = I.random_model(graph, scale_edge, scale_node, key)
+        return m.theta

@@ -3,8 +3,8 @@ reference elsewhere (CPU dry-run / tests use interpret mode explicitly)."""
 import jax
 
 from .kernel import ising_cl_logits
-from .ref import ising_cl_logits_ref, ising_cl_score_ref
-from .score import ising_cl_score
+from .ref import cl_score_ref, ising_cl_logits_ref
+from .score import cl_score
 
 
 def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
@@ -15,10 +15,15 @@ def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
     return ising_cl_logits_ref(x, theta, mask, bias)
 
 
-def score_stats_op(x, theta, mask, bias, *, use_pallas=None):
-    """Fused (eta, r, S) pseudo-likelihood score statistics."""
+def score_stats_op(x, theta, mask, bias, *, kind: str = "ising",
+                   use_pallas=None):
+    """Fused (eta, r, S) pseudo-likelihood score statistics.
+
+    ``kind`` selects the family epilogue ("ising" or "gaussian"); both the
+    Pallas kernel and the jnp reference dispatch on it.
+    """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
-        return ising_cl_score(x, theta, mask, bias, interpret=False)
-    return ising_cl_score_ref(x, theta, mask, bias)
+        return cl_score(x, theta, mask, bias, kind=kind, interpret=False)
+    return cl_score_ref(x, theta, mask, bias, kind=kind)

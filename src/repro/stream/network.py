@@ -59,6 +59,7 @@ class Network:
         self.msgs_dropped = 0
         self.msgs_delivered = 0
         self.scalars_sent = 0
+        self.scalars_dropped = 0
         self.scalars_delivered = 0
 
     def link_active(self, rnd: int, src: int, dst: int) -> bool:
@@ -77,6 +78,7 @@ class Network:
         if self.config.drop_prob > 0.0 and \
                 self._rng.rand() < self.config.drop_prob:
             self.msgs_dropped += 1
+            self.scalars_dropped += int(n_scalars)
             return False
         lat = self.config.delay
         if self.config.jitter > 0:
@@ -98,3 +100,7 @@ class Network:
     @property
     def in_flight(self) -> int:
         return len(self._queue)
+
+    @property
+    def scalars_in_flight(self) -> int:
+        return sum(m.n_scalars for m in self._queue)

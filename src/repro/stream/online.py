@@ -8,18 +8,23 @@ SampleBuffer`, tracks how far into the pool each sensor has seen (prefix
 counts), and re-fits *all* nodes through the degree-bucketed batched engine
 with per-node 0/1 observation masks and the previous thetas as Newton warm
 starts — an incremental re-fit is a couple of damped Newton steps on one
-already-compiled program per bucket, not a from-scratch solve.
+already-compiled program per bucket, not a from-scratch solve. The whole
+bank is **family-generic**: pass any registered
+:class:`~repro.core.families.base.ModelFamily` and the same machinery
+streams Gaussian MRF or Potts estimation.
 
 :func:`pseudo_score` is the observer-side any-time diagnostic: the exact
-gradient of the average pseudo-likelihood at an arbitrary theta, computed in
-one pass over the padded buffer by the fused Pallas score kernel
-(``repro.kernels.ising_cl.score``). Its norm shrinking toward zero is a
-model-free convergence signal for whatever consensus estimate is being
-traced.
+gradient of the average pseudo-likelihood at an arbitrary theta. For the
+single-channel families whose residual the fused Pallas score kernel can
+emit (Ising, Gaussian — see ``repro.kernels.ising_cl.score.KERNEL_KINDS``)
+it runs in one pass over the padded buffer; other families fall back to the
+family's autodiff reference score on the live rows. Its norm shrinking
+toward zero is a model-free convergence signal for whatever consensus
+estimate is being traced.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -27,9 +32,9 @@ import numpy as np
 from ..core.batched import fit_all_local_batched
 from ..core.consensus import TRUST_RADIUS
 from ..core.estimators import LocalFit
+from ..core.families import ISING
 from ..core.graphs import Graph
-from ..core.ising import pair_matrix
-from ..kernels.ising_cl.score import ising_cl_score_padded
+from ..kernels.ising_cl.score import KERNEL_KINDS, cl_score_padded
 from .buffer import SampleBuffer
 
 
@@ -39,15 +44,19 @@ class StreamingEstimator:
     The pool model: the environment draws i.i.d. samples x_1, x_2, ...;
     sensor i has observed the first ``counts[i]`` of them (sensors sample at
     different rates, so counts are heterogeneous). ``refit()`` updates every
-    node's local fit to its current prefix.
+    node's local fit to its current prefix. ``family`` selects the model
+    family (default Ising).
     """
 
     def __init__(self, graph: Graph, include_singleton: bool = True,
                  theta_fixed: Optional[np.ndarray] = None,
-                 capacity: int = 64, n_iter: int = 40) -> None:
+                 capacity: int = 64, n_iter: int = 40,
+                 family=None) -> None:
         self.graph = graph
+        self.family = ISING if family is None else family
         self.include_singleton = include_singleton
-        self.theta_fixed = (np.zeros(graph.n_params, dtype=np.float64)
+        n_params = self.family.n_params(graph)
+        self.theta_fixed = (np.zeros(n_params, dtype=np.float64)
                             if theta_fixed is None
                             else np.asarray(theta_fixed, dtype=np.float64))
         self.n_iter = n_iter
@@ -102,7 +111,8 @@ class StreamingEstimator:
                                     dtype=self.buffer.data.dtype),
             n_iter=self.n_iter,
             sample_weight=jnp.asarray(masks),
-            warm_start=self._warm)
+            warm_start=self._warm,
+            family=self.family)
         changed = self.counts != self._fit_counts
         self.versions = self.versions + changed.astype(np.int64)
         self._fit_counts = self.counts.copy()
@@ -123,31 +133,42 @@ class StreamingEstimator:
     def score_norm(self, theta: np.ndarray, interpret: bool = True) -> float:
         """||grad pseudo-loglik(theta)|| over the pooled samples."""
         g = pseudo_score(self.graph, theta, self.buffer.data, self.buffer.n,
-                         interpret=interpret)
+                         interpret=interpret, family=self.family)
         return float(np.linalg.norm(g))
 
 
 def pseudo_score(graph: Graph, theta: np.ndarray, x_pad,
-                 n_seen: int, interpret: bool = True) -> np.ndarray:
+                 n_seen: int, interpret: bool = True,
+                 family=None) -> np.ndarray:
     """Exact flat gradient of the average pseudo-likelihood at ``theta``.
 
-    One fused-kernel pass over the (zero-padded) sample buffer: the kernel
-    emits the per-sample score residual r and the score Gram S = r^T X / n;
-    singleton gradients are column means of r and the coupling gradient of
-    edge (i, j) is ``S[i, j] + S[j, i]`` (see the kernel module docstring).
+    Family-dispatched: single-channel families whose residual the fused
+    kernel can emit (Ising, Gaussian) run one fused pass over the
+    (zero-padded) sample buffer — the kernel emits the per-sample score
+    residual r and the score Gram S = r^T X / n; singleton gradients are
+    live-row means of r and the coupling gradient of edge (i, j) is
+    ``S[i, j] + S[j, i]`` (see the kernel module docstring). Other families
+    (Potts) fall back to the family's autodiff reference score over the
+    live rows.
     """
+    if family is None:
+        family = ISING
     theta = np.asarray(theta, dtype=np.float64)
     p = graph.p
     if n_seen <= 0:
-        return np.zeros(graph.n_params)
-    T = pair_matrix(graph, jnp.asarray(theta[p:], dtype=jnp.float32))
+        return np.zeros(family.n_params(graph))
+    if family.name not in KERNEL_KINDS or family.block_dim != 1:
+        return family.pseudo_score(graph, theta,
+                                   np.asarray(x_pad)[: int(n_seen)])
+    T = family.coupling_tensor(
+        graph, jnp.asarray(theta, dtype=jnp.float32))[:, :, 0]
     A = jnp.asarray(graph.adjacency)
     bias = jnp.asarray(theta[:p], dtype=jnp.float32)
-    _, r, S = ising_cl_score_padded(jnp.asarray(x_pad), T, A, bias,
-                                    n_seen, interpret=interpret)
-    r = np.asarray(r, dtype=np.float64)
+    _, r, S = cl_score_padded(jnp.asarray(x_pad), T, A, bias, n_seen,
+                              kind=family.name, interpret=interpret)
+    r = np.asarray(r, dtype=np.float64)[: int(n_seen)]
     S = np.asarray(S, dtype=np.float64)
-    g = np.zeros(graph.n_params)
+    g = np.zeros(family.n_params(graph))
     g[:p] = r.sum(axis=0) / n_seen
     for k, (i, j) in enumerate(graph.edges):
         g[p + k] = S[i, j] + S[j, i]

@@ -110,36 +110,40 @@ class StreamSimulator:
                  arrivals: ArrivalSpec = ArrivalSpec(rate=8.0),
                  refit_every: int = 1, newton_iters: int = 40,
                  admm_rho: float = 1.0, capacity: int = 64,
-                 seed: int = 0) -> None:
+                 seed: int = 0, family=None) -> None:
         if estimator not in ("one_step", "admm"):
             raise ValueError(f"unknown estimator {estimator!r}")
         if scheme not in ONE_STEP_SCHEMES:
             raise ValueError(f"unknown streaming scheme {scheme!r}")
+        from ..core.families import ISING
         self.graph = graph
+        self.family = ISING if family is None else family
         self.pool = np.asarray(pool, dtype=np.float32)
         self.estimator = estimator
         self.scheme = scheme
         self.include_singleton = include_singleton
-        self.theta_fixed = (np.zeros(graph.n_params)
+        self.theta_fixed = (np.zeros(self.family.n_params(graph))
                             if theta_fixed is None
                             else np.asarray(theta_fixed, dtype=np.float64))
         self.theta_star = (None if theta_star is None
                            else np.asarray(theta_star, dtype=np.float64))
-        self.free = np.asarray(free_indices(graph, include_singleton))
+        self.free = np.asarray(free_indices(graph, include_singleton,
+                                            self.family))
         self.arrivals = arrivals
         self.refit_every = max(int(refit_every), 1)
         self.newton_iters = newton_iters
         self._arr_rng = np.random.RandomState(seed)
 
         self.est = StreamingEstimator(graph, include_singleton, theta_fixed,
-                                      capacity=capacity, n_iter=newton_iters)
+                                      capacity=capacity, n_iter=newton_iters,
+                                      family=self.family)
         links = [(i, j) for (a, b) in graph.edges for (i, j) in ((a, b),
                                                                 (b, a))]
         self.net = Network(links, network or NetworkConfig())
         # params shared between the endpoints of each directed link: exactly
-        # the link's own edge coupling (beta_i ∩ beta_j, paper Sec. 3.1)
+        # the link's own edge-coupling block (beta_i ∩ beta_j, Sec. 3.1)
         self._shared: Dict[Tuple[int, int], List[int]] = {}
-        owners = param_owners(graph, include_singleton)
+        owners = param_owners(graph, include_singleton, self.family)
         for (i, j) in links:
             self._shared[(i, j)] = sorted(
                 a for a, own in owners.items()
@@ -152,7 +156,8 @@ class StreamSimulator:
         self._fed = 0
 
         if estimator == "admm":
-            betas = [graph.beta(i, include_singleton) for i in range(graph.p)]
+            betas = [self.family.beta(graph, i, include_singleton)
+                     for i in range(graph.p)]
             self._betas = betas
             self._admm_theta = [self.theta_fixed[np.asarray(b)].copy()
                                 for b in betas]
@@ -233,7 +238,8 @@ class StreamSimulator:
             thetas0=self._admm_theta,
             include_singleton=self.include_singleton,
             theta_fixed=self.theta_fixed.astype(np.float32),
-            sample_weight=masks, n_iter=self.newton_iters)
+            sample_weight=masks, n_iter=self.newton_iters,
+            family=self.family)
         # NaN or runaway primal iterates (degenerate small-n prox solves)
         # would be absorbing through the warm start and the dual update —
         # reset the offending coordinates to their consensus view instead.

@@ -76,6 +76,7 @@ def test_batched_matches_loop_fixed_singleton(grid_setup):
         np.testing.assert_allclose(a.theta, b.theta, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_batched_matches_loop_scale_free():
     """Heterogeneous degrees (the bucketing actually has work to do)."""
     g = C.scale_free_graph(24, m=1, seed=0)

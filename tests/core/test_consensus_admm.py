@@ -53,6 +53,7 @@ def test_max_picks_min_variance_owner(grid_setup):
         np.testing.assert_allclose(th[a], fits[best[0]].theta[best[1]])
 
 
+@pytest.mark.slow
 def test_admm_converges_to_mple(grid_setup):
     g, m, X, fits = grid_setup
     th_mple = C.fit_mple(g, X)
@@ -82,6 +83,7 @@ def test_admm_consensus_init_faster_than_zero(grid_setup):
     assert err_d < err_0
 
 
+@pytest.mark.slow
 def test_star_max_beats_uniform():
     """The paper's headline: on stars, max >> uniform consensus."""
     g = C.star_graph(8)

@@ -53,6 +53,7 @@ def test_consistency_with_n(setup):
     assert errs[1] < errs[0]
 
 
+@pytest.mark.slow
 def test_mle_beats_or_ties_mple_avg():
     """Across a few seeds, exact MLE MSE <= MPLE MSE on average (efficiency)."""
     g = C.grid_graph(2, 3)

@@ -1,0 +1,56 @@
+"""Golden-value regression pins for the estimator stack.
+
+``tests/core/golden_estimators.json`` (regenerated only deliberately via
+``tools/gen_golden.py``) freezes seeded outputs of the batched local-fit
+engine and all four one-step consensus schemes on a small grid-graph Ising
+problem. Reproducing them to 1e-10 catches *silent* numeric drift — a
+changed einsum association, a reordered reduction, an accidental dtype
+downgrade — that tolerance-based correctness tests would absorb.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_estimators.json")
+ATOL = 1e-10
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def recomputed():
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "tools"))
+    try:
+        import gen_golden
+    finally:
+        sys.path.pop(0)
+    return gen_golden.compute()
+
+
+def test_scenario_is_the_frozen_one(golden, recomputed):
+    assert recomputed["config"] == golden["config"]
+    np.testing.assert_allclose(recomputed["theta_star"],
+                               golden["theta_star"], atol=ATOL)
+
+
+def test_batched_local_fits_bitstable(golden, recomputed):
+    assert len(recomputed["local_theta"]) == len(golden["local_theta"])
+    for got, want in zip(recomputed["local_theta"], golden["local_theta"]):
+        np.testing.assert_allclose(got, want, atol=ATOL)
+    for got, want in zip(recomputed["local_vdiag"], golden["local_vdiag"]):
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+def test_combine_all_schemes_bitstable(golden, recomputed):
+    assert set(recomputed["combine"]) == set(golden["combine"])
+    for sch, want in golden["combine"].items():
+        np.testing.assert_allclose(recomputed["combine"][sch], want,
+                                   atol=ATOL, err_msg=sch)

@@ -11,6 +11,9 @@ from repro.train import consensus as CT
 from repro.train import step as TS
 from repro.data.pipeline import DataConfig, SyntheticLM, pod_sharded_batches
 
+# multi-round consensus training sweeps dominate wall-clock -> slow tier
+pytestmark = pytest.mark.slow
+
 
 def tiny_cfg():
     import dataclasses

@@ -1,0 +1,262 @@
+"""Parametric conformance harness for the exponential-family model zoo.
+
+Every family registered in :mod:`repro.core.families` is taken through ONE
+contract — layout invariants, closed-form channel hooks vs autodiff,
+batched == loop == per-node oracle agreement, one-step consensus within
+tolerance of the centralized MPLE oracle, chunked streaming == one-shot
+batch, proximal (streaming-ADMM) solves consistent with plain fits, the
+family-dispatched pseudo-score vs autodiff, and sampler moment matching
+against the exact small-p oracle. A future family (or a refactor of an
+existing one) is accepted or rejected by exactly this machinery: register
+the instance, add its :class:`Case` row, and the whole suite parametrizes
+over it automatically — a registered family *without* a case row fails
+``test_every_registered_family_has_a_case``.
+
+The Ising rows additionally pin the new code paths to the seed
+implementations (per-node loop solver, fused Pallas score kernel — whose
+dispatch tests live in ``tests/kernels/test_score_kernel.py``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.stream as S
+from repro.core.batched import fit_all_local_batched, prox_update_batched
+from repro.core.families import (fit_mple_family, fit_node_oracle,
+                                 registered_families)
+from repro.kernels.ising_cl.score import KERNEL_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """Per-family conformance configuration."""
+    family: object
+    graph: C.Graph
+    seed: int
+    n_fit: int = 2500
+    combine_tol: float = 0.35      # max |combine - centralized MPLE|
+    moment_tol: float = 4.5        # sampler moment error, units of 1/sqrt(n)
+
+
+_FAMS = {f.name: f for f in registered_families()}
+CASES = [
+    Case(_FAMS["ising"], C.grid_graph(3, 3), seed=0),
+    # Gaussian suff stats are unbounded -> looser MC moment tolerance
+    Case(_FAMS["gaussian"], C.grid_graph(3, 3), seed=1, moment_tol=9.0),
+    # Potts one-step owners see fewer effective samples per indicator
+    # channel than binary families at equal n -> looser combine tolerance
+    Case(_FAMS["potts"], C.grid_graph(2, 3), seed=2, combine_tol=0.6),
+]
+
+
+def test_every_registered_family_has_a_case():
+    """Registration is gated on conformance: a family in the registry with
+    no Case row here is a failure, not a silent skip."""
+    assert {c.family.name for c in CASES} == set(_FAMS)
+
+
+@pytest.fixture(params=CASES, ids=lambda c: c.family.name, scope="module")
+def case(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def setup(case):
+    """(family, graph, theta_star, X) with X drawn from the exact joint."""
+    fam, g = case.family, case.graph
+    theta = fam.random_params(g, jax.random.PRNGKey(case.seed))
+    X = fam.exact_sample(g, theta, case.n_fit,
+                         jax.random.PRNGKey(case.seed + 100))
+    return fam, g, np.asarray(theta, dtype=np.float64), np.asarray(X)
+
+
+@pytest.fixture(scope="module")
+def fits(setup):
+    fam, g, theta, X = setup
+    return fit_all_local_batched(g, jnp.asarray(X), family=fam)
+
+
+# ------------------------------------------------------------------ layout
+def test_layout_contract(case):
+    """Flat layout: p node blocks then m edge blocks of size C; beta block
+    order; each edge block owned by exactly its two endpoints."""
+    fam, g = case.family, case.graph
+    Cdim = fam.block_dim
+    assert Cdim >= 1
+    assert fam.n_params(g) == (g.p + g.m) * Cdim
+    owners = C.param_owners(g, include_singleton=True, family=fam)
+    assert set(owners) == set(range(fam.n_params(g)))
+    for k, (i, j) in enumerate(g.edges):
+        for a in fam.edge_block(g, k):
+            assert sorted(node for node, _ in owners[a]) == [i, j]
+    for i in range(g.p):
+        for a in fam.node_block(g, i):
+            assert [node for node, _ in owners[a]] == [i]
+    # beta is the node block followed by incident edge blocks, in edge order
+    for i in range(g.p):
+        beta = fam.beta(g, i)
+        expect = fam.node_block(g, i)
+        for k in g.incident_edges(i):
+            expect += fam.edge_block(g, k)
+        assert beta == expect
+
+
+def test_pseudo_loglik_is_sum_of_conditionals(setup):
+    fam, g, theta, X = setup
+    t = jnp.asarray(theta, jnp.float32)
+    Xj = jnp.asarray(X[:64])
+    cl = np.asarray(fam.cond_loglik(g, t, Xj))
+    assert cl.shape == (64, g.p)
+    np.testing.assert_allclose(float(fam.pseudo_loglik(g, t, Xj)),
+                               float(np.mean(cl.sum(axis=1))), rtol=1e-5)
+
+
+# ----------------------------------------------------- closed-form hooks
+def test_channel_hooks_match_autodiff(case):
+    """The engine's closed-form score/curvature hooks equal autodiff of the
+    channel log-likelihood — the property that lets the batched engine skip
+    ``jax.hessian`` entirely."""
+    fam = case.family
+    Cdim = fam.block_dim
+    key = jax.random.PRNGKey(7 + case.seed)
+    k1, k2 = jax.random.split(key)
+    eta = jnp.asarray(0.8 * jax.random.normal(k1, (Cdim, 6)))
+    xi = fam.init_draw(k2, 6)                        # valid node values
+    r = np.asarray(fam.dl_deta(eta, xi))
+    kap = np.asarray(fam.curvature(eta, xi))
+    for t in range(6):
+        f = lambda e: fam.loglik_eta(e[:, None], xi[t: t + 1])[0]
+        g_ref = np.asarray(jax.grad(f)(eta[:, t]))
+        H_ref = -np.asarray(jax.hessian(f)(eta[:, t]))
+        np.testing.assert_allclose(r[:, t], g_ref, atol=1e-5)
+        np.testing.assert_allclose(kap[:, :, t], H_ref, atol=1e-5)
+
+
+# ------------------------------------------- batched == loop == oracle
+def test_batched_equals_oracle_free_singleton(setup, fits):
+    """The degree-bucketed closed-form engine lands on the same optimum as
+    a plain autodiff Newton oracle for every node — and, for Ising, as the
+    seed per-node loop solver."""
+    fam, g, theta, X = setup
+    for i in range(g.p):
+        oracle = fit_node_oracle(fam, g, X, i)
+        np.testing.assert_allclose(fits[i].theta, oracle, atol=5e-4)
+    if fam.name == "ising":
+        loop = C.fit_all_local_loop(g, jnp.asarray(X))
+        for a, b in zip(loop, fits):
+            assert a.beta == b.beta
+            np.testing.assert_allclose(a.theta, b.theta, atol=1e-4)
+
+
+def test_batched_equals_oracle_fixed_singleton(setup):
+    """The fixed-singleton (offsets) path agrees with the oracle too."""
+    fam, g, theta, X = setup
+    tf = jnp.asarray(theta, jnp.float32)
+    bat = fit_all_local_batched(g, jnp.asarray(X[:1200]),
+                                include_singleton=False, theta_fixed=tf,
+                                family=fam)
+    for i in (0, g.p - 1):
+        oracle = fit_node_oracle(fam, g, X[:1200], i,
+                                 include_singleton=False, theta_fixed=tf)
+        assert len(bat[i].theta) == g.degree(i) * fam.block_dim
+        np.testing.assert_allclose(bat[i].theta, oracle, atol=5e-4)
+
+
+# ------------------------------------------------- combine vs oracle MPLE
+def test_combine_schemes_track_centralized_mple(case, setup, fits):
+    """Every one-step consensus scheme stays within theoretical tolerance
+    of the centralized MPLE oracle (they share the sqrt(n) limit; at this n
+    the gap is O(1/sqrt(n)) with a scheme-dependent constant)."""
+    fam, g, theta, X = setup
+    mple = fit_mple_family(fam, g, jnp.asarray(X))
+    mse_mple = C.mse(mple, theta)
+    for scheme in C.SCHEMES:
+        th = C.combine(g, fits, scheme, family=fam)
+        assert np.all(np.isfinite(th)), scheme
+        gap = float(np.max(np.abs(th - mple)))
+        assert gap <= case.combine_tol, \
+            f"{scheme}: |combine - MPLE| = {gap}"
+        # and both estimate theta*: combining never catastrophically hurts
+        assert C.mse(th, theta) <= 25.0 * max(mse_mple, 1e-3), scheme
+
+
+# ------------------------------------------------ chunked stream == batch
+def test_chunked_streaming_matches_batch(setup):
+    """Feeding the same data in chunks through the family-generic streaming
+    bank (capacity doubling, masks, warm starts) reproduces the one-shot
+    batch fit — the any-time invariant, per family."""
+    fam, g, theta, X = setup
+    est = S.StreamingEstimator(g, capacity=32, family=fam)
+    for chunk in np.array_split(X[:1000], 5):
+        est.ingest(chunk)
+        est.refit()
+    oneshot = fit_all_local_batched(g, jnp.asarray(X[:1000]), family=fam)
+    for a, b in zip(est.fits, oneshot):
+        assert a.beta == b.beta
+        np.testing.assert_allclose(a.theta, b.theta, atol=2e-4)
+
+
+def test_heterogeneous_prefixes_match_subset_fits(setup):
+    """A node that has seen n_i samples fits exactly X[:n_i], any family."""
+    fam, g, theta, X = setup
+    est = S.StreamingEstimator(g, capacity=64, family=fam)
+    est.extend_pool(X[:900])
+    counts = 300 + (np.arange(g.p) * 61) % 600
+    est.advance(counts)
+    est.refit()
+    for i in (0, g.p - 1):
+        ref = fit_all_local_batched(g, jnp.asarray(X[: counts[i]]),
+                                    family=fam)[i]
+        np.testing.assert_allclose(est.fits[i].theta, ref.theta, atol=2e-4)
+
+
+# --------------------------------------------------- proximal consistency
+def test_prox_update_with_vanishing_penalty_matches_fit(setup, fits):
+    """The streaming-ADMM primal solver is the same criterion as the plain
+    fit when the proximal penalty vanishes — ties the family's prox path to
+    its conformant local fits."""
+    fam, g, theta, X = setup
+    betas = [fam.beta(g, i) for i in range(g.p)]
+    zeros = [np.zeros(len(b)) for b in betas]
+    rhos = [np.full(len(b), 1e-4) for b in betas]
+    out = prox_update_batched(g, jnp.asarray(X[:1000]),
+                              np.zeros(fam.n_params(g)), zeros, rhos,
+                              n_iter=40, family=fam)
+    ref = fit_all_local_batched(g, jnp.asarray(X[:1000]), family=fam)
+    for w, f in zip(out, ref):
+        np.testing.assert_allclose(w, f.theta, atol=5e-3)
+
+
+# ----------------------------------------------------- dispatched score
+def test_pseudo_score_dispatch_matches_autodiff(setup):
+    """The streaming pseudo-score — fused Pallas kernel for single-channel
+    kinds (Ising, Gaussian), family autodiff fallback otherwise (Potts) —
+    equals the reference gradient on the live rows of a padded buffer."""
+    fam, g, theta, X = setup
+    est = S.StreamingEstimator(g, capacity=64, family=fam)
+    est.ingest(X[:700])
+    probe = theta * 0.6
+    ref = fam.pseudo_score(g, probe, X[:700])
+    got = S.pseudo_score(g, probe, est.buffer.data, est.n_pool, family=fam)
+    np.testing.assert_allclose(got, ref, atol=3e-4)
+    # the zoo's dispatch map: both fused kinds stay fused
+    assert ("ising" in KERNEL_KINDS) and ("gaussian" in KERNEL_KINDS)
+
+
+# --------------------------------------------------- sampler vs oracle
+def test_sampler_moments_match_exact_oracle(case):
+    """Family-generic chromatic Gibbs hits the exact sufficient-statistic
+    moments of the small-p oracle (enumeration / closed form)."""
+    fam, g = case.family, case.graph
+    theta = fam.random_params(g, jax.random.PRNGKey(case.seed + 50))
+    mu = fam.exact_moments(g, theta)
+    n = 4000
+    Xs = C.gibbs_sample_family(fam, g, theta, n,
+                               jax.random.PRNGKey(case.seed + 51),
+                               burnin=300, thin=3)
+    emp = np.mean(np.asarray(fam.suff_stats(g, Xs)), axis=0)
+    assert np.max(np.abs(emp - mu)) < case.moment_tol / np.sqrt(n)

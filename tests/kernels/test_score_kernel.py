@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from repro.kernels.ising_cl.ops import score_stats_op
-from repro.kernels.ising_cl.ref import ising_cl_score_ref
-from repro.kernels.ising_cl.score import ising_cl_score
+from repro.kernels.ising_cl.ref import cl_score_ref, ising_cl_score_ref
+from repro.kernels.ising_cl.score import (KERNEL_KINDS, cl_score,
+                                          ising_cl_score)
 
 
 def _rand_inputs(n, p, seed=0, dtype=jnp.float32):
@@ -71,3 +72,25 @@ def test_score_op_dispatch_cpu():
     ref = ising_cl_score_ref(x, theta, mask, bias)
     for o, r in zip(out, ref):
         np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-6)
+
+
+@pytest.mark.parametrize("kind", KERNEL_KINDS)
+def test_family_epilogues_match_ref(kind):
+    """Every fused family epilogue (trace-time ``kind`` dispatch) matches
+    the jnp reference — the Gaussian residual shares the Ising pipeline."""
+    x, theta, mask, bias = _rand_inputs(96, 70, seed=5)
+    if kind == "gaussian":
+        # continuous data exercises the linear residual properly
+        x = x + 0.3 * jax.random.normal(jax.random.PRNGKey(9), x.shape)
+    out = cl_score(x, theta, mask, bias, kind=kind, interpret=True)
+    ref = cl_score_ref(x, theta, mask, bias, kind=kind)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_unknown_kind_rejected():
+    x, theta, mask, bias = _rand_inputs(8, 6, seed=6)
+    with pytest.raises(ValueError):
+        cl_score(x, theta, mask, bias, kind="potts", interpret=True)

@@ -1,5 +1,10 @@
 """Per-architecture smoke tests (deliverable f): reduced variant of each
-family — forward shapes + finiteness, one train step, decode equivalence."""
+family — forward shapes + finiteness, one train step, decode equivalence.
+
+The whole module is `slow`: ~10 architectures x (forward + train step +
+decode) dominates suite wall-clock; the fast CI tier covers the estimator
+core, the slow tier runs these.
+"""
 import functools
 
 import jax
@@ -12,6 +17,8 @@ from repro.models import transformer as T
 from repro.serve import engine as E
 from repro.train import step as TS
 from repro.optim.adamw import AdamWConfig
+
+pytestmark = pytest.mark.slow
 
 ARCHS = list(CFG.ARCH_IDS)
 

@@ -1,0 +1,154 @@
+"""Hypothesis property tests for the streaming substrate.
+
+* :class:`SampleBuffer` — capacity doubling preserves prefix contents
+  exactly, padding rows stay zero, and prefix masks cover exactly the
+  counted rows;
+* ``cl_score_padded`` — zero-padded buffer rows are invisible to the fused
+  score pipeline (Ising residuals vanish on zero rows; the Gram ignores
+  them for every kind because the padded X rows are zero);
+* :class:`Network` — exact scalar/message conservation:
+  sent == delivered + dropped + in-flight at every point, and in-flight
+  drains to zero.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels.ising_cl.score import (cl_score,  # noqa: E402
+                                          cl_score_padded)
+from repro.stream.buffer import SampleBuffer  # noqa: E402
+from repro.stream.network import Network, NetworkConfig  # noqa: E402
+
+
+# ------------------------------------------------------------------ buffer
+@given(
+    p=st.integers(1, 6),
+    capacity=st.integers(1, 8),
+    sizes=st.lists(st.integers(1, 37), min_size=1, max_size=8),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=40, deadline=None)
+def test_buffer_growth_preserves_prefix_exactly(p, capacity, sizes, seed):
+    rng = np.random.RandomState(seed)
+    buf = SampleBuffer(p, capacity=capacity)
+    chunks = []
+    for size in sizes:
+        chunk = rng.randn(size, p).astype(np.float32)
+        before = buf.rows.copy()
+        buf.append(chunk)
+        chunks.append(chunk)
+        # the prefix that existed before the append (possibly across a
+        # capacity doubling) is bit-identical afterwards
+        np.testing.assert_array_equal(buf.rows[: len(before)], before)
+    all_rows = np.concatenate(chunks, axis=0)
+    assert buf.n == len(all_rows)
+    np.testing.assert_array_equal(buf.rows, all_rows)
+    # capacity grew by doubling only, and padding is exactly zero
+    cap = buf.capacity
+    while cap > capacity:
+        assert cap % 2 == 0
+        cap //= 2
+    assert cap == capacity
+    assert not buf.data[buf.n:].any()
+
+
+@given(
+    p=st.integers(1, 5),
+    n=st.integers(0, 30),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=30, deadline=None)
+def test_buffer_prefix_masks_cover_exactly_counts(p, n, seed):
+    rng = np.random.RandomState(seed)
+    buf = SampleBuffer(p, capacity=4)
+    if n:
+        buf.append(np.sign(rng.randn(n, p)).astype(np.float32))
+    counts = rng.randint(0, n + 1, size=p)
+    masks = buf.prefix_masks(counts)
+    assert masks.shape == (p, buf.capacity)
+    np.testing.assert_array_equal(masks.sum(axis=1), counts)
+    # each row is a 0/1 prefix indicator, nothing else
+    for i in range(p):
+        np.testing.assert_array_equal(
+            masks[i], (np.arange(buf.capacity) < counts[i]).astype(
+                np.float32))
+    with pytest.raises(ValueError):
+        buf.prefix_masks(np.array([n + 1] * p))
+
+
+# ---------------------------------------------------- padded-score kernel
+@given(
+    n=st.integers(1, 24),
+    pad=st.integers(0, 40),
+    p=st.integers(2, 8),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=25, deadline=None)
+def test_zero_padded_rows_invisible_to_fused_score(n, pad, p, seed):
+    """ising_cl_score_padded over a zero-padded buffer == the exact-rows
+    score: eta/r agree on live rows, r is zero on padding, S matches after
+    the live-count renormalization."""
+    rng = np.random.RandomState(seed)
+    x = np.sign(rng.randn(n, p)).astype(np.float32)
+    x[x == 0] = 1.0
+    theta = (0.3 * rng.randn(p, p)).astype(np.float32)
+    theta = (theta + theta.T) / 2
+    mask = (rng.rand(p, p) < 0.5).astype(np.float32)
+    mask = np.triu(mask, 1) + np.triu(mask, 1).T
+    bias = (0.2 * rng.randn(p)).astype(np.float32)
+
+    x_pad = np.zeros((n + pad, p), dtype=np.float32)
+    x_pad[:n] = x
+    eta_p, r_p, S_p = cl_score_padded(jnp.asarray(x_pad), jnp.asarray(theta),
+                                      jnp.asarray(mask), jnp.asarray(bias),
+                                      n, kind="ising")
+    eta, r, S = cl_score(jnp.asarray(x), jnp.asarray(theta),
+                         jnp.asarray(mask), jnp.asarray(bias), kind="ising")
+    np.testing.assert_allclose(np.asarray(eta_p)[:n], np.asarray(eta),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_p)[:n], np.asarray(r), atol=1e-5)
+    # ising residuals of zero rows are exactly zero — padding is invisible
+    assert not np.asarray(r_p)[n:].any()
+    np.testing.assert_allclose(np.asarray(S_p), np.asarray(S),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------- network
+_LINKS = [(0, 1), (1, 0), (1, 2), (2, 1), (0, 2)]
+
+
+@given(
+    drop=st.floats(0.0, 1.0),
+    delay=st.integers(0, 3),
+    jitter=st.integers(0, 2),
+    sends=st.lists(
+        st.tuples(st.integers(0, len(_LINKS) - 1), st.integers(0, 17)),
+        min_size=0, max_size=40),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=50, deadline=None)
+def test_network_scalar_conservation(drop, delay, jitter, sends, seed):
+    """Every scalar sent is accounted for: delivered, dropped, or still in
+    flight — at every round, and in-flight drains to zero."""
+    net = Network(_LINKS, NetworkConfig(drop_prob=drop, delay=delay,
+                                        jitter=jitter, seed=seed))
+    rnd = 0
+    for link_idx, n_scalars in sends:
+        src, dst = _LINKS[link_idx]
+        net.send(rnd, src, dst, {"round": rnd}, n_scalars)
+        net.deliver(rnd)
+        assert net.scalars_sent == (net.scalars_delivered
+                                    + net.scalars_dropped
+                                    + net.scalars_in_flight)
+        assert net.msgs_sent == (net.msgs_delivered + net.msgs_dropped
+                                 + net.in_flight)
+        rnd += 1
+    # drain: everything still queued becomes deliverable eventually
+    net.deliver(rnd + delay + jitter + 1)
+    assert net.in_flight == 0 and net.scalars_in_flight == 0
+    assert net.scalars_sent == net.scalars_delivered + net.scalars_dropped
+    assert net.msgs_sent == net.msgs_delivered + net.msgs_dropped
