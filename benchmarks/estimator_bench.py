@@ -81,6 +81,26 @@ def bench_gibbs(m, n):
     }
 
 
+def bench_sharded(g, X, fits_plain):
+    """shard_map-over-mesh engine path on the host mesh: the scale-out
+    wiring must cost ~nothing on one device and stay numerically identical
+    to the plain path (the multi-device win needs real devices; this row
+    pins the single-device contract)."""
+    from repro.core.batched import fit_all_local_batched
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    cold, fits = _wall(lambda: fit_all_local_batched(g, X, mesh=mesh))
+    warm, _ = _wall(lambda: fit_all_local_batched(g, X, mesh=mesh))
+    max_diff = max(float(np.max(np.abs(a.theta - b.theta)))
+                   for a, b in zip(fits_plain, fits))
+    return {
+        "fit_sharded_cold_s": cold,
+        "fit_sharded_warm_s": warm,
+        "fit_sharded_max_abs_diff_theta": max_diff,
+        "fit_sharded_mesh": "host(1x1)",
+    }
+
+
 def bench_combine(g, fits):
     for sch in ("uniform", "diagonal", "optimal", "max"):
         C.combine(g, fits, sch)                      # warm any lazy setup
@@ -134,6 +154,7 @@ def main() -> None:
     X = C.gibbs_sample(m, n, jax.random.PRNGKey(1000), burnin=150, thin=2)
 
     metrics, fits = bench_fit_all_local(g, X)
+    metrics.update(bench_sharded(g, X, fits))
     metrics.update(bench_gibbs(m, n))
     metrics.update(bench_combine(g, fits))
     fam_rows = bench_families(scale(36, 36), scale(600, 600))
@@ -150,6 +171,11 @@ def main() -> None:
          f"maxdiff={metrics['fit_max_abs_diff_theta']:.1e} "
          f"buckets={metrics['n_degree_buckets']} "
          f"compiles={metrics['bucket_compile_count']}")
+    emit("estimator_fit_sharded", metrics["fit_sharded_cold_s"] * 1e6,
+         f"mesh={metrics['fit_sharded_mesh']} "
+         f"cold_s={metrics['fit_sharded_cold_s']:.2f} "
+         f"warm_s={metrics['fit_sharded_warm_s']:.2f} "
+         f"maxdiff_vs_plain={metrics['fit_sharded_max_abs_diff_theta']:.1e}")
     emit("estimator_gibbs_chromatic", metrics["gibbs_chromatic_s"] * 1e6,
          f"seq_s={metrics['gibbs_sequential_s']:.2f} "
          f"chrom_s={metrics['gibbs_chromatic_s']:.2f} "

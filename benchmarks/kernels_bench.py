@@ -1,15 +1,23 @@
 """Kernel micro-benchmarks: the pure-jnp reference path AND the Pallas
 kernel path (interpret mode on CPU) at paper-relevant sizes, each emitted as
 its own metric so the perf trajectory of both paths is machine-readable
-(``BENCH_kernels.json``). Wall-clock MFU is not measurable on CPU; on TPU
-the same harness times the compiled Pallas path via use_pallas=True."""
+(``BENCH_kernels.json``). Per-family rows run the channelized fused score
+pipeline for EVERY registered model family (multi-channel Potts included),
+with the interpret-mode flag recorded per row. Wall-clock MFU is not
+measurable on CPU; on TPU the same harness times the compiled Pallas path
+via use_pallas=True / interpret=False."""
 from __future__ import annotations
 
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+import repro.core as C
+from repro.kernels.cl.family import family_kernel_inputs
+from repro.kernels.cl.kernel import cl_score_channels
+from repro.kernels.cl.ref import cl_score_channels_ref
 from repro.kernels.ising_cl.kernel import ising_cl_logits
 from repro.kernels.ising_cl.ref import ising_cl_logits_ref, ising_cl_score_ref
 from repro.kernels.ising_cl.score import ising_cl_score
@@ -20,6 +28,7 @@ from repro.kernels.swa.ref import swa_attention_ref
 from .util import emit, emit_json, scale
 
 RESULTS = {}
+FAMILY_RESULTS = {}
 
 
 def _time(fn, *args, reps=3):
@@ -69,6 +78,43 @@ def bench_ising_cl_score():
     _record("kernel_ising_cl_score", f"n={n} p={p}", us_ref, us_k, err)
 
 
+def bench_family_scores():
+    """Per-family fused score rows: jnp reference vs the channelized Pallas
+    kernel for every registered family, each row flagged with whether the
+    kernel ran in interpret mode (CPU) or compiled (TPU)."""
+    interpret = jax.default_backend() != "tpu"
+    n, p = scale((256, 64), (2048, 256))
+    side = max(int(np.sqrt(p)), 2)
+    g = C.grid_graph(side, side)
+    for fam in C.registered_families():
+        theta = jnp.asarray(fam.random_params(g, jax.random.PRNGKey(23)),
+                            jnp.float32)
+        X = jnp.asarray(C.random_rows(fam, jax.random.PRNGKey(11), n, g.p),
+                        jnp.float32)
+        inputs = family_kernel_inputs(fam, g, theta, X)
+        us_ref, ref = _time(
+            jax.jit(lambda *a: cl_score_channels_ref(
+                *a, kind=fam.kernel_kind)), *inputs)
+        us_k, out = _time(
+            lambda *a: cl_score_channels(*a, kind=fam.kernel_kind,
+                                         interpret=interpret),
+            *inputs, reps=1)
+        err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                        - b.astype(jnp.float32))))
+                  for a, b in zip(out, ref))
+        shape = f"C={fam.block_dim} n={n} p={g.p}"
+        mode = "interpret" if interpret else "pallas"
+        emit(f"kernel_cl_score_{fam.name}_ref", us_ref,
+             f"{shape} maxerr={err:.2e}")
+        emit(f"kernel_cl_score_{fam.name}_{mode}", us_k,
+             f"{shape} maxerr={err:.2e}")
+        FAMILY_RESULTS[fam.name] = {
+            "ref_us": us_ref, "kernel_us": us_k, "shape": shape,
+            "max_err": err, "block_dim": fam.block_dim,
+            "kernel_kind": fam.kernel_kind, "interpret": interpret,
+        }
+
+
 def bench_gram():
     n, d = scale((2048, 128), (16384, 512))
     s = jax.random.normal(jax.random.PRNGKey(0), (n, d))
@@ -96,6 +142,7 @@ def bench_swa():
 def main() -> None:
     bench_ising_cl()
     bench_ising_cl_score()
+    bench_family_scores()
     bench_gram()
     bench_swa()
     emit_json("BENCH_kernels.json", {
@@ -103,6 +150,7 @@ def main() -> None:
         "kernel_path": "interpret" if jax.default_backend() != "tpu"
         else "pallas",
         "kernels": RESULTS,
+        "families": FAMILY_RESULTS,
     })
 
 

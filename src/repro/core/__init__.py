@@ -12,7 +12,8 @@ from .ising import (IsingModel, random_model, conditional_logits, cond_loglik,
                     loglik, exact_moments, all_states, pair_matrix)
 from .families import (ModelFamily, IsingFamily, GaussianMRF, PottsFamily,
                        ISING, GAUSSIAN, POTTS3, register_family, get_family,
-                       registered_families, fit_mple_family, fit_node_oracle)
+                       registered_families, fit_mple_family, fit_node_oracle,
+                       random_rows)
 from .sampling import (exact_sample, gibbs_sample, chromatic_gibbs_sample,
                        gibbs_sample_family)
 from .estimators import (LocalFit, newton_maximize, fit_local_cl,

@@ -57,7 +57,11 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from ..kernels.cl.epilogues import get_epilogue
+from ..kernels.cl.ops import bucket_newton_stats_op
 from .estimators import LocalFit
 from .families import ISING
 from .graphs import Graph
@@ -221,10 +225,20 @@ def _channel_ops(family, Zb, base, xi, sw, weighted, denom):
     so each family compiles only its own form.
 
     Returns ``(score_curvature, grad_vec, curvature_matrix, avg_loglik,
-    score_matrix)``: per-sample channel score/curvature at a flat W, the
-    flat gradient vector from a channel score, the (k, dC, dC) curvature
-    matrix from a channel curvature, the (c, k) per-node average loglik of
-    a candidate stack, and the (k, dC, n) per-sample score matrix.
+    score_matrix, newton_stats)``: per-sample channel score/curvature at a
+    flat W, the flat gradient vector from a channel score, the (k, dC, dC)
+    curvature matrix from a channel curvature, the (c, k) per-node average
+    loglik of a candidate stack, the (k, dC, n) per-sample score matrix,
+    and the fused Newton statistics ``W -> (g_raw, K_raw)``.
+
+    ``newton_stats`` is the per-iteration hot path: for families with a
+    registered fused-kernel epilogue (``family.kernel_kind``) it goes
+    through :func:`repro.kernels.cl.ops.bucket_newton_stats_op` — the fused
+    score + Gram entry emitting both directly in this (k, C, d) bucket
+    layout (compiled Pallas on TPU, the bit-identical jnp reference
+    elsewhere) without materializing the per-sample residual/curvature
+    between contractions; families without an epilogue fall back to the
+    closed-form hook closures.
     """
     k, C, d, _ = Zb.shape
     dC = d * C
@@ -276,17 +290,25 @@ def _channel_ops(family, Zb, base, xi, sw, weighted, denom):
         return jnp.transpose(Zb * r[:, :, None, :],
                              (0, 2, 1, 3)).reshape(k, dC, n)
 
+    kind = getattr(family, "kernel_kind", None)
+    fused_kind = kind if get_epilogue(kind) is not None else None
+
+    def newton_stats(W):
+        if fused_kind is not None:
+            return bucket_newton_stats_op(fused_kind, Zb, base, xi, W,
+                                          sw if weighted else None)
+        r, kap = score_curvature(W)
+        return grad_vec(r), curvature_matrix(kap)
+
     return score_curvature, grad_vec, curvature_matrix, avg_loglik, \
-        score_matrix
+        score_matrix, newton_stats
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("include_singleton", "n_iter", "weighted",
-                                    "guarded", "family"))
-def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
-                  include_singleton: bool, n_iter: int, weighted: bool = False,
-                  guarded: bool = False, family=ISING, tol: float = 2e-6,
-                  ridge: float = 1e-8, max_step: float = 5.0):
+def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
+                       include_singleton: bool, n_iter: int,
+                       weighted: bool = False, guarded: bool = False,
+                       family=ISING, tol: float = 2e-6,
+                       ridge: float = 1e-8, max_step: float = 5.0):
     """Solve every node of one degree bucket in a single XLA program.
 
     X: (n, p) samples; nodes: (k,); nbrs: (k, deg_pad); mask: (k, deg_pad);
@@ -328,8 +350,8 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
     else:
         denom = jnp.full((k,), float(n), Zb.dtype)
 
-    score_curvature, grad_vec, curvature_matrix, objective, score_matrix = \
-        _channel_ops(family, Zb, base, xi, sw, weighted, denom)
+    score_curvature, grad_vec, curvature_matrix, objective, score_matrix, \
+        newton_stats = _channel_ops(family, Zb, base, xi, sw, weighted, denom)
 
     def cond(carry):
         _, it, delta = carry
@@ -337,9 +359,9 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
 
     def newton_step(carry):
         W, it, _ = carry
-        r, kap = score_curvature(W)
-        g = grad_vec(r) / denom[:, None]
-        H = -curvature_matrix(kap) / denom[:, None, None] \
+        g_raw, K_raw = newton_stats(W)           # fused score + Gram
+        g = g_raw / denom[:, None]
+        H = -K_raw / denom[:, None, None] \
             - ridge * eye[None, :, :] - pad_diag
         dirn = _gauss_jordan_solve(H, g[..., None])[..., 0]  # (k, dC)
         # an untrusted direction: non-finite (curvature underflow at a
@@ -389,6 +411,75 @@ def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
     return W, H, J, V, S
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("include_singleton", "n_iter", "weighted",
+                                    "guarded", "family"))
+def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
+                  include_singleton: bool, n_iter: int, weighted: bool = False,
+                  guarded: bool = False, family=ISING, tol: float = 2e-6,
+                  ridge: float = 1e-8, max_step: float = 5.0):
+    """Single-device bucket solve (jitted :func:`_solve_bucket_impl`)."""
+    return _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
+                              include_singleton, n_iter, weighted, guarded,
+                              family, tol, ridge, max_step)
+
+
+def _mesh_data_size(mesh) -> int:
+    """Size of the mesh's ``data`` axis; clear error when there isn't one."""
+    if "data" not in mesh.axis_names:
+        raise ValueError(
+            f"batched engine shards degree buckets along a 'data' mesh axis;"
+            f" mesh has axes {tuple(mesh.axis_names)}")
+    return int(mesh.shape["data"])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("include_singleton", "n_iter", "weighted",
+                                    "guarded", "family", "mesh"))
+def _solve_bucket_sharded(X, nodes, nbrs, mask, offsets, W0, sw,
+                          include_singleton: bool, n_iter: int,
+                          weighted: bool = False, guarded: bool = False,
+                          family=ISING, mesh=None):
+    """Mesh-sharded bucket solve: nodes split along the ``data`` axis.
+
+    The bucket's k per-node problems are embarrassingly parallel, so each
+    device solves its contiguous slice of the (padded) node axis against
+    the replicated sample pool — no collectives at all. On a one-device
+    mesh (the host mesh) the single shard is the whole bucket and the
+    computation is identical to :func:`_solve_bucket` op for op, which is
+    what makes the single-device fallback numerically exact. The caller
+    pads the node axis to a multiple of the shard count
+    (:func:`_pad_bucket_rows`).
+    """
+    body = functools.partial(
+        _solve_bucket_impl, include_singleton=include_singleton,
+        n_iter=n_iter, weighted=weighted, guarded=guarded, family=family)
+    data = P("data")
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), data, data, data, data, data,
+                  data if weighted else P()),
+        out_specs=(data, data, data, data, data),
+        check_rep=False,
+    )(X, nodes, nbrs, mask, offsets, W0, sw)
+
+
+def _pad_bucket_rows(shards: int, *arrays):
+    """Zero-pad each array's leading (bucket-node) axis to a multiple of
+    ``shards`` so shard_map can split it evenly. Padded rows are inert
+    dummy problems (zero design mask / zero weights) whose results the
+    caller slices off."""
+    k = arrays[0].shape[0]
+    pad = (-k) % shards
+    if pad == 0:
+        return arrays
+    out = []
+    for a in arrays:
+        widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        out.append(jnp.pad(a, widths))
+    return tuple(out)
+
+
 def bucket_compile_count() -> int:
     """Bucket-solver compilations since the last ``clear_cache()``.
 
@@ -433,7 +524,7 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
                           n_iter: int = 40,
                           sample_weight: Optional[jnp.ndarray] = None,
                           warm_start: Optional[Sequence] = None,
-                          family=None) -> List[LocalFit]:
+                          family=None, mesh=None) -> List[LocalFit]:
     """Fit all p local CL estimators via degree-bucketed batched solves.
 
     Drop-in replacement for the per-node loop: returns the same
@@ -451,6 +542,13 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
       warm_start — optional length-p sequence of previous per-node thetas
         (``None`` entries allowed) used to seed Newton; incremental re-fits
         then converge in a couple of damped steps.
+
+    Scale-out: ``mesh`` (a :func:`jax.make_mesh` mesh with a ``data`` axis,
+    e.g. from :mod:`repro.launch.mesh`) runs every bucket solve through
+    :func:`_solve_bucket_sharded` — bucket nodes sharded along the ``data``
+    axis, sample pool replicated. On a one-device mesh the sharded path is
+    numerically identical to the default path; ``mesh=None`` keeps the
+    plain single-program solve.
     """
     if family is None:
         family = ISING
@@ -464,18 +562,32 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
 
     out: List[Optional[LocalFit]] = [None] * graph.p
     for b in degree_buckets(graph):
+        k = len(b.nodes)
         offsets = node_tf[jnp.asarray(b.nodes)]
         dC = (b.deg_pad + lead) * C
         sw = _bucket_weights(sample_weight, b.nodes, n)
         W0 = _bucket_warm_start(warm_start, b, dC, lead, C, X.dtype)
+        weighted = sample_weight is not None
         if sw is None:
             sw = jnp.ones((1, 1), X.dtype)   # placeholder, never read
-        W, H, J, V, S = _solve_bucket(
-            X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
-            jnp.asarray(b.mask), offsets, W0, sw, include_singleton, n_iter,
-            sample_weight is not None, warm_start is not None, family)
-        W, H, J, V, S = (np.asarray(W), np.asarray(H), np.asarray(J),
-                         np.asarray(V), np.asarray(S))
+        if mesh is None:
+            W, H, J, V, S = _solve_bucket(
+                X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
+                jnp.asarray(b.mask), offsets, W0, sw, include_singleton,
+                n_iter, weighted, warm_start is not None, family)
+        else:
+            shards = _mesh_data_size(mesh)
+            nodes_, nbrs_, mask_, offsets_, W0_ = _pad_bucket_rows(
+                shards, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
+                jnp.asarray(b.mask), offsets, W0)
+            sw_ = _pad_bucket_rows(shards, sw)[0] if weighted else sw
+            W, H, J, V, S = _solve_bucket_sharded(
+                X, nodes_, nbrs_, mask_, offsets_, W0_, sw_,
+                include_singleton, n_iter, weighted,
+                warm_start is not None, family, mesh)
+        W, H, J, V, S = (np.asarray(W)[:k], np.asarray(H)[:k],
+                         np.asarray(J)[:k], np.asarray(V)[:k],
+                         np.asarray(S)[:k])
         degs = b.mask.sum(axis=1).astype(np.int64)
         for row, i in enumerate(b.nodes):
             i = int(i)
@@ -489,13 +601,11 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
 
 
 # ------------------------------------------------------- proximal updates
-@functools.partial(jax.jit,
-                   static_argnames=("include_singleton", "n_iter", "weighted",
-                                    "family"))
-def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
-                       include_singleton: bool, n_iter: int,
-                       weighted: bool = False, family=ISING, tol: float = 2e-6,
-                       ridge: float = 1e-8, max_step: float = 5.0):
+def _solve_bucket_prox_impl(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho,
+                            tbar, include_singleton: bool, n_iter: int,
+                            weighted: bool = False, family=ISING,
+                            tol: float = 2e-6, ridge: float = 1e-8,
+                            max_step: float = 5.0):
     """ADMM primal update for a whole degree bucket in one XLA program.
 
     Maximizes, per node,  ``l^i(w) - lam'w - sum_a rho_a (w_a - tbar_a)^2/2``
@@ -520,8 +630,8 @@ def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
     else:
         denom = jnp.full((k,), float(n), Zb.dtype)
 
-    score_curvature, grad_vec, curvature_matrix, avg_loglik, _ = \
-        _channel_ops(family, Zb, base, xi, sw, weighted, denom)
+    score_curvature, grad_vec, curvature_matrix, avg_loglik, _, \
+        newton_stats = _channel_ops(family, Zb, base, xi, sw, weighted, denom)
 
     def objective(Ws):
         # (c, k): penalized criterion for a stack of candidate points
@@ -535,9 +645,9 @@ def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
 
     def newton_step(carry):
         W, it, _ = carry
-        r, kap = score_curvature(W)
-        g = grad_vec(r) / denom[:, None] - lam - rho * (W - tbar)
-        H = -curvature_matrix(kap) / denom[:, None, None] \
+        g_raw, K_raw = newton_stats(W)           # fused score + Gram
+        g = g_raw / denom[:, None] - lam - rho * (W - tbar)
+        H = -K_raw / denom[:, None, None] \
             - rho_diag - ridge * eye[None, :, :] - pad_diag
         dirn = _gauss_jordan_solve(H, g[..., None])[..., 0]
         finite = jnp.all(jnp.isfinite(dirn), axis=1, keepdims=True)
@@ -559,6 +669,42 @@ def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
     return W
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("include_singleton", "n_iter", "weighted",
+                                    "family"))
+def _solve_bucket_prox(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar,
+                       include_singleton: bool, n_iter: int,
+                       weighted: bool = False, family=ISING, tol: float = 2e-6,
+                       ridge: float = 1e-8, max_step: float = 5.0):
+    """Single-device proximal bucket solve (jitted impl)."""
+    return _solve_bucket_prox_impl(X, nodes, nbrs, mask, offsets, W0, sw,
+                                   lam, rho, tbar, include_singleton, n_iter,
+                                   weighted, family, tol, ridge, max_step)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("include_singleton", "n_iter", "weighted",
+                                    "family", "mesh"))
+def _solve_bucket_prox_sharded(X, nodes, nbrs, mask, offsets, W0, sw, lam,
+                               rho, tbar, include_singleton: bool,
+                               n_iter: int, weighted: bool = False,
+                               family=ISING, mesh=None):
+    """Mesh-sharded proximal bucket solve — the ADMM-primal twin of
+    :func:`_solve_bucket_sharded` (same data-axis node sharding, replicated
+    sample pool, no collectives)."""
+    body = functools.partial(
+        _solve_bucket_prox_impl, include_singleton=include_singleton,
+        n_iter=n_iter, weighted=weighted, family=family)
+    data = P("data")
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), data, data, data, data, data,
+                  data if weighted else P(), data, data, data),
+        out_specs=data,
+        check_rep=False,
+    )(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar)
+
+
 def prox_update_batched(graph: Graph, X: jnp.ndarray,
                         theta_bar: np.ndarray,
                         lambdas: Sequence[np.ndarray],
@@ -567,7 +713,8 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
                         include_singleton: bool = True,
                         theta_fixed: Optional[jnp.ndarray] = None,
                         sample_weight: Optional[jnp.ndarray] = None,
-                        n_iter: int = 15, family=None) -> List[np.ndarray]:
+                        n_iter: int = 15, family=None,
+                        mesh=None) -> List[np.ndarray]:
     """Batched ADMM primal update across all nodes (one solve per bucket).
 
     Per-node inputs follow :func:`repro.core.admm.admm_mple`: ``lambdas`` /
@@ -578,10 +725,11 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
     warm starts (defaults to the consensus view restricted to ``beta_i``).
     Supports the same ``sample_weight`` masks as
     :func:`fit_all_local_batched`, which is what lets the streaming engine
-    run ADMM rounds over a growing buffer without recompiling, and the same
+    run ADMM rounds over a growing buffer without recompiling, the same
     ``family`` dispatch (default Ising; ``beta_i`` then follows
-    ``family.beta`` block order). Returns the updated per-node theta
-    vectors.
+    ``family.beta`` block order), and the same ``mesh`` scale-out path
+    (bucket nodes sharded along the mesh's ``data`` axis). Returns the
+    updated per-node theta vectors.
     """
     if family is None:
         family = ISING
@@ -625,15 +773,28 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
                     W0[row, :di] = np.asarray(t0, dtype=np.float32)[:di]
         W0 = jnp.asarray(W0, dtype=X.dtype)
         sw = _bucket_weights(sample_weight, b.nodes, n)
+        weighted = sample_weight is not None
         if sw is None:
             sw = jnp.ones((1, 1), X.dtype)
         offsets = node_tf[jnp.asarray(b.nodes)]
-        W = _solve_bucket_prox(
-            X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
-            jnp.asarray(b.mask), offsets, W0, sw,
-            jnp.asarray(lam), jnp.asarray(rho), jnp.asarray(tbar),
-            include_singleton, n_iter, sample_weight is not None, family)
-        W = np.asarray(W)
+        if mesh is None:
+            W = _solve_bucket_prox(
+                X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
+                jnp.asarray(b.mask), offsets, W0, sw,
+                jnp.asarray(lam), jnp.asarray(rho), jnp.asarray(tbar),
+                include_singleton, n_iter, weighted, family)
+        else:
+            shards = _mesh_data_size(mesh)
+            nodes_, nbrs_, mask_, offsets_, W0_, lam_, rho_, tbar_ = \
+                _pad_bucket_rows(shards, jnp.asarray(b.nodes),
+                                 jnp.asarray(b.nbrs), jnp.asarray(b.mask),
+                                 offsets, W0, jnp.asarray(lam),
+                                 jnp.asarray(rho), jnp.asarray(tbar))
+            sw_ = _pad_bucket_rows(shards, sw)[0] if weighted else sw
+            W = _solve_bucket_prox_sharded(
+                X, nodes_, nbrs_, mask_, offsets_, W0_, sw_, lam_, rho_,
+                tbar_, include_singleton, n_iter, weighted, family, mesh)
+        W = np.asarray(W)[:len(b.nodes)]
         for row, i in enumerate(b.nodes):
             di = (lead + int(degs[row])) * C
             out[int(i)] = W[row, :di].copy()

@@ -153,7 +153,7 @@ def fit_all_local(graph: Graph, X: jnp.ndarray,
                   method: str = "batched",
                   sample_weight: Optional[jnp.ndarray] = None,
                   warm_start: Optional[Sequence] = None,
-                  family=None) -> List[LocalFit]:
+                  family=None, mesh=None) -> List[LocalFit]:
     """Fit all p local CL estimators.
 
     method="batched" (default) groups nodes into degree buckets and solves
@@ -161,9 +161,10 @@ def fit_all_local(graph: Graph, X: jnp.ndarray,
     gradients/Hessians; method="loop" is the legacy per-node Ising path.
 
     ``sample_weight`` (0/1 observation masks, ``(n,)`` or ``(p, n)``),
-    ``warm_start`` (previous per-node thetas), and ``family`` (any
-    registered :class:`~repro.core.families.base.ModelFamily`; default
-    Ising) are extensions of the batched engine — see
+    ``warm_start`` (previous per-node thetas), ``family`` (any registered
+    :class:`~repro.core.families.base.ModelFamily`; default Ising), and
+    ``mesh`` (shard bucket solves along a mesh's ``data`` axis) are
+    extensions of the batched engine — see
     :func:`repro.core.batched.fit_all_local_batched`; the loop path does
     not support them.
     """
@@ -171,11 +172,13 @@ def fit_all_local(graph: Graph, X: jnp.ndarray,
         from .batched import fit_all_local_batched
         return fit_all_local_batched(graph, X, include_singleton, theta_fixed,
                                      sample_weight=sample_weight,
-                                     warm_start=warm_start, family=family)
+                                     warm_start=warm_start, family=family,
+                                     mesh=mesh)
     if method == "loop":
-        if sample_weight is not None or warm_start is not None:
+        if sample_weight is not None or warm_start is not None or \
+                mesh is not None:
             raise ValueError(
-                "sample_weight/warm_start require method='batched'")
+                "sample_weight/warm_start/mesh require method='batched'")
         if family is not None and family.name != "ising":
             raise ValueError(
                 "method='loop' implements only the Ising family; "

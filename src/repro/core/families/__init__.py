@@ -13,7 +13,8 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-from .base import ModelFamily, fit_mple_family, fit_node_oracle
+from .base import (ModelFamily, fit_mple_family, fit_node_oracle,
+                   random_rows)
 from .gaussian import GaussianMRF
 from .ising import IsingFamily
 from .potts import PottsFamily
@@ -52,5 +53,5 @@ __all__ = [
     "ModelFamily", "IsingFamily", "GaussianMRF", "PottsFamily",
     "ISING", "GAUSSIAN", "POTTS3",
     "register_family", "get_family", "registered_families",
-    "fit_mple_family", "fit_node_oracle",
+    "fit_mple_family", "fit_node_oracle", "random_rows",
 ]

@@ -49,6 +49,19 @@ class ModelFamily:
 
     name: str
 
+    # ------------------------------------------------------------ kernels
+    @property
+    def kernel_kind(self) -> Optional[str]:
+        """Epilogue key into the fused CL kernel registry
+        (:mod:`repro.kernels.cl.epilogues`), or None for no fused path.
+
+        A family returning a registered kind gets the fused Pallas
+        score/Gram pipeline and the fused bucket Newton statistics for
+        free; families without one transparently use the closed-form hook
+        / autodiff reference paths everywhere.
+        """
+        return None
+
     # ------------------------------------------------------------ layout
     @property
     def block_dim(self) -> int:
@@ -184,6 +197,20 @@ class ModelFamily:
 
 
 # ---------------------------------------------------------------- generic
+def random_rows(family: ModelFamily, key: jax.Array, n: int,
+                p: int) -> jnp.ndarray:
+    """(n, p) iid rows of *valid* node values via ``family.init_draw``.
+
+    The family-generic cheap sample source benchmarks and property tests
+    use when they need well-typed data (spin signs, reals, Potts states)
+    without paying for draws from any particular joint model — a fourth
+    registered family gets correct rows here automatically instead of
+    falling through some name-keyed special case.
+    """
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: family.init_draw(k, p))(keys)
+
+
 # Reference fits shared by every family: plain autodiff Newton on the
 # family criteria. Slow but definitionally correct — the conformance
 # harness pits the batched engine against these.

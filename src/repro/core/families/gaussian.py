@@ -32,6 +32,10 @@ class GaussianMRF(ModelFamily):
     name: str = "gaussian"
 
     @property
+    def kernel_kind(self) -> str:
+        return "gaussian"
+
+    @property
     def block_dim(self) -> int:
         return 1
 

@@ -22,6 +22,10 @@ class IsingFamily(ModelFamily):
     name: str = "ising"
 
     @property
+    def kernel_kind(self) -> str:
+        return "ising"
+
+    @property
     def block_dim(self) -> int:
         return 1
 

@@ -39,6 +39,10 @@ class PottsFamily(ModelFamily):
             raise ValueError("Potts needs q >= 2 states")
 
     @property
+    def kernel_kind(self) -> str:
+        return "potts"
+
+    @property
     def block_dim(self) -> int:
         return self.q - 1
 

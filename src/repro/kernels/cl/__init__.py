@@ -1,0 +1,49 @@
+"""Family-generic fused conditional-likelihood (CL) kernel subsystem.
+
+One channelized Pallas pipeline — load -> eta -> residual -> score/Gram
+epilogue — shared by every registered exponential family, with the
+per-family math isolated in a small :mod:`~repro.kernels.cl.epilogues`
+registry keyed by ``ModelFamily.kernel_kind``:
+
+* :mod:`.kernel` — the pallas_call skeleton (masked-matmul logits kernel and
+  the channelized fused score kernel);
+* :mod:`.epilogues` — the epilogue registry (ising / gaussian / potts ship);
+* :mod:`.ref` — pure-jnp oracles for everything;
+* :mod:`.newton` — the fused Newton-step entry point emitting score + Gram
+  directly in the degree-bucket ``(k, C, d)`` layout ``core/batched.py``
+  consumes;
+* :mod:`.score` — seed-compatible single-channel entry points
+  (``cl_score``, ``ising_cl_score``, padded-buffer variants) plus the
+  channelized ``cl_score_channels``;
+* :mod:`.family` — adapters from a :class:`ModelFamily` + graph + flat theta
+  to kernel inputs, and the fused flat pseudo-score the streaming stack
+  uses;
+* :mod:`.ops` — backend dispatch (compiled Pallas on TPU, jnp reference
+  elsewhere).
+
+The old ``repro.kernels.ising_cl`` package remains as import shims.
+"""
+from .epilogues import (Epilogue, get_epilogue, register_epilogue,
+                        registered_kinds)
+from .kernel import cl_logits, cl_score_channels, ising_cl_logits
+from .newton import bucket_newton_stats, bucket_newton_stats_ref
+from .ops import (bucket_newton_stats_op, conditional_logits_op,
+                  score_stats_channels_op, score_stats_op)
+from .ref import (cl_logits_ref, cl_score_channels_ref, cl_score_ref,
+                  ising_cl_logits_ref, ising_cl_score_ref)
+from .score import (KERNEL_KINDS, cl_score, cl_score_channels_padded,
+                    cl_score_padded, ising_cl_score, ising_cl_score_padded)
+from .family import family_kernel_inputs, family_score_stats, fused_pseudo_score
+
+__all__ = [
+    "Epilogue", "register_epilogue", "get_epilogue", "registered_kinds",
+    "cl_logits", "ising_cl_logits", "cl_score_channels",
+    "cl_score", "cl_score_padded", "cl_score_channels_padded",
+    "ising_cl_score", "ising_cl_score_padded", "KERNEL_KINDS",
+    "cl_score_ref", "cl_score_channels_ref", "cl_logits_ref",
+    "ising_cl_logits_ref", "ising_cl_score_ref",
+    "bucket_newton_stats", "bucket_newton_stats_ref",
+    "conditional_logits_op", "score_stats_op", "score_stats_channels_op",
+    "bucket_newton_stats_op",
+    "family_kernel_inputs", "family_score_stats", "fused_pseudo_score",
+]

@@ -1,0 +1,178 @@
+"""Fused Newton-step statistics in the degree-bucket layout.
+
+The batched engine (:mod:`repro.core.batched`) solves every node of a
+degree bucket simultaneously: designs live as a channelized ``(k, C, d, n)``
+tensor and each damped Newton iteration needs, per node, the score vector
+
+    g = sum_n Z[:, :, :, n] r[:, :, n]           (flat (k, d*C))
+
+and the curvature Gram
+
+    K = sum_n Z kappa Z                          ((k, d*C, d*C))
+
+where ``r = dl/deta`` and ``kappa = -d2l/deta2`` come from the family
+epilogue. This module emits BOTH directly in that bucket layout in one
+fused pass — eta, r and kappa never materialize in HBM between the design
+contraction and the score/Gram contraction:
+
+* :func:`bucket_newton_stats_ref` — the jnp reference. Its contraction
+  forms are kept **identical** to the engine's historical einsums
+  (including the C = 1 single-channel fast path), so swapping the engine
+  onto this entry point is bit-stable — the 1e-10 golden fixtures pin it.
+* :func:`bucket_newton_stats` — the Pallas kernel: grid over (bucket node,
+  sample tile), design slab stashed in VMEM, epilogue residual + curvature
+  on the VPU, g and K accumulated on-chip across sample tiles. ``d`` and
+  ``d*C`` are the tiny per-node design dims (engine buckets pad degree to
+  powers of four), so the sample axis is the only 128-tiled one; on a real
+  TPU the caller should keep ``d*C`` lane-friendly (the interpret path has
+  no such constraint).
+
+Both dispatch on the static epilogue ``kind``; coordinate-major flat layout
+``[(d0,c0), (d0,c1), ..., (d1,c0), ...]`` matches ``family.beta`` exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .epilogues import require_epilogue
+
+BNK = 128   # sample-axis tile
+
+
+def _lead(eta_kcn):
+    """(k, C, n) channel-middle -> (C, k, n) leading-channel (pure layout)."""
+    return jnp.moveaxis(eta_kcn, 1, 0)
+
+
+def _unlead(a_ckn):
+    return jnp.moveaxis(a_ckn, 0, 1)
+
+
+def bucket_residual_curvature(kind: str, eta, xi):
+    """Epilogue residual r (k, C, n) and curvature kappa (k, C, C, n) at
+    bucket-layout logits ``eta`` (k, C, n) for targets ``xi`` (k, n)."""
+    ep = require_epilogue(kind)
+    C = eta.shape[1]
+    el = _lead(eta)                               # (C, k, n)
+    F = ep.features(xi, C)                        # (C, k, n)
+    r = _unlead(ep.residual(F, el))               # (k, C, n)
+    kap = jnp.moveaxis(ep.curvature(F, el), (0, 1), (1, 2))  # (k, C, C, n)
+    return r, kap
+
+
+def bucket_newton_stats_ref(kind: str, Zb, base, xi, W, sw=None):
+    """(g, K) un-normalized score vector and curvature Gram, jnp reference.
+
+    Zb: (k, C, d, n) bucket design; base: (k, C, n) fixed-offset logits;
+    xi: (k, n) targets; W: (k, d*C) coordinate-major flat parameters;
+    sw: optional (k, n) sample weights (None = unweighted). Returns
+    g (k, d*C) and K (k, d*C, d*C); the engine divides by its own sample
+    denominator and negates K into the Newton system.
+    """
+    k, C, d, _ = Zb.shape
+    dC = d * C
+    if C == 1:
+        Z1 = Zb[:, 0]
+        eta = base + jnp.einsum("kdn,kd->kn", Z1, W)[:, None, :]
+        r, kap = bucket_residual_curvature(kind, eta, xi)
+        if sw is not None:
+            r = r * sw[:, None, :]
+            kap = kap * sw[:, None, None, :]
+        g = jnp.einsum("kdn,kn->kd", Z1, r[:, 0])
+        K = (Z1 * kap[:, 0, 0][:, None, :]) @ jnp.swapaxes(Z1, 1, 2)
+        return g, K
+    eta = base + jnp.einsum("kcdn,kdc->kcn", Zb, W.reshape(k, d, C))
+    r, kap = bucket_residual_curvature(kind, eta, xi)
+    if sw is not None:
+        r = r * sw[:, None, :]
+        kap = kap * sw[:, None, None, :]
+    g = jnp.einsum("kcdn,kcn->kdc", Zb, r).reshape(k, dC)
+    K = jnp.einsum("kcdn,kcen,kefn->kdcfe", Zb, kap, Zb).reshape(k, dC, dC)
+    return g, K
+
+
+# ------------------------------------------------------------ pallas kernel
+def _newton_kernel(z_ref, base_ref, xi_ref, sw_ref, w_ref, g_ref, k_ref, *,
+                   kind: str, weighted: bool):
+    t = pl.program_id(1)
+    ep = require_epilogue(kind)
+    C, d = z_ref.shape[1], z_ref.shape[2]
+    dC = d * C
+
+    @pl.when(t == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        k_ref[...] = jnp.zeros_like(k_ref)
+
+    Z = z_ref[0].astype(jnp.float32)               # (C, d, BNK)
+    Wb = w_ref[0].astype(jnp.float32).reshape(d, C)
+    eta = base_ref[0].astype(jnp.float32) + jnp.stack(
+        [jnp.dot(Wb[:, c], Z[c], preferred_element_type=jnp.float32)
+         for c in range(C)])                       # (C, BNK)
+    x = xi_ref[0].astype(jnp.float32)
+    F = ep.features(x, C)                          # (C, BNK)
+    r = ep.residual(F, eta)                        # (C, BNK)
+    kap = ep.curvature(F, eta)                     # (C, C, BNK)
+    if weighted:
+        w = sw_ref[0].astype(jnp.float32)
+        r = r * w[None]
+        kap = kap * w[None, None]
+    # score vector, coordinate-major flat (d*C)
+    g = jnp.stack([jnp.dot(Z[c], r[c], preferred_element_type=jnp.float32)
+                   for c in range(C)], axis=1)     # (d, C)
+    g_ref[0, :] += g.reshape(dC)
+    # curvature Gram: all (C, C) cross-channel blocks, (d,c) x (f,e) flat
+    blocks = jnp.stack([
+        jnp.stack([jnp.dot(Z[c] * kap[c, e][None, :], Z[e].T,
+                           preferred_element_type=jnp.float32)
+                   for e in range(C)])
+        for c in range(C)])                        # (C, C, d, d)
+    k_ref[0, :, :] += jnp.transpose(blocks, (2, 0, 3, 1)).reshape(dC, dC)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def bucket_newton_stats(kind: str, Zb, base, xi, W, sw=None, *,
+                        interpret: bool = True):
+    """Pallas-fused (g, K) bucket Newton statistics; see module docstring.
+
+    Same contract as :func:`bucket_newton_stats_ref`. The sample axis is
+    zero-padded up to the 128 tile (zero design columns contribute nothing
+    to either contraction, so padding is exact).
+    """
+    require_epilogue(kind)
+    k, C, d, n = Zb.shape
+    dC = d * C
+    pad_n = (-n) % BNK
+    Zp = jnp.pad(Zb, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
+    bp = jnp.pad(base, ((0, 0), (0, 0), (0, pad_n)))
+    xp = jnp.pad(xi, ((0, 0), (0, pad_n)))
+    weighted = sw is not None
+    swp = (jnp.pad(sw, ((0, 0), (0, pad_n))) if weighted
+           else jnp.zeros((k, n + pad_n), Zb.dtype))
+    nt = (n + pad_n) // BNK
+
+    g, K = pl.pallas_call(
+        functools.partial(_newton_kernel, kind=kind, weighted=weighted),
+        grid=(k, nt),
+        in_specs=[
+            pl.BlockSpec((1, C, d, BNK), lambda a, t: (a, 0, 0, t)),
+            pl.BlockSpec((1, C, BNK), lambda a, t: (a, 0, t)),
+            pl.BlockSpec((1, BNK), lambda a, t: (a, t)),
+            pl.BlockSpec((1, BNK), lambda a, t: (a, t)),
+            pl.BlockSpec((1, dC), lambda a, t: (a, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dC), lambda a, t: (a, 0)),
+            pl.BlockSpec((1, dC, dC), lambda a, t: (a, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, dC), jnp.float32),
+            jax.ShapeDtypeStruct((k, dC, dC), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Zp, bp, xp, swp, W)
+    return g, K

@@ -1,0 +1,56 @@
+"""Jit'd public wrappers: pick the compiled Pallas kernel on TPU, the
+pure-jnp reference elsewhere (CPU dry-runs / tests use interpret mode
+explicitly)."""
+import jax
+
+from .kernel import cl_score_channels, ising_cl_logits
+from .newton import bucket_newton_stats, bucket_newton_stats_ref
+from .ref import cl_score_channels_ref, cl_score_ref, ising_cl_logits_ref
+from .score import cl_score
+
+
+def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return ising_cl_logits(x, theta, mask, bias, interpret=False)
+    return ising_cl_logits_ref(x, theta, mask, bias)
+
+
+def score_stats_op(x, theta, mask, bias, *, kind: str = "ising",
+                   use_pallas=None):
+    """Fused (eta, r, S) pseudo-likelihood score statistics, single-channel.
+
+    ``kind`` selects the family epilogue; both the Pallas kernel and the
+    jnp reference dispatch through the same registry.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return cl_score(x, theta, mask, bias, kind=kind, interpret=False)
+    return cl_score_ref(x, theta, mask, bias, kind=kind)
+
+
+def score_stats_channels_op(F, theta, mask, bias, *, kind: str,
+                            use_pallas=None):
+    """Channelized fused (eta, r, S) — the multi-channel twin of
+    :func:`score_stats_op`."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return cl_score_channels(F, theta, mask, bias, kind=kind,
+                                 interpret=False)
+    return cl_score_channels_ref(F, theta, mask, bias, kind=kind)
+
+
+def bucket_newton_stats_op(kind, Zb, base, xi, W, sw=None, *,
+                           use_pallas=None):
+    """Fused bucket Newton statistics (g, K); Pallas on TPU, jnp ref
+    elsewhere. Safe to call inside a jit trace — the backend choice is a
+    trace-time constant."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return bucket_newton_stats(kind, Zb, base, xi, W, sw,
+                                   interpret=False)
+    return bucket_newton_stats_ref(kind, Zb, base, xi, W, sw)

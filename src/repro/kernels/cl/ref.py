@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the family-generic CL kernels."""
+import jax.numpy as jnp
+
+from .epilogues import require_epilogue
+
+
+def cl_logits_ref(F, theta, mask, bias):
+    """Channelized masked logits: (C, n, p) inputs like :func:`cl_logits`."""
+    return (jnp.einsum("cnj,cji->cni", F, theta * mask[None])
+            + bias[:, None, :]).astype(F.dtype)
+
+
+def ising_cl_logits_ref(x, theta, mask, bias):
+    return (x @ (theta * mask) + bias[None, :]).astype(x.dtype)
+
+
+def cl_score_channels_ref(F, theta, mask, bias, kind: str):
+    """(eta, r, S): channelized logits, residuals, cross-channel score Gram.
+
+    Mirrors :func:`repro.kernels.cl.kernel.cl_score_channels` — same
+    shapes, same family epilogue registry — in plain jnp.
+    """
+    ep = require_epilogue(kind)
+    Ff = F.astype(jnp.float32)
+    eta = jnp.einsum("cnj,cji->cni", Ff,
+                     (theta * mask[None]).astype(jnp.float32)) \
+        + bias[:, None, :].astype(jnp.float32)
+    r = ep.residual(Ff, eta)
+    s = jnp.einsum("cni,enj->ceij", r, Ff) / F.shape[1]
+    return eta.astype(F.dtype), r.astype(F.dtype), s
+
+
+def cl_score_ref(x, theta, mask, bias, kind: str = "ising"):
+    """(eta, r, S): conditional logits, score residuals, score Gram —
+    the single-channel (n, p) entry.
+
+    ``kind`` mirrors the fused kernel's family epilogue dispatch; kinds
+    whose epilogue is multi-channel (Potts) need
+    :func:`cl_score_channels_ref`.
+    """
+    ep = require_epilogue(kind)
+    if ep.channels != "single":
+        raise ValueError(
+            f"kind {kind!r} is multi-channel; use cl_score_channels_ref")
+    eta = x.astype(jnp.float32) @ (theta * mask).astype(jnp.float32) \
+        + bias[None, :].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    r = ep.residual(xf[None], eta[None])[0]
+    s = r.T @ xf / x.shape[0]
+    return eta.astype(x.dtype), r.astype(x.dtype), s
+
+
+def ising_cl_score_ref(x, theta, mask, bias):
+    """Ising instance of :func:`cl_score_ref` (seed-compatible name)."""
+    return cl_score_ref(x, theta, mask, bias, kind="ising")

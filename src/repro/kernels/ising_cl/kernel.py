@@ -1,76 +1,6 @@
-"""Pallas TPU kernel: fused Ising conditional-logit matmul.
+"""Backward-compat shim: the masked conditional-logit matmul kernel moved
+to :mod:`repro.kernels.cl.kernel` (it is the C = 1 instance of the
+channelized ``cl_logits`` skeleton)."""
+from ..cl.kernel import BM, BN, BK, cl_logits, ising_cl_logits
 
-Computes eta = X @ (Theta * A) + b without materializing the masked
-coupling matrix (Theta * A) in HBM — the mask fuses into the MXU K-loop.
-This is the inner-loop hot spot of every pseudo-likelihood evaluation
-(paper Eq. 2): eta feeds log sigma(2 x_i eta_i) and all gradient statistics.
-
-TPU adaptation (vs a CUDA port): tiles are MXU-aligned (128x128), the
-accumulator lives in VMEM scratch across the K-grid dimension, and the mask
-multiply happens on the VPU between the HBM->VMEM copy and the MXU dot —
-zero extra HBM traffic for A.
-"""
-from __future__ import annotations
-
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-BM, BN, BK = 128, 128, 128
-
-
-def _kernel(x_ref, theta_ref, mask_ref, bias_ref, out_ref, acc_ref):
-    k = pl.program_id(2)
-    nk = pl.num_programs(2)
-
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    masked = theta_ref[...] * mask_ref[...]          # VPU fuse, no HBM trip
-    acc_ref[...] += jnp.dot(x_ref[...], masked,
-                            preferred_element_type=jnp.float32)
-
-    @pl.when(k == nk - 1)
-    def _done():
-        out_ref[...] = (acc_ref[...] +
-                        bias_ref[...].astype(jnp.float32)
-                        ).astype(out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def ising_cl_logits(x, theta, mask, bias, *, interpret: bool = True):
-    """eta = x @ (theta * mask) + bias.
-
-    x: (n, p); theta, mask: (p, p); bias: (p,). Shapes are padded to the
-    128-aligned grid internally. interpret=True executes the kernel body in
-    Python on CPU (validation mode); on TPU pass interpret=False.
-    """
-    n, p = x.shape
-    pad_n = (-n) % BM
-    pad_p = (-p) % BK
-    xp = jnp.pad(x, ((0, pad_n), (0, pad_p)))
-    tp = jnp.pad(theta, ((0, pad_p), (0, pad_p)))
-    mp = jnp.pad(mask, ((0, pad_p), (0, pad_p)))
-    bp = jnp.pad(bias, (0, pad_p))[None, :]
-    np_, pp = xp.shape
-
-    grid = (np_ // BM, pp // BN, pp // BK)
-    out = pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
-            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
-            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, BN), lambda i, j, k: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((np_, pp), x.dtype),
-        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
-        interpret=interpret,
-    )(xp, tp, mp, bp)
-    return out[:n, :p]
+__all__ = ["ising_cl_logits", "cl_logits", "BM", "BN", "BK"]

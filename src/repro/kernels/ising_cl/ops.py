@@ -1,29 +1,7 @@
-"""Jit'd public wrappers: pick the Pallas kernel on TPU, the pure-jnp
-reference elsewhere (CPU dry-run / tests use interpret mode explicitly)."""
-import jax
+"""Backward-compat shim: backend-dispatching ops moved to
+:mod:`repro.kernels.cl.ops`."""
+from ..cl.ops import (conditional_logits_op, score_stats_channels_op,
+                      score_stats_op)
 
-from .kernel import ising_cl_logits
-from .ref import cl_score_ref, ising_cl_logits_ref
-from .score import cl_score
-
-
-def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas:
-        return ising_cl_logits(x, theta, mask, bias, interpret=False)
-    return ising_cl_logits_ref(x, theta, mask, bias)
-
-
-def score_stats_op(x, theta, mask, bias, *, kind: str = "ising",
-                   use_pallas=None):
-    """Fused (eta, r, S) pseudo-likelihood score statistics.
-
-    ``kind`` selects the family epilogue ("ising" or "gaussian"); both the
-    Pallas kernel and the jnp reference dispatch on it.
-    """
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas:
-        return cl_score(x, theta, mask, bias, kind=kind, interpret=False)
-    return cl_score_ref(x, theta, mask, bias, kind=kind)
+__all__ = ["conditional_logits_op", "score_stats_op",
+           "score_stats_channels_op"]

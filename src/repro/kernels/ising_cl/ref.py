@@ -1,31 +1,9 @@
-"""Pure-jnp oracles for the ising_cl kernels."""
-import jax
-import jax.numpy as jnp
+"""Backward-compat shim: the jnp kernel oracles moved to
+:mod:`repro.kernels.cl.ref`."""
+from ..cl.ref import (cl_score_channels_ref, cl_score_ref,
+                      ising_cl_logits_ref, ising_cl_score_ref)
 
-
-def ising_cl_logits_ref(x, theta, mask, bias):
-    return (x @ (theta * mask) + bias[None, :]).astype(x.dtype)
-
-
-def cl_score_ref(x, theta, mask, bias, kind: str = "ising"):
-    """(eta, r, S): conditional logits, score residuals, score Gram.
-
-    ``kind`` mirrors the fused kernel's family epilogue dispatch: "ising"
-    logistic residual or "gaussian" linear residual.
-    """
-    eta = x.astype(jnp.float32) @ (theta * mask).astype(jnp.float32) \
-        + bias[None, :].astype(jnp.float32)
-    xf = x.astype(jnp.float32)
-    if kind == "ising":
-        r = 2.0 * xf * jax.nn.sigmoid(-2.0 * xf * eta)
-    elif kind == "gaussian":
-        r = xf - eta
-    else:
-        raise ValueError(f"unknown score kind {kind!r}")
-    s = r.T @ xf / x.shape[0]
-    return eta.astype(x.dtype), r.astype(x.dtype), s
-
-
-def ising_cl_score_ref(x, theta, mask, bias):
-    """Ising instance of :func:`cl_score_ref` (seed-compatible name)."""
-    return cl_score_ref(x, theta, mask, bias, kind="ising")
+__all__ = [
+    "cl_score_ref", "cl_score_channels_ref", "ising_cl_logits_ref",
+    "ising_cl_score_ref",
+]

@@ -1,178 +1,13 @@
-"""Pallas TPU kernel: fused pseudo-likelihood score statistics.
+"""Backward-compat shim: the fused score kernel moved to the family-generic
+:mod:`repro.kernels.cl` subsystem. Every public name keeps importing from
+here; new code should import from ``repro.kernels.cl`` directly."""
+from ..cl.score import (KERNEL_KINDS, cl_score, cl_score_channels_padded,
+                        cl_score_padded, ising_cl_score,
+                        ising_cl_score_padded)
+from ..cl.kernel import BM, BN, BK, cl_score_channels
 
-Extends the masked conditional-logit matmul (``kernel.py``) to emit the
-whole score pipeline of the paper's CL/PL estimators in ONE pass over X:
-
-    eta = X @ (Theta * A) + b                 (masked MXU matmul)
-    r   = dl/deta(eta, X)                     (VPU epilogue, per family)
-    S   = r^T X / n                           (score Gram, second MXU dot)
-
-The epilogue residual is **family-dispatched at trace time** via the static
-``kind`` argument: ``"ising"`` uses the logistic score
-``r = 2 X sigma(-2 X eta)`` and ``"gaussian"`` the linear-Gaussian score
-``r = X - eta`` of the unit-conditional-variance Gaussian MRF
-(:mod:`repro.core.families.gaussian`) — both single-channel families share
-the identical masked-matmul + Gram pipeline, so they share the kernel.
-Multi-channel families (Potts) fall back to the reference pseudo-score
-(see :func:`repro.stream.online.pseudo_score`).
-
-``r`` is the per-sample score residual every gradient statistic is built
-from: column means of ``r`` are the singleton gradients of the average
-pseudo-likelihood, ``S[i, j] + S[j, i]`` (for an edge (i, j)) the coupling
-gradients, and ``r[:, i] * Z_i`` node i's per-sample CL score. Fusing the
-epilogue and the Gram contraction means X is read from HBM once and eta
-never round-trips.
-
-Grid is (j, i, k): j tiles output columns (and S rows), i tiles samples,
-k tiles the contraction. The X strip for the current sample tile is stashed
-in VMEM during the k loop, so the S contraction re-reads it from on-chip
-memory rather than HBM.
-"""
-from __future__ import annotations
-
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-BM, BN, BK = 128, 128, 128
-
-#: families whose score statistics the fused kernel can emit directly
-KERNEL_KINDS = ("ising", "gaussian")
-
-
-def _residual(kind: str, xj, eta):
-    """Per-family score residual dl/deta — static (trace-time) dispatch."""
-    if kind == "ising":
-        return 2.0 * xj * jax.nn.sigmoid(-2.0 * xj * eta)
-    if kind == "gaussian":
-        return xj - eta
-    raise ValueError(f"fused score kernel has no epilogue for {kind!r}; "
-                     f"supported: {KERNEL_KINDS}")
-
-
-def _kernel(x_ref, theta_ref, mask_ref, bias_ref,
-            eta_ref, r_ref, s_ref, acc_ref, xstrip_ref, *, n: int,
-            kind: str = "ising"):
-    j = pl.program_id(0)
-    i = pl.program_id(1)
-    k = pl.program_id(2)
-    ni = pl.num_programs(1)
-    nk = pl.num_programs(2)
-
-    @pl.when(k == 0)
-    def _init_acc():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    @pl.when((i == 0) & (k == 0))
-    def _init_s():
-        s_ref[...] = jnp.zeros_like(s_ref)
-
-    # stash this sample-tile's X strip so the S contraction stays on-chip
-    xstrip_ref[:, pl.ds(k * BK, BK)] = x_ref[...].astype(jnp.float32)
-    masked = theta_ref[...] * mask_ref[...]          # VPU fuse, no HBM trip
-    acc_ref[...] += jnp.dot(x_ref[...], masked,
-                            preferred_element_type=jnp.float32)
-
-    @pl.when(k == nk - 1)
-    def _epilogue():
-        eta = acc_ref[...] + bias_ref[...].astype(jnp.float32)
-        eta_ref[...] = eta.astype(eta_ref.dtype)
-        xj = xstrip_ref[:, pl.ds(j * BN, BN)]        # X columns of this tile
-        r = _residual(kind, xj, eta)
-        r_ref[...] = r.astype(r_ref.dtype)
-        s_ref[...] += jnp.dot(r.T, xstrip_ref[...],
-                              preferred_element_type=jnp.float32)
-
-    @pl.when((k == nk - 1) & (i == ni - 1))
-    def _finish():
-        s_ref[...] = s_ref[...] / n
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "kind"))
-def cl_score(x, theta, mask, bias, *, kind: str = "ising",
-             interpret: bool = True):
-    """(eta, r, S) = fused score statistics; see module docstring.
-
-    x: (n, p); theta, mask: (p, p); bias: (p,). ``kind`` picks the
-    family epilogue (one compiled kernel per kind). Returns eta, r of shape
-    (n, p) in x.dtype and S of shape (p, p) in float32. interpret=True runs
-    the kernel body in Python on CPU (validation); on TPU pass False.
-    """
-    if kind not in KERNEL_KINDS:
-        raise ValueError(f"unsupported kernel kind {kind!r}")
-    n, p = x.shape
-    pad_n = (-n) % BM
-    pad_p = (-p) % BK
-    xp = jnp.pad(x, ((0, pad_n), (0, pad_p)))
-    tp = jnp.pad(theta, ((0, pad_p), (0, pad_p)))
-    mp = jnp.pad(mask, ((0, pad_p), (0, pad_p)))
-    bp = jnp.pad(bias, (0, pad_p))[None, :]
-    np_, pp = xp.shape
-
-    grid = (pp // BN, np_ // BM, pp // BK)
-    eta, r, s = pl.pallas_call(
-        functools.partial(_kernel, n=n, kind=kind),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((BM, BK), lambda j, i, k: (i, k)),
-            pl.BlockSpec((BK, BN), lambda j, i, k: (k, j)),
-            pl.BlockSpec((BK, BN), lambda j, i, k: (k, j)),
-            pl.BlockSpec((1, BN), lambda j, i, k: (0, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((BM, BN), lambda j, i, k: (i, j)),
-            pl.BlockSpec((BM, BN), lambda j, i, k: (i, j)),
-            pl.BlockSpec((BN, pp), lambda j, i, k: (j, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((np_, pp), x.dtype),
-            jax.ShapeDtypeStruct((np_, pp), x.dtype),
-            jax.ShapeDtypeStruct((pp, pp), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((BM, BN), jnp.float32),
-            pltpu.VMEM((BM, pp), jnp.float32),
-        ],
-        interpret=interpret,
-    )(xp, tp, mp, bp)
-    return eta[:n, :p], r[:n, :p], s[:p, :p]
-
-
-def ising_cl_score(x, theta, mask, bias, *, interpret: bool = True):
-    """Ising instance of :func:`cl_score` (seed-compatible entry point)."""
-    return cl_score(x, theta, mask, bias, kind="ising", interpret=interpret)
-
-
-def cl_score_padded(x_pad, theta, mask, bias, n_seen: int, *,
-                    kind: str = "ising", interpret: bool = True):
-    """Fused score statistics over a zero-padded streaming buffer.
-
-    ``x_pad`` is a capacity-doubling sample buffer whose rows past ``n_seen``
-    are all-zero padding. Zero rows contribute nothing to the score Gram
-    (``S = r^T X`` and the padded X rows are zero), so the only correction
-    needed is the Gram normalizer: the kernel divides by the buffer
-    capacity, we rescale to the live sample count. Keeping the buffer shape
-    fixed between capacity doublings means a growing stream re-uses one
-    compiled kernel instead of one per sample count.
-
-    Returns (eta, r, S) like :func:`cl_score`, with ``S`` normalized by
-    ``n_seen``. For the Ising kind, rows of ``r`` past ``n_seen`` are
-    guaranteed zero (``x = 0`` makes ``r = 2 x sigma(-2 x eta) = 0``); the
-    Gaussian residual ``x - eta`` is ``-bias`` on padded rows, so consumers
-    of per-sample residuals must slice ``r[:n_seen]`` (the singleton
-    gradient assembly in :func:`repro.stream.online.pseudo_score` does).
-    """
-    eta, r, S = cl_score(x_pad, theta, mask, bias, kind=kind,
-                         interpret=interpret)
-    scale = x_pad.shape[0] / max(int(n_seen), 1)
-    return eta, r, S * scale
-
-
-def ising_cl_score_padded(x_pad, theta, mask, bias, n_seen: int, *,
-                          interpret: bool = True):
-    """Ising instance of :func:`cl_score_padded` (seed-compatible name)."""
-    return cl_score_padded(x_pad, theta, mask, bias, n_seen, kind="ising",
-                           interpret=interpret)
+__all__ = [
+    "KERNEL_KINDS", "cl_score", "cl_score_padded", "cl_score_channels",
+    "cl_score_channels_padded", "ising_cl_score", "ising_cl_score_padded",
+    "BM", "BN", "BK",
+]

@@ -18,8 +18,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_consensus_mesh(n_pods: int = 2):
     """Mesh for the consensus trainer: explicit pod axis even single-pod
-    dry-runs (the pod axis carries the paper's cross-sensor collectives)."""
-    per_pod = len(jax.devices()) // n_pods
+    dry-runs (the pod axis carries the paper's cross-sensor collectives).
+
+    Raises a clear ``ValueError`` when the device count is not divisible by
+    ``n_pods`` — the silent floor division it replaced built a mesh over
+    fewer devices than exist, which ``jax.make_mesh`` then mis-shapes.
+    """
+    n_dev = len(jax.devices())
+    if n_pods < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    if n_dev % n_pods != 0:
+        raise ValueError(
+            f"cannot split {n_dev} device(s) into {n_pods} equal pods "
+            f"(device count must be divisible by n_pods)")
+    per_pod = n_dev // n_pods
     data = 16 if per_pod % 16 == 0 else per_pod
     model = per_pod // data
     return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"))

@@ -6,7 +6,7 @@ capacity that doubles on overflow: every consumer sees a (capacity, p) array
 whose shape changes only O(log n) times over the whole stream, and expresses
 "only the first n rows are real" with 0/1 prefix masks (which the batched
 engine and the fused score kernel treat exactly — see
-``repro.core.batched`` and ``repro.kernels.ising_cl.score``).
+``repro.core.batched`` and ``repro.kernels.cl.score``).
 """
 from __future__ import annotations
 

@@ -14,13 +14,19 @@ bank is **family-generic**: pass any registered
 streams Gaussian MRF or Potts estimation.
 
 :func:`pseudo_score` is the observer-side any-time diagnostic: the exact
-gradient of the average pseudo-likelihood at an arbitrary theta. For the
-single-channel families whose residual the fused Pallas score kernel can
-emit (Ising, Gaussian — see ``repro.kernels.ising_cl.score.KERNEL_KINDS``)
-it runs in one pass over the padded buffer; other families fall back to the
-family's autodiff reference score on the live rows. Its norm shrinking
-toward zero is a model-free convergence signal for whatever consensus
-estimate is being traced.
+gradient of the average pseudo-likelihood at an arbitrary theta. Every
+family whose ``kernel_kind`` has a registered epilogue in the fused CL
+kernel subsystem (``repro.kernels.cl`` — Ising, Gaussian and the
+multi-channel Potts all ship one) runs in one fused pass over the padded
+buffer; families without an epilogue fall back to the autodiff reference
+score on the live rows. Its norm shrinking toward zero is a model-free
+convergence signal for whatever consensus estimate is being traced.
+
+Scale-out: both :class:`StreamingEstimator` and
+:class:`~repro.stream.simulator.StreamSimulator` take a ``mesh`` kwarg that
+routes every incremental re-fit through the batched engine's
+shard_map-over-mesh path (bucket nodes sharded along the mesh's ``data``
+axis; numerically identical on a one-device mesh).
 """
 from __future__ import annotations
 
@@ -34,7 +40,8 @@ from ..core.consensus import TRUST_RADIUS
 from ..core.estimators import LocalFit
 from ..core.families import ISING
 from ..core.graphs import Graph
-from ..kernels.ising_cl.score import KERNEL_KINDS, cl_score_padded
+from ..kernels.cl.epilogues import get_epilogue
+from ..kernels.cl.family import fused_pseudo_score
 from .buffer import SampleBuffer
 
 
@@ -51,9 +58,10 @@ class StreamingEstimator:
     def __init__(self, graph: Graph, include_singleton: bool = True,
                  theta_fixed: Optional[np.ndarray] = None,
                  capacity: int = 64, n_iter: int = 40,
-                 family=None) -> None:
+                 family=None, mesh=None) -> None:
         self.graph = graph
         self.family = ISING if family is None else family
+        self.mesh = mesh
         self.include_singleton = include_singleton
         n_params = self.family.n_params(graph)
         self.theta_fixed = (np.zeros(n_params, dtype=np.float64)
@@ -112,7 +120,7 @@ class StreamingEstimator:
             n_iter=self.n_iter,
             sample_weight=jnp.asarray(masks),
             warm_start=self._warm,
-            family=self.family)
+            family=self.family, mesh=self.mesh)
         changed = self.counts != self._fit_counts
         self.versions = self.versions + changed.astype(np.int64)
         self._fit_counts = self.counts.copy()
@@ -139,37 +147,32 @@ class StreamingEstimator:
 
 def pseudo_score(graph: Graph, theta: np.ndarray, x_pad,
                  n_seen: int, interpret: bool = True,
-                 family=None) -> np.ndarray:
+                 family=None, use_pallas: Optional[bool] = None) -> np.ndarray:
     """Exact flat gradient of the average pseudo-likelihood at ``theta``.
 
-    Family-dispatched: single-channel families whose residual the fused
-    kernel can emit (Ising, Gaussian) run one fused pass over the
-    (zero-padded) sample buffer — the kernel emits the per-sample score
-    residual r and the score Gram S = r^T X / n; singleton gradients are
-    live-row means of r and the coupling gradient of edge (i, j) is
-    ``S[i, j] + S[j, i]`` (see the kernel module docstring). Other families
-    (Potts) fall back to the family's autodiff reference score over the
+    Family-dispatched through the fused CL kernel subsystem: any family
+    whose ``kernel_kind`` has a registered epilogue (Ising, Gaussian, and
+    multi-channel Potts) runs one fused pass over the (zero-padded) sample
+    buffer — the channelized kernel emits the per-sample score residuals r
+    and the cross-channel score Gram ``S[c, e] = r_c^T F_e / n``;
+    channel-c singleton gradients are live-row means of ``r_c`` and the
+    coupling gradient of edge (i, j) is ``S[c, c][i, j] + S[c, c][j, i]``
+    (see :func:`repro.kernels.cl.family.fused_pseudo_score`). Families
+    without an epilogue fall back to the autodiff reference score over the
     live rows.
+
+    ``use_pallas=None`` takes the backend default — the compiled kernel on
+    TPU, the (identical, much faster on CPU) jnp reference elsewhere; pass
+    ``use_pallas=True`` to force the kernel body, in which case
+    ``interpret`` chooses interpret vs compiled execution.
     """
     if family is None:
         family = ISING
     theta = np.asarray(theta, dtype=np.float64)
-    p = graph.p
     if n_seen <= 0:
         return np.zeros(family.n_params(graph))
-    if family.name not in KERNEL_KINDS or family.block_dim != 1:
+    if get_epilogue(getattr(family, "kernel_kind", None)) is None:
         return family.pseudo_score(graph, theta,
                                    np.asarray(x_pad)[: int(n_seen)])
-    T = family.coupling_tensor(
-        graph, jnp.asarray(theta, dtype=jnp.float32))[:, :, 0]
-    A = jnp.asarray(graph.adjacency)
-    bias = jnp.asarray(theta[:p], dtype=jnp.float32)
-    _, r, S = cl_score_padded(jnp.asarray(x_pad), T, A, bias, n_seen,
-                              kind=family.name, interpret=interpret)
-    r = np.asarray(r, dtype=np.float64)[: int(n_seen)]
-    S = np.asarray(S, dtype=np.float64)
-    g = np.zeros(family.n_params(graph))
-    g[:p] = r.sum(axis=0) / n_seen
-    for k, (i, j) in enumerate(graph.edges):
-        g[p + k] = S[i, j] + S[j, i]
-    return g
+    return fused_pseudo_score(family, graph, theta, x_pad, n_seen,
+                              interpret=interpret, use_pallas=use_pallas)

@@ -99,6 +99,9 @@ class StreamSimulator:
     scheme : one-step weighting — "uniform", "diagonal", or "max". (The
         paper's "optimal" scheme ships n influence samples per shared param
         — see costs.comm_costs — and is deliberately not a streaming mode.)
+    mesh : optional jax mesh with a ``data`` axis; every re-fit / proximal
+        round then runs through the batched engine's shard_map path
+        (numerically identical on a one-device mesh).
     """
 
     def __init__(self, graph: Graph, pool, *,
@@ -110,7 +113,7 @@ class StreamSimulator:
                  arrivals: ArrivalSpec = ArrivalSpec(rate=8.0),
                  refit_every: int = 1, newton_iters: int = 40,
                  admm_rho: float = 1.0, capacity: int = 64,
-                 seed: int = 0, family=None) -> None:
+                 seed: int = 0, family=None, mesh=None) -> None:
         if estimator not in ("one_step", "admm"):
             raise ValueError(f"unknown estimator {estimator!r}")
         if scheme not in ONE_STEP_SCHEMES:
@@ -118,6 +121,7 @@ class StreamSimulator:
         from ..core.families import ISING
         self.graph = graph
         self.family = ISING if family is None else family
+        self.mesh = mesh
         self.pool = np.asarray(pool, dtype=np.float32)
         self.estimator = estimator
         self.scheme = scheme
@@ -136,7 +140,7 @@ class StreamSimulator:
 
         self.est = StreamingEstimator(graph, include_singleton, theta_fixed,
                                       capacity=capacity, n_iter=newton_iters,
-                                      family=self.family)
+                                      family=self.family, mesh=mesh)
         links = [(i, j) for (a, b) in graph.edges for (i, j) in ((a, b),
                                                                 (b, a))]
         self.net = Network(links, network or NetworkConfig())
@@ -239,7 +243,7 @@ class StreamSimulator:
             include_singleton=self.include_singleton,
             theta_fixed=self.theta_fixed.astype(np.float32),
             sample_weight=masks, n_iter=self.newton_iters,
-            family=self.family)
+            family=self.family, mesh=self.mesh)
         # NaN or runaway primal iterates (degenerate small-n prox solves)
         # would be absorbing through the warm start and the dual update —
         # reset the offending coordinates to their consensus view instead.

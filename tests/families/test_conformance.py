@@ -28,7 +28,9 @@ import repro.stream as S
 from repro.core.batched import fit_all_local_batched, prox_update_batched
 from repro.core.families import (fit_mple_family, fit_node_oracle,
                                  registered_families)
-from repro.kernels.ising_cl.score import KERNEL_KINDS
+from repro.kernels.cl.epilogues import get_epilogue
+from repro.kernels.cl.family import family_kernel_inputs, family_score_stats
+from repro.kernels.cl.ref import cl_score_channels_ref
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,9 +235,10 @@ def test_prox_update_with_vanishing_penalty_matches_fit(setup, fits):
 
 # ----------------------------------------------------- dispatched score
 def test_pseudo_score_dispatch_matches_autodiff(setup):
-    """The streaming pseudo-score — fused Pallas kernel for single-channel
-    kinds (Ising, Gaussian), family autodiff fallback otherwise (Potts) —
-    equals the reference gradient on the live rows of a padded buffer."""
+    """The streaming pseudo-score — the fused CL kernel for every family
+    with a registered epilogue (all three registered families, the
+    multi-channel Potts included) — equals the reference gradient on the
+    live rows of a padded buffer."""
     fam, g, theta, X = setup
     est = S.StreamingEstimator(g, capacity=64, family=fam)
     est.ingest(X[:700])
@@ -243,8 +246,28 @@ def test_pseudo_score_dispatch_matches_autodiff(setup):
     ref = fam.pseudo_score(g, probe, X[:700])
     got = S.pseudo_score(g, probe, est.buffer.data, est.n_pool, family=fam)
     np.testing.assert_allclose(got, ref, atol=3e-4)
-    # the zoo's dispatch map: both fused kinds stay fused
-    assert ("ising" in KERNEL_KINDS) and ("gaussian" in KERNEL_KINDS)
+    # the zoo's dispatch map: every registered family runs the fused path.
+    # The live registry is the gate (KERNEL_KINDS is an import-time
+    # snapshot and would wrongly reject families registered later).
+    assert get_epilogue(fam.kernel_kind) is not None
+
+
+def test_fused_kernel_matches_reference(setup):
+    """Conformance gate for the fused kernel path itself: the channelized
+    Pallas score kernel (interpret mode) agrees with the jnp reference
+    <= 1e-5 on the family's own sampled data — every registered family
+    exercises its epilogue here."""
+    fam, g, theta, X = setup
+    t32 = jnp.asarray(theta, jnp.float32)
+    Xj = jnp.asarray(X[:512])
+    out = family_score_stats(fam, g, t32, Xj, use_pallas=True,
+                             interpret=True)
+    ref = cl_score_channels_ref(*family_kernel_inputs(fam, g, t32, Xj),
+                                kind=fam.kernel_kind)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32),
+                                   atol=1e-5, rtol=1e-5)
 
 
 # --------------------------------------------------- sampler vs oracle

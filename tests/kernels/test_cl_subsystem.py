@@ -1,0 +1,180 @@
+"""Family-generic CL kernel subsystem: public-name backward compatibility,
+the epilogue registry, the channelized multi-channel (Potts) pipeline, and
+the fused bucket Newton-step entry point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.batched import _bucket_design, _channel_ops, degree_buckets
+from repro.kernels.cl import (bucket_newton_stats, bucket_newton_stats_ref,
+                              cl_logits, fused_pseudo_score)
+from repro.kernels.cl.epilogues import (Epilogue, get_epilogue,
+                                        register_epilogue, registered_kinds,
+                                        require_epilogue)
+from repro.kernels.cl.family import family_score_stats
+from repro.kernels.cl.ref import cl_logits_ref, cl_score_channels_ref
+
+
+# -------------------------------------------------------- public name lock
+def test_seed_public_names_remain_importable():
+    """The ising_cl -> cl dissolution keeps every public name importable
+    from its original path (the backward-compat contract of the refactor)."""
+    from repro.kernels.ising_cl.kernel import ising_cl_logits  # noqa: F401
+    from repro.kernels.ising_cl.ops import (conditional_logits_op,  # noqa
+                                            score_stats_op)
+    from repro.kernels.ising_cl.ref import (cl_score_ref,  # noqa: F401
+                                            ising_cl_logits_ref,
+                                            ising_cl_score_ref)
+    from repro.kernels.ising_cl.score import (KERNEL_KINDS,  # noqa: F401
+                                              cl_score, cl_score_padded,
+                                              ising_cl_score,
+                                              ising_cl_score_padded)
+    assert {"ising", "gaussian", "potts"} <= set(KERNEL_KINDS)
+    # the shims re-export the cl implementations, not copies
+    from repro.kernels import cl
+    assert ising_cl_score is cl.ising_cl_score
+    assert cl_score is cl.cl_score
+    assert cl_score_ref is cl.cl_score_ref
+
+
+# ------------------------------------------------------- epilogue registry
+def test_registry_roundtrip_and_errors():
+    assert set(registered_kinds()) >= {"ising", "gaussian", "potts"}
+    assert get_epilogue("ising").channels == "single"
+    assert get_epilogue("potts").channels == "multi"
+    assert get_epilogue(None) is None
+    assert get_epilogue("no-such-kind") is None
+    with pytest.raises(ValueError, match="no epilogue"):
+        require_epilogue("no-such-kind")
+    with pytest.raises(ValueError):
+        Epilogue(kind="x", channels="both", features=None, residual=None,
+                 curvature=None)
+    with pytest.raises(ValueError):
+        register_epilogue(Epilogue(kind="", channels="single", features=None,
+                                   residual=None, curvature=None))
+
+
+def test_every_registered_family_has_an_epilogue():
+    """The ROADMAP debt this PR pays: every family in the model zoo runs
+    the fused kernel path — no more autodiff-only fallbacks."""
+    for fam in C.registered_families():
+        assert get_epilogue(fam.kernel_kind) is not None, fam.name
+
+
+# --------------------------------------------------- channelized pipeline
+def test_channelized_logits_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    Cdim, n, p = 3, 40, 17
+    F = (jax.random.uniform(ks[0], (Cdim, n, p)) < 0.4).astype(jnp.float32)
+    theta = 0.3 * jax.random.normal(ks[1], (Cdim, p, p))
+    mask = (jax.random.uniform(ks[2], (p, p)) < 0.4).astype(jnp.float32)
+    bias = 0.2 * jax.random.normal(ks[3], (Cdim, p))
+    out = cl_logits(F, theta, mask, bias, interpret=True)
+    ref = cl_logits_ref(F, theta, mask, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def _family_setup(name, seed=0, n=220):
+    fam = C.get_family(name)
+    g = C.grid_graph(2, 3)
+    theta = fam.random_params(g, jax.random.PRNGKey(seed))
+    X = fam.exact_sample(g, theta, n, jax.random.PRNGKey(seed + 1))
+    return fam, g, np.asarray(theta, np.float64), jnp.asarray(X)
+
+
+@pytest.mark.parametrize("name", [f.name for f in C.registered_families()])
+def test_family_score_stats_kernel_vs_ref(name):
+    """family adapter -> channelized Pallas kernel == jnp reference for
+    every registered family, Potts' cross-channel Gram blocks included."""
+    from repro.kernels.cl.family import family_kernel_inputs
+    fam, g, theta, X = _family_setup(name)
+    out = family_score_stats(fam, g, jnp.asarray(theta, jnp.float32), X,
+                             use_pallas=True, interpret=True)
+    Fin = family_kernel_inputs(fam, g, jnp.asarray(theta, jnp.float32), X)
+    ref = cl_score_channels_ref(*Fin, kind=fam.kernel_kind)
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5,
+                                   rtol=1e-5)
+    Cdim = fam.block_dim
+    assert out[2].shape == (Cdim, Cdim, g.p, g.p)
+
+
+@pytest.mark.parametrize("name", [f.name for f in C.registered_families()])
+def test_fused_pseudo_score_matches_autodiff(name):
+    """The fused flat pseudo-score over a zero-padded buffer equals the
+    family's autodiff gradient on the live rows, for every family."""
+    fam, g, theta, X = _family_setup(name, seed=3)
+    n_seen = 180
+    x_pad = np.zeros((256, g.p), dtype=np.float32)
+    x_pad[:n_seen] = np.asarray(X)[:n_seen]
+    probe = theta * 0.7
+    got = fused_pseudo_score(fam, g, probe, x_pad, n_seen)
+    ref = fam.pseudo_score(g, probe, np.asarray(X)[:n_seen])
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_stream_pseudo_score_use_pallas_passthrough():
+    """pseudo_score(use_pallas=True, interpret=True) really runs the kernel
+    body and agrees with the default (reference-on-CPU) dispatch."""
+    import repro.stream as S
+    fam, g, theta, X = _family_setup("potts", seed=4)
+    x_pad = np.zeros((256, g.p), dtype=np.float32)
+    x_pad[:200] = np.asarray(X)[:200]
+    a = S.pseudo_score(g, theta, x_pad, 200, family=fam)
+    b = S.pseudo_score(g, theta, x_pad, 200, family=fam,
+                       use_pallas=True, interpret=True)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_channels_op_dispatch_cpu():
+    """Off-TPU, the channelized op wrapper routes to the jnp reference."""
+    from repro.kernels.cl.ops import score_stats_channels_op
+    fam, g, theta, X = _family_setup("potts", seed=2)
+    from repro.kernels.cl.family import family_kernel_inputs
+    inputs = family_kernel_inputs(fam, g, jnp.asarray(theta, jnp.float32), X)
+    out = score_stats_channels_op(*inputs, kind="potts")
+    ref = cl_score_channels_ref(*inputs, kind="potts")
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-6)
+
+
+# ------------------------------------------------ fused bucket Newton step
+@pytest.mark.parametrize("name", [f.name for f in C.registered_families()])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_bucket_newton_stats_pallas_matches_ref(name, weighted):
+    """The Pallas fused Newton entry (score + Gram in the (k, C, d) bucket
+    layout) matches the jnp reference, which itself is bit-identical to the
+    engine's historical closed-form contractions."""
+    fam, g, theta, X = _family_setup(name, seed=5)
+    b = degree_buckets(g)[0]
+    Zb, xi, base, _ = _bucket_design(
+        fam, X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
+        jnp.asarray(b.mask), jnp.zeros((len(b.nodes), fam.block_dim)), True)
+    k, Cdim, d, n = Zb.shape
+    W = 0.1 * jax.random.normal(jax.random.PRNGKey(7), (k, d * Cdim))
+    sw = ((jax.random.uniform(jax.random.PRNGKey(8), (k, n)) < 0.7)
+          .astype(jnp.float32) if weighted else None)
+    g_ref, K_ref = bucket_newton_stats_ref(fam.kernel_kind, Zb, base, xi, W,
+                                           sw)
+    g_pal, K_pal = bucket_newton_stats(fam.kernel_kind, Zb, base, xi, W, sw,
+                                       interpret=True)
+    scale = max(float(jnp.max(jnp.abs(K_ref))), 1.0)
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref),
+                               atol=2e-5 * scale)
+    np.testing.assert_allclose(np.asarray(K_pal), np.asarray(K_ref),
+                               atol=2e-5 * scale)
+    # and the reference really is the engine's PRE-fusion contraction,
+    # bitwise: compare against the legacy family-hook closures
+    # (score_curvature -> grad_vec/curvature_matrix), not the newton_stats
+    # dispatcher (which would be circular — it calls the ref on CPU)
+    denom = jnp.full((k,), float(n))
+    sw_engine = sw if weighted else jnp.ones((1, 1), X.dtype)
+    score_curvature, grad_vec, curvature_matrix, *_ = _channel_ops(
+        fam, Zb, base, xi, sw_engine, weighted, denom)
+    r_leg, kap_leg = score_curvature(W)
+    np.testing.assert_array_equal(np.asarray(grad_vec(r_leg)),
+                                  np.asarray(g_ref))
+    np.testing.assert_array_equal(np.asarray(curvature_matrix(kap_leg)),
+                                  np.asarray(K_ref))

@@ -74,23 +74,68 @@ def test_score_op_dispatch_cpu():
         np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-6)
 
 
+def _kind_inputs(kind, n, p, seed, C=2):
+    """(F, theta, mask, bias) channelized inputs with kind-valid samples."""
+    from repro.kernels.cl.epilogues import get_epilogue
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    if kind == "potts":
+        x = jax.random.randint(ks[0], (n, p), 0, C + 1).astype(jnp.float32)
+    elif kind == "gaussian":
+        x = jax.random.normal(ks[0], (n, p))
+    else:
+        x = jnp.sign(jax.random.normal(ks[0], (n, p)))
+    ep = get_epilogue(kind)
+    Cdim = C if ep.channels == "multi" else 1
+    F = ep.features(x, Cdim)                         # (C, n, p)
+    theta = 0.3 * jax.random.normal(ks[1], (Cdim, p, p))
+    theta = (theta + jnp.swapaxes(theta, 1, 2)) / 2
+    mask = (jax.random.uniform(ks[2], (p, p)) < 0.3).astype(jnp.float32)
+    mask = jnp.triu(mask, 1) + jnp.triu(mask, 1).T
+    bias = 0.1 * jax.random.normal(ks[3], (Cdim, p))
+    return F, theta, mask, bias
+
+
 @pytest.mark.parametrize("kind", KERNEL_KINDS)
 def test_family_epilogues_match_ref(kind):
-    """Every fused family epilogue (trace-time ``kind`` dispatch) matches
-    the jnp reference — the Gaussian residual shares the Ising pipeline."""
-    x, theta, mask, bias = _rand_inputs(96, 70, seed=5)
-    if kind == "gaussian":
-        # continuous data exercises the linear residual properly
-        x = x + 0.3 * jax.random.normal(jax.random.PRNGKey(9), x.shape)
-    out = cl_score(x, theta, mask, bias, kind=kind, interpret=True)
-    ref = cl_score_ref(x, theta, mask, bias, kind=kind)
+    """Every registered fused epilogue (trace-time ``kind`` dispatch)
+    matches the jnp reference through the channelized skeleton — Ising,
+    Gaussian, and the multi-channel Potts alike."""
+    from repro.kernels.cl.kernel import cl_score_channels
+    from repro.kernels.cl.ref import cl_score_channels_ref
+    F, theta, mask, bias = _kind_inputs(kind, 96, 70, seed=5)
+    out = cl_score_channels(F, theta, mask, bias, kind=kind, interpret=True)
+    ref = cl_score_channels_ref(F, theta, mask, bias, kind=kind)
     for o, r in zip(out, ref):
         np.testing.assert_allclose(np.asarray(o, np.float32),
                                    np.asarray(r, np.float32),
                                    atol=2e-5, rtol=2e-5)
 
 
+def test_single_channel_entries_match_ref():
+    """The seed single-channel entry points are the C = 1 instances of the
+    channelized skeleton."""
+    x, theta, mask, bias = _rand_inputs(96, 70, seed=5)
+    for kind, xs in (("ising", x),
+                     ("gaussian",
+                      x + 0.3 * jax.random.normal(jax.random.PRNGKey(9),
+                                                  x.shape))):
+        out = cl_score(xs, theta, mask, bias, kind=kind, interpret=True)
+        ref = cl_score_ref(xs, theta, mask, bias, kind=kind)
+        for o, r in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(o, np.float32),
+                                       np.asarray(r, np.float32),
+                                       atol=2e-5, rtol=2e-5)
+
+
 def test_unknown_kind_rejected():
     x, theta, mask, bias = _rand_inputs(8, 6, seed=6)
     with pytest.raises(ValueError):
+        cl_score(x, theta, mask, bias, kind="boltzmann", interpret=True)
+
+
+def test_multi_channel_kind_rejected_by_single_channel_entry():
+    """Potts is a registered kind but needs (C, n, p) inputs — the single
+    channel entry must fail loudly, not mis-shape."""
+    x, theta, mask, bias = _rand_inputs(8, 6, seed=6)
+    with pytest.raises(ValueError, match="multi-channel"):
         cl_score(x, theta, mask, bias, kind="potts", interpret=True)

@@ -1,0 +1,32 @@
+"""Mesh construction: the consensus mesh must fail loudly on indivisible
+device counts instead of silently mis-shaping."""
+import jax
+import pytest
+
+from repro.launch.mesh import make_consensus_mesh, make_host_mesh
+
+
+def test_host_mesh_axes():
+    mesh = make_host_mesh()
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert int(mesh.shape["data"]) * int(mesh.shape["model"]) == 1
+
+
+def test_consensus_mesh_single_pod():
+    mesh = make_consensus_mesh(n_pods=1)
+    assert tuple(mesh.axis_names) == ("pod", "data", "model")
+    assert int(mesh.shape["pod"]) == 1
+    assert mesh.devices.size == len(jax.devices())
+
+
+def test_consensus_mesh_rejects_indivisible_pods():
+    """len(jax.devices()) == 1 here, so any n_pods > 1 is indivisible; the
+    seed code floor-divided to per_pod == 0 and handed jax.make_mesh a
+    mis-shaped request."""
+    with pytest.raises(ValueError, match="divisible"):
+        make_consensus_mesh(n_pods=len(jax.devices()) + 1)
+
+
+def test_consensus_mesh_rejects_nonpositive_pods():
+    with pytest.raises(ValueError, match="n_pods"):
+        make_consensus_mesh(n_pods=0)

@@ -3,9 +3,11 @@
 * :class:`SampleBuffer` — capacity doubling preserves prefix contents
   exactly, padding rows stay zero, and prefix masks cover exactly the
   counted rows;
-* ``cl_score_padded`` — zero-padded buffer rows are invisible to the fused
-  score pipeline (Ising residuals vanish on zero rows; the Gram ignores
-  them for every kind because the padded X rows are zero);
+* ``cl_score_padded`` / the channelized fused pipeline — zero-padded buffer
+  rows are invisible to the fused score for EVERY registered family (Ising
+  residuals vanish on zero rows; the Gram ignores padding for every kind
+  because the padded feature rows are zero — for Potts because state 0 is
+  the all-zero reference indicator row);
 * :class:`Network` — exact scalar/message conservation:
   sent == delivered + dropped + in-flight at every point, and in-flight
   drains to zero.
@@ -16,10 +18,14 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.kernels.ising_cl.score import (cl_score,  # noqa: E402
-                                          cl_score_padded)
+import repro.core as C  # noqa: E402
+from repro.kernels.cl.family import (family_kernel_inputs,  # noqa: E402
+                                     family_score_stats)
+from repro.kernels.cl.score import (cl_score,  # noqa: E402
+                                    cl_score_padded)
 from repro.stream.buffer import SampleBuffer  # noqa: E402
 from repro.stream.network import Network, NetworkConfig  # noqa: E402
 
@@ -115,6 +121,41 @@ def test_zero_padded_rows_invisible_to_fused_score(n, pad, p, seed):
     assert not np.asarray(r_p)[n:].any()
     np.testing.assert_allclose(np.asarray(S_p), np.asarray(S),
                                atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("fam", C.registered_families(),
+                         ids=lambda f: f.name)
+@given(
+    n=st.integers(1, 20),
+    pad=st.integers(0, 32),
+    seed=st.integers(0, 2 ** 16),
+)
+@settings(max_examples=12, deadline=None)
+def test_zero_padded_rows_invisible_every_family(fam, n, pad, seed):
+    """The family-generic fused pipeline: for EVERY registered family
+    (multi-channel Potts included), a zero-padded buffer yields the same
+    eta/r on live rows and the same renormalized cross-channel score Gram
+    as the exact-rows kernel, <= 1e-5."""
+    p = 6
+    g = C.grid_graph(2, 3)
+    theta = np.asarray(fam.random_params(g, jax.random.PRNGKey(seed % 997)),
+                       dtype=np.float32)
+    x = np.asarray(C.random_rows(fam, jax.random.PRNGKey(seed), n, p),
+                   dtype=np.float32)
+    x_pad = np.zeros((n + pad, p), dtype=np.float32)
+    x_pad[:n] = x
+
+    eta, r, S = family_score_stats(fam, g, theta, jnp.asarray(x))
+    eta_p, r_p, S_p = family_score_stats(fam, g, theta, jnp.asarray(x_pad))
+    S_p = np.asarray(S_p) * ((n + pad) / n)         # live-count renorm
+    np.testing.assert_allclose(np.asarray(eta_p)[:, :n], np.asarray(eta),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_p)[:, :n], np.asarray(r),
+                               atol=1e-5)
+    np.testing.assert_allclose(S_p, np.asarray(S), atol=1e-5, rtol=1e-5)
+    # padded feature rows really are all-zero (state 0 = reference state)
+    F_pad = family_kernel_inputs(fam, g, theta, jnp.asarray(x_pad))[0]
+    assert not np.asarray(F_pad)[:, n:].any()
 
 
 # ----------------------------------------------------------------- network
