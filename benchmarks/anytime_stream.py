@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as A
 import repro.core as C
 import repro.stream as S
 from .util import emit, emit_json, scale
@@ -43,11 +44,12 @@ def _run_graph(name, g, rounds, rate, seed):
     rec = {"p": g.p, "m": g.m, "rounds": rounds, "rate": rate,
            "methods": {}}
 
+    # one declarative plan per scheme; the simulator is configured from it
     for scheme in SCHEMES:
-        sim = S.StreamSimulator(
-            g, pool, scheme=scheme, theta_star=theta_star,
-            arrivals=S.ArrivalSpec(rate=float(rate)), capacity=128,
-            seed=seed)
+        plan = A.Plan(graph=g, combiners=(scheme,), capacity=128)
+        sim = S.StreamSimulator.from_plan(
+            plan, pool, theta_star=theta_star,
+            arrivals=S.ArrivalSpec(rate=float(rate)), seed=seed)
         res = sim.run(rounds)
         rec["methods"][f"one_step_{scheme}"] = {
             "samples_seen": res.samples_seen.tolist(),
@@ -55,10 +57,10 @@ def _run_graph(name, g, rounds, rate, seed):
             "err": res.err.tolist(),
         }
 
-    sim = S.StreamSimulator(
-        g, pool, estimator="admm", theta_star=theta_star,
-        arrivals=S.ArrivalSpec(rate=float(rate)), capacity=128,
-        newton_iters=12, seed=seed)
+    admm_plan = A.Plan(graph=g, capacity=128, admm_newton_iters=12)
+    sim = S.StreamSimulator.from_plan(
+        admm_plan, pool, estimator="admm", theta_star=theta_star,
+        arrivals=S.ArrivalSpec(rate=float(rate)), seed=seed)
     res = sim.run(rounds)
     rec["methods"]["admm_stream"] = {
         "samples_seen": res.samples_seen.tolist(),
@@ -80,12 +82,14 @@ def _run_graph(name, g, rounds, rate, seed):
         "err": orc_err,
     }
 
-    # invariant: chunked streaming == one-shot batch when nothing is dropped
-    est = S.StreamingEstimator(g, capacity=128)
+    # invariant: chunked streaming == one-shot batch when nothing is
+    # dropped — both verbs of ONE compiled session
+    sess = A.Plan(graph=g, capacity=128).session()
+    est = sess.stream()
     for chunk in np.array_split(pool[: rounds * rate], 4):
         est.ingest(chunk)
         est.refit()
-    oneshot = C.fit_all_local(g, jnp.asarray(pool[: rounds * rate]))
+    oneshot = sess.fit(pool[: rounds * rate]).fits
     chunk_diff = max(float(np.max(np.abs(a.theta - b.theta)))
                      for a, b in zip(est.fits, oneshot))
     rec["chunked_vs_batch_maxdiff"] = chunk_diff

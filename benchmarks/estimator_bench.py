@@ -101,6 +101,38 @@ def bench_sharded(g, X, fits_plain):
     }
 
 
+def bench_session_reuse(g, X):
+    """The estimation-plan API's compile-reuse contract as a bench row:
+    one cold ``EstimationSession.fit`` (pays one compile per degree
+    bucket) vs a warm fit on FRESH same-shape data (pays zero). The
+    compile counter is asserted, not just reported — a regression that
+    breaks solver reuse fails the bench."""
+    import repro.api as A
+    from repro.core.batched import clear_bucket_solver_caches
+
+    clear_bucket_solver_caches()
+    plan = A.Plan(graph=g, combiners=("diagonal", "max"))
+    sess = plan.session()
+    cold, res_cold = _wall(lambda: sess.fit(X))
+    fresh = np.ascontiguousarray(np.asarray(X)[::-1])
+    warm, res_warm = _wall(lambda: sess.fit(fresh))
+    n_buckets = sess.n_buckets
+    assert res_cold.new_compiles == n_buckets, \
+        (f"cold session fit compiled {res_cold.new_compiles} bucket "
+         f"solvers, expected one per degree bucket ({n_buckets})")
+    assert res_warm.new_compiles == 0, \
+        (f"warm session fit on fresh same-shape data recompiled "
+         f"{res_warm.new_compiles} bucket solvers; session reuse broken")
+    return {
+        "session_fit_cold_s": cold,
+        "session_fit_warm_s": warm,
+        "session_reuse_speedup": cold / warm,
+        "session_cold_compiles": res_cold.new_compiles,
+        "session_warm_compiles": res_warm.new_compiles,
+        "session_n_buckets": n_buckets,
+    }
+
+
 def bench_combine(g, fits):
     for sch in ("uniform", "diagonal", "optimal", "max"):
         C.combine(g, fits, sch)                      # warm any lazy setup
@@ -155,6 +187,7 @@ def main() -> None:
 
     metrics, fits = bench_fit_all_local(g, X)
     metrics.update(bench_sharded(g, X, fits))
+    session_reuse = bench_session_reuse(g, X)
     metrics.update(bench_gibbs(m, n))
     metrics.update(bench_combine(g, fits))
     fam_rows = bench_families(scale(36, 36), scale(600, 600))
@@ -181,6 +214,13 @@ def main() -> None:
          f"chrom_s={metrics['gibbs_chromatic_s']:.2f} "
          f"speedup={metrics['gibbs_speedup']:.1f}x "
          f"colors={metrics['n_colors']}")
+    emit("estimator_session_reuse", session_reuse["session_fit_warm_s"] * 1e6,
+         f"cold_s={session_reuse['session_fit_cold_s']:.2f} "
+         f"warm_s={session_reuse['session_fit_warm_s']:.3f} "
+         f"reuse_speedup={session_reuse['session_reuse_speedup']:.1f}x "
+         f"cold_compiles={session_reuse['session_cold_compiles']}"
+         f"==buckets={session_reuse['session_n_buckets']} "
+         f"warm_compiles={session_reuse['session_warm_compiles']}")
     emit("estimator_combine", metrics["combine_all_schemes_s"] * 1e6,
          "vectorized combine, 4 schemes")
     for name, row in fam_rows.items():
@@ -194,6 +234,7 @@ def main() -> None:
                    "families_config": {"graph": "grid", "p": scale(36, 36),
                                        "n": scale(600, 600)}},
         "metrics": metrics,
+        "session_reuse": session_reuse,
         "families": fam_rows,
     })
 

@@ -1,13 +1,18 @@
-"""Quickstart: the paper in one page.
+"""Quickstart: the paper in one page, through the estimation-plan API.
 
-Estimate a star-graph Ising model from samples with every method in the
-paper and compare against exact asymptotic theory.
+Declare the whole problem once as a `Plan` (graph + family + combiners +
+solver options), compile it into an `EstimationSession`, and run every
+method in the paper through the session's three verbs — batch `fit`
+(local CL estimators + one-step consensus, Sec. 3.1), `joint` (ADMM joint
+MPLE, Sec. 3.2), and `stream()` (the any-time engine; see
+streaming_sensors.py) — then compare against exact asymptotic theory.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
+import repro.api as A
 import repro.core as C
 
 
@@ -21,23 +26,34 @@ def main():
     # 2. n samples, stored per-sensor: sensor i sees only X_{A(i)}
     X = C.exact_sample(model, n=3000, key=jax.random.PRNGKey(1))
 
-    # 3. each sensor fits its local conditional-likelihood estimator (Eq. 3)
-    fits = C.fit_all_local(g, X)
+    # 3. ONE declarative plan covers the whole design space: every
+    #    registered combiner requested up front; the compiled session
+    #    computes second-order objects only because "optimal" asks
+    plan = A.Plan(graph=g,
+                  family="ising",
+                  combiners=("uniform", "diagonal", "optimal", "max",
+                             "weighted_vote", "matrix"))
+    sess = plan.session()
 
-    # 4. one-step consensus combinations (Sec. 3.1)
-    print(f"{'method':18s} {'MSE':>9s}")
-    for scheme in ("uniform", "diagonal", "optimal", "max", "matrix"):
-        theta = C.combine(g, fits, scheme)
-        print(f"one-step {scheme:9s} {C.mse(theta, theta_star):9.5f}")
+    # 4. batch verb: local CL fits (Eq. 3) + all one-step consensus
+    #    combinations (Sec. 3.1) in one structured result
+    res = sess.fit(X)
+    print(f"{'method':22s} {'MSE':>9s}")
+    for scheme, theta in sorted(res.combined.items()):
+        print(f"one-step {scheme:13s} {C.mse(theta, theta_star):9.5f}")
+    print(f"(fit: n={res.n_samples}, |score|={res.score_norm:.4f}, "
+          f"wall={res.wall_s:.2f}s, new_compiles={res.new_compiles})")
 
     # 5. joint MPLE — centralized reference (Eq. 2)
     theta_mple = C.fit_mple(g, X)
-    print(f"{'joint MPLE':18s} {C.mse(theta_mple, theta_star):9.5f}")
+    print(f"{'joint MPLE':22s} {C.mse(theta_mple, theta_star):9.5f}")
 
-    # 6. ADMM: distributed joint MPLE with any-time iterates (Sec. 3.2)
-    res = C.admm_mple(g, X, n_iters=10, init="diagonal", fits=fits)
-    print(f"{'ADMM (10 iters)':18s} "
-          f"{C.mse(res.trajectory[-1], theta_star):9.5f}")
+    # 6. joint verb: distributed joint MPLE via ADMM with any-time
+    #    iterates (Sec. 3.2), sharing the session's compiled solvers
+    joint = sess.joint(X)
+    print(f"{'ADMM (' + str(plan.admm_iters) + ' iters)':22s} "
+          f"{joint.mse(theta_star):9.5f}   "
+          f"(comm: {joint.comm_scalars['admm']} scalars)")
 
     # 7. exact asymptotic efficiency vs the MLE floor (Sec. 4, Fig 2b)
     locs = C.exact_locals(model, include_singleton=False)
@@ -49,6 +65,12 @@ def main():
         print(f"  {scheme:9s} {tr / tr_mle:6.3f}")
     tr_j, _ = C.exact_joint_mple_variance(model, include_singleton=False)
     print(f"  {'joint':9s} {tr_j / tr_mle:6.3f}")
+
+    # 8. plans are values: serialize, reload, get the SAME cached session
+    plan2 = A.Plan.from_dict(plan.to_dict())
+    assert plan2 == plan and plan2.session() is sess
+    print("\nplan round-trips via to_dict/from_dict; equal plans share "
+          "one compiled session")
 
 
 if __name__ == "__main__":

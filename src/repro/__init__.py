@@ -1,10 +1,12 @@
 """repro: Distributed Parameter Estimation via Pseudo-likelihood
-(Liu & Ihler, ICML 2012) — faithful reproduction (repro.core) plus the
-technique lifted to TPU-pod scale (repro.train.consensus) over a 10-arch
-model zoo (repro.models / repro.configs), with Pallas TPU kernels
-(repro.kernels), a streaming any-time engine + event-driven sensor-network
-simulator (repro.stream), and a multi-pod dry-run + roofline harness
-(repro.launch).
+(Liu & Ihler, ICML 2012) — faithful reproduction (repro.core) behind a
+declarative estimation-plan API (repro.api: Plan -> compiled
+EstimationSession with fit/stream/joint verbs and a pluggable combiner
+registry), plus the technique lifted to TPU-pod scale
+(repro.train.consensus) over a 10-arch model zoo (repro.models /
+repro.configs), with Pallas TPU kernels (repro.kernels), a streaming
+any-time engine + event-driven sensor-network simulator (repro.stream),
+and a multi-pod dry-run + roofline harness (repro.launch).
 
 See README.md for entry points, DESIGN.md for the paper->TPU mapping, and
 EXPERIMENTS.md for the validation and performance record.

@@ -1,0 +1,33 @@
+"""The declarative estimation-plan API: one :class:`Plan` -> a compiled
+:class:`EstimationSession` with three verbs sharing one solver cache.
+
+This is the stable facade the serving / scale-out layers target. Declare
+the whole problem once —
+
+    import repro.api as A
+    plan = A.Plan(graph=g, family="ising",
+                  combiners=("diagonal", "max"), mesh=None)
+    sess = plan.session()              # cached per plan; compiles lazily
+
+    result = sess.fit(X)               # batch: local fits + combiners
+    est = sess.stream()                # plan-bound StreamingEstimator
+    joint = sess.joint(X)              # ADMM joint MPLE (Sec. 3.2)
+
+— and every verb returns a structured :class:`EstimateResult` (theta,
+per-scheme combined estimates, per-node fits, pseudo-score norm,
+wall/compile counters, communication scalars). Combination schemes are
+pluggable strategies from the combiner registry
+(:mod:`repro.core.combiners`); model families come from the family registry
+(:mod:`repro.core.families`); plans serialize via ``to_dict``/``from_dict``
+and hash-key the session cache.
+
+The legacy entry points (``repro.core.fit_all_local`` + ``combine``,
+``admm_mple``, direct ``StreamingEstimator``/``StreamSimulator``
+construction) remain as thin shims over a default plan.
+"""
+from .plan import MESH_POLICIES, Plan
+from .result import EstimateResult
+from .session import EstimationSession, compile_plan
+
+__all__ = ["Plan", "EstimationSession", "EstimateResult", "compile_plan",
+           "MESH_POLICIES"]

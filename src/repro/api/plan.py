@@ -1,0 +1,194 @@
+"""The declarative estimation plan.
+
+A :class:`Plan` is the *complete*, frozen, hashable description of one
+distributed-estimation problem: the graph, the model family, the requested
+combination schemes, solver options, precision, mesh policy, and the
+streaming/ADMM configuration. It is everything the kwarg soup of
+``fit_all_local`` / ``combine`` / ``admm_mple`` / ``StreamingEstimator`` /
+``StreamSimulator`` used to thread separately — declared once, up front.
+
+Because a plan is hashable it can key caches: compiling a plan yields an
+:class:`~repro.api.session.EstimationSession` (cached per plan, so two equal
+plans share one session and therefore one set of jitted bucket solvers),
+and a plan can ride along as a static jit argument. ``to_dict`` /
+``from_dict`` round-trip exactly, so plans serialize into configs, logs,
+and benchmark JSON.
+
+Families and combiners are referenced by *registry name* (the instances
+themselves stay in :mod:`repro.core.families` / :mod:`repro.core.combiners`)
+— that is what keeps a plan a plain value object and makes the
+serialization unambiguous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core.combiners import get_combiner
+from ..core.families import get_family
+from ..core.graphs import Graph
+
+#: mesh policies a plan may request; actual Mesh objects are resolved at
+#: session-compile time (they hold device handles and do not serialize)
+MESH_POLICIES = (None, "host", "data")
+
+_PRECISIONS = ("float32", "float64")
+_ADMM_INITS = ("zero", "uniform", "diagonal")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Declarative description of one estimation problem.
+
+    Parameters
+    ----------
+    graph : the conditional-independence graph == the sensor network.
+    family : registry name of the model family ("ising", "gaussian",
+        "potts", ...). Resolved through ``repro.core.families.get_family``.
+    combiners : registry names of the one-step combination schemes the
+        session should produce, in priority order — the first one is the
+        headline ``EstimateResult.theta``. Resolved through
+        ``repro.core.combiners.get_combiner``; the session only computes
+        second-order objects (influence stacks, cross-covariances) when
+        some listed combiner declares it needs them.
+    include_singleton : estimate singleton blocks (False fixes them at
+        ``theta_fixed`` — the paper's known-singleton small experiments).
+    theta_fixed : fixed coordinates as a plain tuple of floats (hashable);
+        None means zeros.
+    n_iter : damped-Newton budget per local solve.
+    mesh : mesh policy — None (single program), "host" (the degenerate
+        1x1 host mesh; numerically identical, exercises the shard_map
+        path), or "data" (shard bucket nodes over all visible devices
+        along a ``data`` axis).
+    precision : dtype the sample matrix is cast to before solves.
+        "float64" requires jax x64 to be enabled (``JAX_ENABLE_X64=1``);
+        a session verb fed samples without it raises rather than silently
+        truncating to float32. Applies to the batch/joint verbs — the
+        streaming buffer is float32 by design (see
+        :class:`~repro.stream.buffer.SampleBuffer`).
+    capacity : initial sample-buffer capacity for ``session.stream()``.
+    admm_iters / admm_init / admm_newton_iters / admm_rho : the
+        ``session.joint`` ADMM configuration (Sec. 3.2; ``admm_init`` of
+        "uniform"/"diagonal" starts from that one-step consensus,
+        ``admm_rho`` scales the "zero"-init unit penalties).
+    """
+
+    graph: Graph
+    family: str = "ising"
+    combiners: Tuple[str, ...] = ("diagonal",)
+    include_singleton: bool = True
+    theta_fixed: Optional[Tuple[float, ...]] = None
+    n_iter: int = 40
+    mesh: Optional[str] = None
+    precision: str = "float32"
+    capacity: int = 64
+    admm_iters: int = 30
+    admm_init: str = "diagonal"
+    admm_newton_iters: int = 15
+    admm_rho: float = 1.0
+
+    def __post_init__(self):
+        if not isinstance(self.graph, Graph):
+            raise TypeError(f"plan.graph must be a Graph, got "
+                            f"{type(self.graph).__name__}")
+        get_family(self.family)                      # raises listing names
+        if isinstance(self.combiners, str):
+            object.__setattr__(self, "combiners", (self.combiners,))
+        else:
+            object.__setattr__(self, "combiners", tuple(self.combiners))
+        if not self.combiners:
+            raise ValueError("plan needs at least one combiner")
+        for name in self.combiners:
+            get_combiner(name)                       # raises listing names
+        if self.theta_fixed is not None:
+            tf = tuple(float(v) for v in self.theta_fixed)
+            expect = get_family(self.family).n_params(self.graph)
+            if len(tf) != expect:
+                raise ValueError(
+                    f"theta_fixed has {len(tf)} entries; family "
+                    f"{self.family!r} on this graph has {expect} params")
+            object.__setattr__(self, "theta_fixed", tf)
+        if self.mesh not in MESH_POLICIES:
+            raise ValueError(f"unknown mesh policy {self.mesh!r}; "
+                             f"choose from {MESH_POLICIES}")
+        if self.precision not in _PRECISIONS:
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"choose from {_PRECISIONS}")
+        if self.admm_init not in _ADMM_INITS:
+            raise ValueError(f"unknown admm_init {self.admm_init!r}; "
+                             f"choose from {_ADMM_INITS}")
+        if self.n_iter < 1 or self.admm_iters < 1 \
+                or self.admm_newton_iters < 1:
+            raise ValueError("iteration budgets must be >= 1")
+        if self.capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if not (self.admm_rho > 0.0 and np.isfinite(self.admm_rho)):
+            raise ValueError(
+                f"admm_rho must be a finite positive penalty, got "
+                f"{self.admm_rho!r} (zero rhos make the weighted consensus "
+                f"average 0/0)")
+
+    # -------------------------------------------------------- conveniences
+    @property
+    def family_instance(self):
+        """The registered :class:`ModelFamily` this plan names."""
+        return get_family(self.family)
+
+    @property
+    def combiner_instances(self):
+        """The registered :class:`Combiner` strategies, in plan order."""
+        return tuple(get_combiner(n) for n in self.combiners)
+
+    def replace(self, **changes) -> "Plan":
+        """A new plan with ``changes`` applied (frozen-dataclass replace)."""
+        return dataclasses.replace(self, **changes)
+
+    def session(self, mesh=None):
+        """Compile (or fetch the cached) :class:`EstimationSession`."""
+        from .session import EstimationSession
+        return EstimationSession.for_plan(self, mesh=mesh)
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """Plain-JSON representation; exact inverse of :meth:`from_dict`."""
+        return {
+            "graph": {"p": self.graph.p,
+                      "edges": [list(e) for e in self.graph.edges]},
+            "family": self.family,
+            "combiners": list(self.combiners),
+            "include_singleton": self.include_singleton,
+            "theta_fixed": (None if self.theta_fixed is None
+                            else list(self.theta_fixed)),
+            "n_iter": self.n_iter,
+            "mesh": self.mesh,
+            "precision": self.precision,
+            "capacity": self.capacity,
+            "admm_iters": self.admm_iters,
+            "admm_init": self.admm_init,
+            "admm_newton_iters": self.admm_newton_iters,
+            "admm_rho": self.admm_rho,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        g = d["graph"]
+        graph = Graph(int(g["p"]),
+                      tuple((int(a), int(b)) for a, b in g["edges"]))
+        tf = d.get("theta_fixed")
+        return cls(
+            graph=graph,
+            family=d.get("family", "ising"),
+            combiners=tuple(d.get("combiners", ("diagonal",))),
+            include_singleton=bool(d.get("include_singleton", True)),
+            theta_fixed=None if tf is None else tuple(float(v) for v in tf),
+            n_iter=int(d.get("n_iter", 40)),
+            mesh=d.get("mesh"),
+            precision=d.get("precision", "float32"),
+            capacity=int(d.get("capacity", 64)),
+            admm_iters=int(d.get("admm_iters", 30)),
+            admm_init=d.get("admm_init", "diagonal"),
+            admm_newton_iters=int(d.get("admm_newton_iters", 15)),
+            admm_rho=float(d.get("admm_rho", 1.0)),
+        )

@@ -1,0 +1,74 @@
+"""Structured results of the estimation-plan API.
+
+Every session verb returns an :class:`EstimateResult` — one typed record
+carrying the headline estimate, the per-scheme combined estimates, the
+per-node local fits, the pseudo-score convergence diagnostic, wall/compile
+counters, and the communication-cost scalars the paper's claims are about —
+replacing the heterogeneous ``List[LocalFit]`` / bare-ndarray returns of
+the legacy entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.consensus import mse as _mse
+from ..core.estimators import LocalFit
+
+
+@dataclasses.dataclass
+class EstimateResult:
+    """One estimation outcome, fully accounted.
+
+    mode            — "fit" (local fits + one-step consensus) or "joint"
+                      (ADMM joint MPLE).
+    theta           — the headline flat estimate: the plan's first
+                      combiner for ``fit``, the final ADMM iterate for
+                      ``joint``.
+    combined        — per-scheme combined estimates (every combiner the
+                      plan requested), name -> flat theta.
+    fits            — per-node :class:`LocalFit` results (None when the
+                      verb never produced them, e.g. zero-init ADMM).
+    n_samples       — rows of the sample matrix the verb consumed.
+    score_norm      — ||grad pseudo-loglik(theta)|| over those samples;
+                      the model-free convergence diagnostic.
+    wall_s          — wall-clock of the verb, compile time included.
+    new_compiles    — bucket-solver compilations this call triggered
+                      (0 on a warm session; -1 if the jit-cache probe is
+                      unavailable).
+    comm_scalars    — scalars a sensor network would transmit to realize
+                      each requested scheme (the shared accounting of
+                      ``repro.stream.costs``), name -> count; ``joint``
+                      reports the K-round ADMM exchange as "admm".
+    trajectory      — (admm_iters + 1, n_params) consensus iterates
+                      (``joint`` only).
+    primal_residual — (admm_iters,) rms primal residuals (``joint`` only).
+    """
+
+    mode: str
+    theta: np.ndarray
+    combined: Dict[str, np.ndarray]
+    fits: Optional[List[LocalFit]]
+    n_samples: int
+    score_norm: float
+    wall_s: float
+    new_compiles: int
+    comm_scalars: Dict[str, int]
+    trajectory: Optional[np.ndarray] = None
+    primal_residual: Optional[np.ndarray] = None
+
+    def mse(self, theta_star: np.ndarray, free=None) -> float:
+        """||theta - theta*||^2 over ``free`` (default: all) coordinates."""
+        return _mse(self.theta, np.asarray(theta_star), free)
+
+    def __repr__(self) -> str:       # compact, log-friendly
+        extras = ""
+        if self.trajectory is not None:
+            extras = f", admm_iters={len(self.trajectory) - 1}"
+        return (f"EstimateResult(mode={self.mode!r}, "
+                f"schemes={sorted(self.combined)}, n={self.n_samples}, "
+                f"score_norm={self.score_norm:.3e}, "
+                f"wall_s={self.wall_s:.3f}, "
+                f"new_compiles={self.new_compiles}{extras})")

@@ -1,0 +1,280 @@
+"""Compiled estimation sessions: one :class:`Plan` -> three verbs.
+
+An :class:`EstimationSession` is a plan *compiled*: the graph's degree
+buckets, owner structure, per-node block layouts, and fixed-coordinate
+vectors are derived once; the jitted degree-bucket Newton solvers are
+keyed by the plan's static configuration (family, singleton policy, Newton
+budget, mesh, influence demand), so every verb — and every subsequent call
+of the same verb — reuses the same compiled programs. Sessions themselves
+are cached per plan (``EstimationSession.for_plan`` / ``plan.session()``):
+two equal plans share one session and therefore one solver cache.
+
+The three verbs share that cache:
+
+* ``session.fit(X)``     — batch: per-node local CL fits + every requested
+                           one-step combiner;
+* ``session.stream()``   — a :class:`StreamingEstimator` bound to the plan
+                           (same family, mesh, buffer, Newton budget — its
+                           incremental re-fits hit the same solvers);
+* ``session.joint(X)``   — ADMM joint MPLE through the batched proximal
+                           engine.
+
+Each returns (or feeds) a structured :class:`~repro.api.result.
+EstimateResult` with wall/compile counters and communication-cost scalars.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.admm import admm_mple_family
+from ..core.asymptotics import free_indices, param_owners
+from ..core.batched import (bucket_compile_count, degree_buckets,
+                            fit_all_local_batched)
+from ..core.estimators import LocalFit
+from ..core.graphs import Graph
+from .plan import Plan
+from .result import EstimateResult
+
+#: session cache — equal plans (and mesh override) share one compiled
+#: session; bounded FIFO so long-lived processes cannot leak sessions
+_SESSIONS: Dict[Tuple[Plan, object], "EstimationSession"] = {}
+_SESSION_CACHE_MAX = 64
+
+
+def _resolve_mesh(policy: Optional[str]):
+    """Materialize a plan's mesh policy into a jax Mesh (or None)."""
+    if policy is None:
+        return None
+    if policy == "host":
+        from ..launch.mesh import make_host_mesh
+        return make_host_mesh()
+    if policy == "data":
+        return jax.make_mesh((len(jax.devices()),), ("data",))
+    raise ValueError(f"unknown mesh policy {policy!r}")
+
+
+class EstimationSession:
+    """A compiled :class:`Plan`; see the module docstring.
+
+    Construct through :meth:`for_plan` (or ``plan.session()``) to share
+    sessions between equal plans. ``mesh`` overrides the plan's mesh
+    *policy* with a concrete ``jax.sharding.Mesh`` (used by the legacy
+    shims, which receive mesh objects directly).
+    """
+
+    def __init__(self, plan: Plan, mesh=None) -> None:
+        self.plan = plan
+        self.graph: Graph = plan.graph
+        self.family = plan.family_instance
+        self.combiners = plan.combiner_instances
+        self.mesh = mesh if mesh is not None else _resolve_mesh(plan.mesh)
+        self.dtype = jnp.dtype(plan.precision)
+
+        # ---- compile-once plan derivations --------------------------------
+        self.buckets = degree_buckets(plan.graph)
+        self.owners = param_owners(plan.graph, plan.include_singleton,
+                                   self.family)
+        self.free = np.asarray(free_indices(plan.graph,
+                                            plan.include_singleton,
+                                            self.family))
+        self.betas = [self.family.beta(plan.graph, i, plan.include_singleton)
+                      for i in range(plan.graph.p)]
+        n_params = self.family.n_params(plan.graph)
+        self.theta_fixed = (np.zeros(n_params, dtype=np.float64)
+                            if plan.theta_fixed is None
+                            else np.asarray(plan.theta_fixed,
+                                            dtype=np.float64))
+        #: union of the requested combiners' second-order demands
+        self.needs = frozenset().union(*(c.needs for c in self.combiners))
+        self.want_influence = "influence" in self.needs
+        #: owner slots of shared (multi-owner) parameters — the unit the
+        #: communication accounting bills per scheme
+        self.shared_owner_slots = sum(
+            len(own) for own in self.owners.values() if len(own) > 1)
+        self.fit_calls = 0
+
+    # ----------------------------------------------------------- caching
+    @classmethod
+    def for_plan(cls, plan: Plan, mesh=None) -> "EstimationSession":
+        """The cached session for ``plan`` (creating it on first use).
+
+        Equal plans hash to the same key, so they share one session — and
+        with it the derived bucket/owner structures and the jitted solver
+        cache entries its verbs have already populated.
+        """
+        key = (plan, mesh)
+        sess = _SESSIONS.get(key)
+        if sess is None:
+            if len(_SESSIONS) >= _SESSION_CACHE_MAX:
+                _SESSIONS.pop(next(iter(_SESSIONS)))
+            sess = cls(plan, mesh=mesh)
+            _SESSIONS[key] = sess
+        return sess
+
+    @property
+    def n_buckets(self) -> int:
+        """Degree buckets == compiled solver programs per fit variant."""
+        return len(self.buckets)
+
+    # ------------------------------------------------------------ helpers
+    def _as_samples(self, X) -> jnp.ndarray:
+        Xj = jnp.asarray(X, dtype=self.dtype)
+        if Xj.dtype != self.dtype:
+            # jax silently truncates float64 to float32 when x64 is off —
+            # a plan that declares a precision must get it or fail loudly
+            raise ValueError(
+                f"plan declares precision={self.plan.precision!r} but jax "
+                f"produced {Xj.dtype} (enable x64 via JAX_ENABLE_X64=1 or "
+                f"jax.config.update('jax_enable_x64', True) to honor "
+                f"float64 plans)")
+        return Xj
+
+    def _tf(self, dtype) -> jnp.ndarray:
+        return jnp.asarray(self.theta_fixed, dtype=dtype)
+
+    def _score_norm(self, theta: np.ndarray, X, n: int) -> float:
+        from ..stream.online import pseudo_score
+        g = pseudo_score(self.graph, theta, X, n, family=self.family)
+        return float(np.linalg.norm(g))
+
+    def _one_step_comm(self, n: int) -> Dict[str, int]:
+        """Scalars a network transmits per requested scheme — the
+        family-block generalization of :mod:`repro.stream.costs`, with the
+        per-param message size read from the combiner registry (the single
+        source ``Combiner.scalars_per_shared_param``): every owner of every
+        shared param ships its estimate (+ weight when the scheme uses
+        one); Linear-Opt additionally ships its n influence samples per
+        shared slot."""
+        out: Dict[str, int] = {}
+        for c in self.combiners:
+            if c.scalars_per_shared_param is None:
+                continue          # not distributable as one message round
+            cost = c.scalars_per_shared_param * self.shared_owner_slots
+            if "influence" in c.needs:
+                cost += n * self.shared_owner_slots
+            out[c.name] = cost
+        return out
+
+    def fit_local(self, X, sample_weight=None, warm_start=None,
+                  want_influence: Optional[bool] = None,
+                  theta_fixed=None) -> List[LocalFit]:
+        """Per-node local CL fits under this plan (the raw engine call the
+        legacy ``fit_all_local`` shim routes through).
+
+        ``theta_fixed`` overrides the plan's fixed coordinates for this
+        call only — the shim passes per-call arrays here so a caller
+        varying them does not mint a new plan (and session cache entry)
+        per value.
+        """
+        Xj = self._as_samples(X)
+        tf = (self._tf(Xj.dtype) if theta_fixed is None
+              else jnp.asarray(theta_fixed, Xj.dtype))
+        return fit_all_local_batched(
+            self.graph, Xj,
+            include_singleton=self.plan.include_singleton,
+            theta_fixed=tf, n_iter=self.plan.n_iter,
+            sample_weight=sample_weight, warm_start=warm_start,
+            family=self.family, mesh=self.mesh,
+            want_influence=(self.want_influence if want_influence is None
+                            else want_influence))
+
+    # -------------------------------------------------------------- verbs
+    def fit(self, X, sample_weight=None, warm_start=None) -> EstimateResult:
+        """Batch verb: local fits + every requested combiner.
+
+        A warm session re-fit on fresh same-shape data triggers zero new
+        solver compilations (the bench's ``session_reuse`` row and
+        ``tests/api`` assert this).
+        """
+        t0 = time.perf_counter()
+        c0 = bucket_compile_count()
+        Xj = self._as_samples(X)
+        n = int(Xj.shape[0])
+        fits = self.fit_local(Xj, sample_weight=sample_weight,
+                              warm_start=warm_start)
+        combined = {
+            c.name: c.combine(self.graph, fits,
+                              include_singleton=self.plan.include_singleton,
+                              theta_fixed=self.theta_fixed,
+                              family=self.family)
+            for c in self.combiners}
+        theta = combined[self.plan.combiners[0]]
+        score = self._score_norm(theta, Xj, n)
+        c1 = bucket_compile_count()
+        self.fit_calls += 1
+        return EstimateResult(
+            mode="fit", theta=theta, combined=combined, fits=fits,
+            n_samples=n, score_norm=score,
+            wall_s=time.perf_counter() - t0,
+            new_compiles=(c1 - c0 if c0 >= 0 and c1 >= 0 else -1),
+            comm_scalars=self._one_step_comm(n))
+
+    def stream(self, capacity: Optional[int] = None):
+        """Streaming verb: a :class:`~repro.stream.online.StreamingEstimator`
+        bound to this plan — same family, mesh, fixed coordinates, and
+        Newton budget, so its warm-started incremental re-fits hit the very
+        bucket solvers ``fit`` compiled (and vice versa)."""
+        from ..stream.online import StreamingEstimator
+        return StreamingEstimator(
+            self.graph, include_singleton=self.plan.include_singleton,
+            theta_fixed=self.theta_fixed,
+            capacity=capacity or self.plan.capacity,
+            n_iter=self.plan.n_iter, family=self.family, mesh=self.mesh,
+            want_influence=self.want_influence)
+
+    def simulate(self, pool, **overrides):
+        """An event-driven :class:`~repro.stream.simulator.StreamSimulator`
+        configured from this plan (see ``StreamSimulator.from_plan``);
+        ``overrides`` win, including an explicit ``mesh=``."""
+        from ..stream.simulator import StreamSimulator
+        overrides.setdefault("mesh", self.mesh)
+        return StreamSimulator.from_plan(self.plan, pool, **overrides)
+
+    def joint(self, X, sample_weight=None) -> EstimateResult:
+        """Joint verb: ADMM MPLE (Sec. 3.2) through the batched proximal
+        engine — one compiled solve per degree bucket per round, shared
+        with ``fit``'s solver cache through the common engine."""
+        t0 = time.perf_counter()
+        c0 = bucket_compile_count()
+        Xj = self._as_samples(X)
+        n = int(Xj.shape[0])
+        plan = self.plan
+        fits = None
+        if plan.admm_init != "zero":
+            fits = self.fit_local(Xj, sample_weight=sample_weight,
+                                  want_influence=False)
+        res = admm_mple_family(
+            self.graph, Xj, n_iters=plan.admm_iters, init=plan.admm_init,
+            fits=fits, include_singleton=plan.include_singleton,
+            theta_fixed=self.theta_fixed,
+            newton_iters=plan.admm_newton_iters, family=self.family,
+            mesh=self.mesh, sample_weight=sample_weight,
+            rho0=plan.admm_rho)
+        theta = res.trajectory[-1]
+        score = self._score_norm(theta, Xj, n)
+        c1 = bucket_compile_count()
+        comm = plan.admm_iters * 2 * sum(len(b) for b in self.betas)
+        return EstimateResult(
+            mode="joint", theta=theta, combined={"admm": theta}, fits=fits,
+            n_samples=n, score_norm=score,
+            wall_s=time.perf_counter() - t0,
+            new_compiles=(c1 - c0 if c0 >= 0 and c1 >= 0 else -1),
+            comm_scalars={"admm": comm},
+            trajectory=res.trajectory, primal_residual=res.primal_residual)
+
+    def __repr__(self) -> str:
+        return (f"EstimationSession(family={self.plan.family!r}, "
+                f"p={self.graph.p}, m={self.graph.m}, "
+                f"buckets={self.n_buckets}, "
+                f"combiners={list(self.plan.combiners)}, "
+                f"mesh={self.plan.mesh!r}, fit_calls={self.fit_calls})")
+
+
+def compile_plan(plan: Plan, mesh=None) -> EstimationSession:
+    """Functional alias for ``EstimationSession.for_plan`` (cached)."""
+    return EstimationSession.for_plan(plan, mesh=mesh)

@@ -20,10 +20,14 @@ from .estimators import (LocalFit, newton_maximize, fit_local_cl,
                          fit_all_local, fit_all_local_loop, fit_mple,
                          fit_mle_exact, node_design)
 from .batched import (DegreeBucket, degree_buckets, fit_all_local_batched,
-                      prox_update_batched, bucket_compile_count)
+                      prox_update_batched, bucket_compile_count,
+                      clear_bucket_solver_caches)
 from .asymptotics import (ExactLocal, exact_local, exact_locals, param_owners,
                           free_indices, exact_consensus_variance,
                           exact_joint_mple_variance, exact_mle_variance,
                           efficiency, cross_cov)
+from .combiners import (Combiner, register_combiner, get_combiner,
+                        registered_combiners, streamable_combiners,
+                        TRUST_RADIUS)
 from .consensus import combine, mse, empirical_cross_cov, SCHEMES
-from .admm import admm_mple, ADMMResult
+from .admm import admm_mple, admm_mple_family, rho_from_fits, ADMMResult

@@ -8,6 +8,7 @@ Only usable for small p (2^p states); the paper's small-model experiments
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -75,7 +76,18 @@ def param_owners(graph: Graph, include_singleton: bool = True,
     of a node block is owned by its node, every scalar of an edge block by
     both endpoints, and positions follow ``family.beta`` block order. The
     default (``family=None``) is the seed's scalar Ising layout.
+
+    Cached per (graph, include_singleton, family) — graphs and family
+    instances are frozen/hashable, and every combine call, ADMM round, and
+    compiled estimation session walks the same owner structure; treat the
+    returned dict as read-only.
     """
+    return _param_owners_cached(graph, include_singleton, family)
+
+
+@functools.lru_cache(maxsize=128)
+def _param_owners_cached(graph: Graph, include_singleton: bool,
+                         family) -> Dict[int, List[Tuple[int, int]]]:
     owners: Dict[int, List[Tuple[int, int]]] = {}
     for i in range(graph.p):
         beta = (graph.beta(i, include_singleton) if family is None

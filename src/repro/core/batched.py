@@ -308,7 +308,8 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
                        include_singleton: bool, n_iter: int,
                        weighted: bool = False, guarded: bool = False,
                        family=ISING, tol: float = 2e-6,
-                       ridge: float = 1e-8, max_step: float = 5.0):
+                       ridge: float = 1e-8, max_step: float = 5.0,
+                       want_influence: bool = True):
     """Solve every node of one degree bucket in a single XLA program.
 
     X: (n, p) samples; nodes: (k,); nbrs: (k, deg_pad); mask: (k, deg_pad);
@@ -407,21 +408,28 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
     Hreg = H + 1e-9 * eye[None, :, :] + pad_diag
     Hinv = _gauss_jordan_solve(Hreg, jnp.broadcast_to(eye, Hreg.shape))
     V = Hinv @ J @ jnp.swapaxes(Hinv, 1, 2)
-    S = jnp.swapaxes(G, 1, 2) @ jnp.swapaxes(Hinv, 1, 2)     # (k, n, dC)
+    if want_influence:
+        S = jnp.swapaxes(G, 1, 2) @ jnp.swapaxes(Hinv, 1, 2)  # (k, n, dC)
+    else:
+        # only the Linear-Opt combiner reads the (k, n, dC) per-sample
+        # influence stack; a session whose combiners never request
+        # "influence" skips materializing it (static branch)
+        S = jnp.zeros((k, 0, dC), Zb.dtype)
     return W, H, J, V, S
 
 
 @functools.partial(jax.jit,
                    static_argnames=("include_singleton", "n_iter", "weighted",
-                                    "guarded", "family"))
+                                    "guarded", "family", "want_influence"))
 def _solve_bucket(X, nodes, nbrs, mask, offsets, W0, sw,
                   include_singleton: bool, n_iter: int, weighted: bool = False,
                   guarded: bool = False, family=ISING, tol: float = 2e-6,
-                  ridge: float = 1e-8, max_step: float = 5.0):
+                  ridge: float = 1e-8, max_step: float = 5.0,
+                  want_influence: bool = True):
     """Single-device bucket solve (jitted :func:`_solve_bucket_impl`)."""
     return _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
                               include_singleton, n_iter, weighted, guarded,
-                              family, tol, ridge, max_step)
+                              family, tol, ridge, max_step, want_influence)
 
 
 def _mesh_data_size(mesh) -> int:
@@ -435,11 +443,13 @@ def _mesh_data_size(mesh) -> int:
 
 @functools.partial(jax.jit,
                    static_argnames=("include_singleton", "n_iter", "weighted",
-                                    "guarded", "family", "mesh"))
+                                    "guarded", "family", "mesh",
+                                    "want_influence"))
 def _solve_bucket_sharded(X, nodes, nbrs, mask, offsets, W0, sw,
                           include_singleton: bool, n_iter: int,
                           weighted: bool = False, guarded: bool = False,
-                          family=ISING, mesh=None):
+                          family=ISING, mesh=None,
+                          want_influence: bool = True):
     """Mesh-sharded bucket solve: nodes split along the ``data`` axis.
 
     The bucket's k per-node problems are embarrassingly parallel, so each
@@ -453,7 +463,8 @@ def _solve_bucket_sharded(X, nodes, nbrs, mask, offsets, W0, sw,
     """
     body = functools.partial(
         _solve_bucket_impl, include_singleton=include_singleton,
-        n_iter=n_iter, weighted=weighted, guarded=guarded, family=family)
+        n_iter=n_iter, weighted=weighted, guarded=guarded, family=family,
+        want_influence=want_influence)
     data = P("data")
     return shard_map(
         body, mesh=mesh,
@@ -481,15 +492,32 @@ def _pad_bucket_rows(shards: int, *arrays):
 
 
 def bucket_compile_count() -> int:
-    """Bucket-solver compilations since the last ``clear_cache()``.
+    """Bucket-solver compilations since the last ``clear_cache()``, summed
+    over the plain AND mesh-sharded fit solvers — so compile-reuse
+    invariants (cold == #buckets, warm == 0) hold for mesh-policy sessions
+    too, not just the single-program path.
 
     Counts across every graph / family / ``include_singleton`` variant
     solved so far, so callers asserting "compiles == #buckets" should clear
-    the cache first. Returns -1 if the (private) jit cache probe disappears
-    in a future JAX.
+    the caches first. Returns -1 if the (private) jit cache probe
+    disappears in a future JAX.
     """
-    probe = getattr(_solve_bucket, "_cache_size", None)
-    return int(probe()) if callable(probe) else -1
+    total = 0
+    for fn in (_solve_bucket, _solve_bucket_sharded):
+        probe = getattr(fn, "_cache_size", None)
+        if not callable(probe):
+            return -1
+        total += int(probe())
+    return total
+
+
+def clear_bucket_solver_caches() -> None:
+    """Reset both fit-solver compile caches (plain + mesh-sharded) so
+    :func:`bucket_compile_count` restarts from zero — what tests and
+    benches asserting the absolute "compiles == #buckets" invariant call
+    first."""
+    _solve_bucket.clear_cache()
+    _solve_bucket_sharded.clear_cache()
 
 
 def _bucket_weights(sample_weight, nodes: np.ndarray, n: int):
@@ -524,7 +552,8 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
                           n_iter: int = 40,
                           sample_weight: Optional[jnp.ndarray] = None,
                           warm_start: Optional[Sequence] = None,
-                          family=None, mesh=None) -> List[LocalFit]:
+                          family=None, mesh=None,
+                          want_influence: bool = True) -> List[LocalFit]:
     """Fit all p local CL estimators via degree-bucketed batched solves.
 
     Drop-in replacement for the per-node loop: returns the same
@@ -549,6 +578,11 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
     axis, sample pool replicated. On a one-device mesh the sharded path is
     numerically identical to the default path; ``mesh=None`` keeps the
     plain single-program solve.
+
+    ``want_influence=False`` skips materializing the (n, d) per-sample
+    influence stacks (``LocalFit.s`` comes back with zero rows) — only the
+    Linear-Opt combiner reads them, and a compiled estimation session whose
+    requested combiners never declare ``"influence"`` opts out.
     """
     if family is None:
         family = ISING
@@ -574,7 +608,8 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
             W, H, J, V, S = _solve_bucket(
                 X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
                 jnp.asarray(b.mask), offsets, W0, sw, include_singleton,
-                n_iter, weighted, warm_start is not None, family)
+                n_iter, weighted, warm_start is not None, family,
+                want_influence=want_influence)
         else:
             shards = _mesh_data_size(mesh)
             nodes_, nbrs_, mask_, offsets_, W0_ = _pad_bucket_rows(
@@ -584,7 +619,8 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
             W, H, J, V, S = _solve_bucket_sharded(
                 X, nodes_, nbrs_, mask_, offsets_, W0_, sw_,
                 include_singleton, n_iter, weighted,
-                warm_start is not None, family, mesh)
+                warm_start is not None, family, mesh,
+                want_influence=want_influence)
         W, H, J, V, S = (np.asarray(W)[:k], np.asarray(H)[:k],
                          np.asarray(J)[:k], np.asarray(V)[:k],
                          np.asarray(S)[:k])

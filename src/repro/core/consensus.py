@@ -1,31 +1,34 @@
 """One-step consensus combiners (paper Sec. 3.1, Eq. 4-5, 7).
 
-Operate on the per-node :class:`LocalFit` results; every scheme returns a
-full flat theta (fixed coordinates taken from ``theta_fixed``).
+``combine(graph, fits, scheme)`` is the legacy facade kept for the seed
+API; schemes now live as pluggable strategy objects in the combiner
+registry (:mod:`repro.core.combiners` — ``register_combiner`` /
+``get_combiner`` / ``registered_combiners``), which is what the
+estimation-plan API (:mod:`repro.api`), the streaming simulator, and the
+conformance harness dispatch through. An unknown scheme name raises a
+``ValueError`` listing the registered combiners.
 
-Schemes:
-  uniform   — Linear-Uniform, w = 1
-  diagonal  — Linear-Diagonal, w^i_a = 1 / Vhat^i_aa           (Prop 4.7)
-  optimal   — Linear-Opt,     w_a = Vhat_a^{-1} e              (Prop 4.6)
-  max       — Max-Diagonal,   pick argmax 1 / Vhat^i_aa        (Prop 4.4)
-  matrix    — matrix consensus with W^i = Hhat^i (Eq. 7)       (Cor 4.2)
+Schemes (see :mod:`repro.core.combiners` for the strategy objects):
+  uniform        — Linear-Uniform, w = 1
+  diagonal       — Linear-Diagonal, w^i_a = 1 / Vhat^i_aa        (Prop 4.7)
+  optimal        — Linear-Opt,     w_a = Vhat_a^{-1} e           (Prop 4.6)
+  max            — Max-Diagonal,   pick argmax 1 / Vhat^i_aa     (Prop 4.4)
+  weighted_vote  — variance-weighted voting (weighted median)    (2014)
+  matrix         — matrix consensus with W^i = Hhat^i (Eq. 7)    (Cor 4.2)
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .asymptotics import param_owners, free_indices
+from .combiners import TRUST_RADIUS, get_combiner  # noqa: F401  (shared)
 from .estimators import LocalFit
 from .graphs import Graph
 
+#: the seed's scheme tuple, kept name-stable; the full live axis is
+#: ``repro.core.combiners.registered_combiners()``
 SCHEMES = ("uniform", "diagonal", "optimal", "max", "matrix")
-
-#: estimates beyond this magnitude mark a diverged local fit
-#: (quasi-separation); shared with repro.stream's warm-start reset and
-#: message guards so streaming disqualifies owners exactly when combine does
-TRUST_RADIUS = 25.0
 
 
 def empirical_cross_cov(fits: List[LocalFit],
@@ -36,132 +39,21 @@ def empirical_cross_cov(fits: List[LocalFit],
     return cols.T @ cols / n
 
 
-def _owner_groups(owners: Dict[int, List[Tuple[int, int]]]):
-    """Group params by owner count k -> (param_idx (P,), node (P,k), pos (P,k)).
-
-    Owner counts are tiny (1 for singletons, 2 for edges), so grouping by k
-    turns the per-parameter Python loop into a handful of batched array ops.
-    """
-    by_k: Dict[int, List[Tuple[int, List[Tuple[int, int]]]]] = {}
-    for a, own in owners.items():
-        by_k.setdefault(len(own), []).append((a, own))
-    out = {}
-    for k, items in by_k.items():
-        aidx = np.array([a for a, _ in items], dtype=np.int64)
-        node = np.array([[i for (i, _) in own] for _, own in items],
-                        dtype=np.int64)
-        pos = np.array([[p_ for (_, p_) in own] for _, own in items],
-                       dtype=np.int64)
-        out[k] = (aidx, node, pos)
-    return out
-
-
 def combine(graph: Graph, fits: List[LocalFit], scheme: str,
             include_singleton: bool = True,
             theta_fixed: Optional[np.ndarray] = None,
             family=None) -> np.ndarray:
     """One-step consensus estimate; returns the full flat theta vector.
 
-    Vectorized over the owner structure: parameters are grouped by owner
-    count and every group's weights/averages are computed with batched
-    float64 array ops (no per-parameter Python loop). Single-owner
-    parameters — the singleton blocks — pass the local estimate through
-    exactly. With a ``family``, ownership runs over the family's parameter
-    *blocks* (every scalar of an edge block shares the block's two owners,
-    at ``family.beta`` block positions); the default is the scalar Ising
-    layout.
+    Thin shim over the combiner registry: resolves ``scheme`` by name
+    (raising ``ValueError`` with the registered names on an unknown one)
+    and runs the strategy's vectorized grouped driver — numerics are
+    unchanged from the historical inline implementation (the 1e-10 golden
+    fixtures pin this). See :class:`repro.core.combiners.Combiner`.
     """
-    n_params = graph.n_params if family is None else family.n_params(graph)
-    if theta_fixed is None:
-        theta_fixed = np.zeros(n_params, dtype=np.float64)
-    theta = np.array(theta_fixed, dtype=np.float64, copy=True)
-
-    if scheme == "matrix":
-        return _matrix_consensus(graph, fits, include_singleton, theta,
-                                 family)
-    if scheme not in SCHEMES:
-        raise ValueError(f"unknown scheme {scheme!r}")
-
-    # pad per-node results into dense (p, dmax) float64 stacks
-    dmax = max(len(f.theta) for f in fits)
-    theta_mat = np.zeros((graph.p, dmax), dtype=np.float64)
-    vdiag_mat = np.ones((graph.p, dmax), dtype=np.float64)
-    for f in fits:
-        d = len(f.theta)
-        theta_mat[f.i, :d] = f.theta
-        vdiag_mat[f.i, :d] = np.diag(f.V)
-    s_pad = None
-    if scheme == "optimal":
-        n = fits[0].s.shape[0]
-        s_pad = np.zeros((graph.p, n, dmax), dtype=np.float64)
-        for f in fits:
-            s_pad[f.i, :, :len(f.theta)] = f.s
-
-    owners = param_owners(graph, include_singleton, family)
-    for k, (aidx, node, pos) in _owner_groups(owners).items():
-        est = theta_mat[node, pos]                          # (P, k)
-        diag = np.maximum(vdiag_mat[node, pos], 1e-12)
-        # Robustness guard: a saturated/diverged local fit (quasi-separation,
-        # e.g. high-degree hubs at small n) yields non-finite estimates or a
-        # deceptively tiny Vhat. Treat such owners as infinite-variance so
-        # every weighting scheme zeroes them out; keep uniform truly uniform
-        # only over sane owners.
-        bad = (~np.isfinite(est)) | (~np.isfinite(diag)) \
-            | (np.abs(est) > TRUST_RADIUS)
-        est = np.where(bad, 0.0, est)
-        all_bad = bad.all(axis=1)
-
-        if k == 1:
-            # exact passthrough: a parameter with one owner (the singletons)
-            # IS the local estimate under every weighting scheme.
-            theta[aidx] = np.where(all_bad, 0.0, est[:, 0])
-            continue
-
-        diag = np.where(bad, np.inf, diag)
-        if scheme == "uniform":
-            w = np.where(bad, 0.0, 1.0)
-        elif scheme == "diagonal":
-            w = 1.0 / diag
-        elif scheme == "max":
-            w = np.zeros_like(est)
-            w[np.arange(len(aidx)), np.argmin(diag, axis=1)] = 1.0
-        else:                                               # optimal
-            cols = s_pad[node, :, pos]                      # (P, k, n)
-            n = cols.shape[-1]
-            Va = cols @ cols.transpose(0, 2, 1) / n         # (P, k, k)
-            finite = np.isfinite(Va).all(axis=(1, 2))
-            Va = np.where(finite[:, None, None], Va, np.eye(k))
-            w = np.linalg.solve(Va + 1e-10 * np.eye(k),
-                                np.ones((len(aidx), k, 1)))[..., 0]
-            fallback = (bad.any(axis=1) | ~finite
-                        | (np.abs(w.sum(axis=1)) < 1e-12))
-            w = np.where(fallback[:, None], 1.0 / diag, w)
-        w = np.where(bad, 0.0, w)
-        wsum = np.where(all_bad, 1.0, w.sum(axis=1))
-        theta[aidx] = np.where(all_bad, 0.0, (w * est).sum(axis=1) / wsum)
-    return theta
-
-
-def _matrix_consensus(graph: Graph, fits: List[LocalFit],
-                      include_singleton: bool,
-                      theta: np.ndarray, family=None) -> np.ndarray:
-    """theta = (sum_i W^i)^{-1} sum_i W^i theta^i with W^i = Hhat^i (Eq. 7).
-
-    Not distributable (global matrix inverse) — included as the reference
-    point that is asymptotically equivalent to joint MPLE (Cor 4.2).
-    """
-    free = free_indices(graph, include_singleton, family)
-    pos_of = {int(a): k for k, a in enumerate(free)}
-    d = len(free)
-    W_sum = np.zeros((d, d))
-    Wt_sum = np.zeros(d)
-    for f in fits:
-        idx = np.array([pos_of[a] for a in f.beta])
-        W_sum[np.ix_(idx, idx)] += f.H
-        Wt_sum[idx] += f.H @ f.theta
-    sol = np.linalg.solve(W_sum + 1e-10 * np.eye(d), Wt_sum)
-    theta[free] = sol
-    return theta
+    return get_combiner(scheme).combine(
+        graph, fits, include_singleton=include_singleton,
+        theta_fixed=theta_fixed, family=family)
 
 
 def mse(theta_hat: np.ndarray, theta_star: np.ndarray,

@@ -156,9 +156,13 @@ def fit_all_local(graph: Graph, X: jnp.ndarray,
                   family=None, mesh=None) -> List[LocalFit]:
     """Fit all p local CL estimators.
 
-    method="batched" (default) groups nodes into degree buckets and solves
-    each bucket in one vmapped Newton-IRLS program with closed-form
-    gradients/Hessians; method="loop" is the legacy per-node Ising path.
+    Thin shim over the estimation-plan API: method="batched" (default)
+    builds the equivalent default :class:`repro.api.Plan` and runs the
+    cached :class:`~repro.api.session.EstimationSession`'s local-fit engine
+    — degree buckets grouped, each solved in one vmapped Newton-IRLS
+    program with closed-form gradients/Hessians, numerically identical to
+    calling the engine directly (the golden fixtures pin this).
+    method="loop" is the legacy per-node Ising path.
 
     ``sample_weight`` (0/1 observation masks, ``(n,)`` or ``(p, n)``),
     ``warm_start`` (previous per-node thetas), ``family`` (any registered
@@ -169,6 +173,26 @@ def fit_all_local(graph: Graph, X: jnp.ndarray,
     not support them.
     """
     if method == "batched":
+        from .families import get_family
+        fam_name = "ising" if family is None else getattr(family, "name", "")
+        try:
+            registered = family is None or get_family(fam_name) is family
+        except KeyError:
+            registered = False
+        if registered:
+            from ..api import Plan
+            from ..api.session import EstimationSession
+            # theta_fixed stays a per-call argument (not a plan field):
+            # callers varying it would otherwise mint a distinct plan —
+            # and churn the session cache — per value
+            plan = Plan(graph=graph, family=fam_name,
+                        include_singleton=include_singleton)
+            sess = EstimationSession.for_plan(plan, mesh=mesh)
+            return sess.fit_local(X, sample_weight=sample_weight,
+                                  warm_start=warm_start, want_influence=True,
+                                  theta_fixed=theta_fixed)
+        # unregistered family instance: call the engine directly (no plan
+        # can name it; sessions require registry families)
         from .batched import fit_all_local_batched
         return fit_all_local_batched(graph, X, include_singleton, theta_fixed,
                                      sample_weight=sample_weight,

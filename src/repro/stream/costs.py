@@ -20,18 +20,37 @@ from __future__ import annotations
 from ..core.asymptotics import param_owners
 from ..core.graphs import Graph
 
-#: scalars transmitted per shared parameter per one-step message
-SCHEME_SCALARS_PER_PARAM = {
-    "uniform": 1,    # estimate only (weights are identically 1)
-    "diagonal": 2,   # estimate + 1/Vhat_aa weight
-    "max": 2,        # estimate + weight (receiver picks the argmax)
-    "optimal": 2,    # estimate + weight; influence samples counted apart
-}
+def _registry_scalars() -> dict:
+    """Name-keyed view of ``Combiner.scalars_per_shared_param`` over the
+    distributable registered combiners — the registry is the single source
+    of truth (uniform: estimate only, weights implicitly 1; weighted
+    schemes: estimate + weight/vote mass; Linear-Opt's influence samples
+    are counted apart)."""
+    from ..core.combiners import registered_combiners
+    return {c.name: c.scalars_per_shared_param
+            for c in registered_combiners()
+            if c.scalars_per_shared_param is not None}
+
+
+#: import-time snapshot for the built-in schemes; ``one_step_message_
+#: scalars`` resolves through the LIVE registry, so combiners registered
+#: later are billed correctly without touching this table
+SCHEME_SCALARS_PER_PARAM = _registry_scalars()
 
 
 def one_step_message_scalars(n_shared: int, scheme: str) -> int:
-    """Scalars in one one-step consensus message covering n_shared params."""
-    return int(n_shared) * SCHEME_SCALARS_PER_PARAM[scheme]
+    """Scalars in one one-step consensus message covering n_shared params.
+
+    Resolved through the combiner registry (raising the registry's
+    ``ValueError`` on unknown names, and a clear one for combiners that
+    are not distributable as a one-step message round)."""
+    from ..core.combiners import get_combiner
+    spp = get_combiner(scheme).scalars_per_shared_param
+    if spp is None:
+        raise ValueError(
+            f"combiner {scheme!r} is not distributable as a one-step "
+            f"message round (no scalars_per_shared_param)")
+    return int(n_shared) * spp
 
 
 def admm_message_scalars(n_shared: int) -> int:

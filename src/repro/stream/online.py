@@ -53,15 +53,27 @@ class StreamingEstimator:
     different rates, so counts are heterogeneous). ``refit()`` updates every
     node's local fit to its current prefix. ``family`` selects the model
     family (default Ising).
+
+    Prefer obtaining instances through the estimation-plan API —
+    ``repro.api.Plan(...).session().stream()`` — which binds family, mesh,
+    fixed coordinates, capacity, and Newton budget to one declarative plan
+    (and shares the compiled bucket solvers with the session's batch/joint
+    verbs); direct construction remains supported as the legacy path.
     """
 
     def __init__(self, graph: Graph, include_singleton: bool = True,
                  theta_fixed: Optional[np.ndarray] = None,
                  capacity: int = 64, n_iter: int = 40,
-                 family=None, mesh=None) -> None:
+                 family=None, mesh=None,
+                 want_influence: bool = True) -> None:
         self.graph = graph
         self.family = ISING if family is None else family
         self.mesh = mesh
+        #: False skips the (n, d) per-sample influence stacks on every
+        #: re-fit — none of the streamable one-step schemes read them, so
+        #: plan-bound streams and the simulator opt out (LocalFit.s then
+        #: has zero rows); the default keeps the legacy full fits
+        self.want_influence = want_influence
         self.include_singleton = include_singleton
         n_params = self.family.n_params(graph)
         self.theta_fixed = (np.zeros(n_params, dtype=np.float64)
@@ -120,7 +132,8 @@ class StreamingEstimator:
             n_iter=self.n_iter,
             sample_weight=jnp.asarray(masks),
             warm_start=self._warm,
-            family=self.family, mesh=self.mesh)
+            family=self.family, mesh=self.mesh,
+            want_influence=self.want_influence)
         changed = self.counts != self._fit_counts
         self.versions = self.versions + changed.astype(np.int64)
         self._fit_counts = self.counts.copy()

@@ -27,13 +27,27 @@ import numpy as np
 
 from ..core.asymptotics import free_indices, param_owners
 from ..core.batched import prox_update_batched
-from ..core.consensus import TRUST_RADIUS
+from ..core.combiners import (TRUST_RADIUS, get_combiner,
+                              streamable_combiners)
 from ..core.graphs import Graph
 from .costs import admm_message_scalars, one_step_message_scalars
 from .network import Network, NetworkConfig
 from .online import StreamingEstimator
 
-ONE_STEP_SCHEMES = ("uniform", "diagonal", "max")
+
+def _one_step_schemes() -> Tuple[str, ...]:
+    """Streamable one-step schemes, resolved from the LIVE combiner
+    registry: distributable as one message round and able to fuse
+    (estimate, variance) candidates receiver-side. (The paper's "optimal"
+    scheme ships n influence samples per shared param — see
+    costs.comm_costs — and is deliberately not a streaming mode.)"""
+    return tuple(c.name for c in streamable_combiners())
+
+
+#: import-time snapshot of the built-in streamable schemes (test
+#: parametrization axis); validation and plan resolution use the live
+#: ``_one_step_schemes()`` so later-registered combiners stream too
+ONE_STEP_SCHEMES = _one_step_schemes()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,12 +86,25 @@ class StreamResult:
     err: Optional[np.ndarray]         # (R,) MSE vs theta_star (if given)
     score_norm: Optional[np.ndarray]  # (R,) pseudo-likelihood score norm
     staleness: np.ndarray     # (R,) mean age (rounds) of received views
+    #: what the network would have reported when recording started (the
+    #: pre-data estimate — theta_fixed for a fresh simulator); answers
+    #: any-time queries earlier than the first recorded round
+    initial: Optional[np.ndarray] = None
 
     def estimate_at(self, t: int) -> np.ndarray:
-        """Combined theta as of round ``t`` (last snapshot at or before t;
-        the earliest snapshot if queried before any)."""
+        """Combined theta as of round ``t``: the last snapshot at or before
+        t. A query *earlier than the first recorded round* returns the
+        ``initial`` estimate — the network had not produced a recorded
+        combination yet, so the answer is what it reported going in, not
+        a peek at the round-``rounds[0]`` snapshot (and never an index
+        error). Falls back to the earliest snapshot when ``initial`` was
+        not recorded (pre-fix pickles)."""
         idx = int(np.searchsorted(self.rounds, t, side="right")) - 1
-        return self.theta[max(idx, 0)]
+        if idx < 0:
+            if self.initial is not None:
+                return self.initial
+            return self.theta[0]
+        return self.theta[idx]
 
 
 def _guard(est: float, w: float) -> bool:
@@ -96,12 +123,16 @@ class StreamSimulator:
     estimator : "one_step" (online local fits + one-step consensus of
         whatever has arrived) or "admm" (streaming ADMM: one warm-started
         proximal round per simulator round over the growing buffers).
-    scheme : one-step weighting — "uniform", "diagonal", or "max". (The
-        paper's "optimal" scheme ships n influence samples per shared param
-        — see costs.comm_costs — and is deliberately not a streaming mode.)
+    scheme : one-step weighting, any *streamable* combiner from the
+        registry (``ONE_STEP_SCHEMES``: uniform / diagonal / max /
+        weighted_vote). The receiver-side fusion dispatches through the
+        strategy object's ``combine_candidates``.
     mesh : optional jax mesh with a ``data`` axis; every re-fit / proximal
         round then runs through the batched engine's shard_map path
         (numerically identical on a one-device mesh).
+
+    ``StreamSimulator.from_plan(plan, pool, ...)`` configures all of the
+    above from a declarative :class:`repro.api.Plan`.
     """
 
     def __init__(self, graph: Graph, pool, *,
@@ -116,9 +147,15 @@ class StreamSimulator:
                  seed: int = 0, family=None, mesh=None) -> None:
         if estimator not in ("one_step", "admm"):
             raise ValueError(f"unknown estimator {estimator!r}")
-        if scheme not in ONE_STEP_SCHEMES:
-            raise ValueError(f"unknown streaming scheme {scheme!r}")
+        streamable = _one_step_schemes()
+        if scheme not in streamable:
+            raise ValueError(
+                f"unknown streaming scheme {scheme!r}; streamable "
+                f"combiners: {list(streamable)}")
         from ..core.families import ISING
+        self.combiner = get_combiner(scheme)
+        #: unit weights are implicit and never transmitted (uniform)
+        self._sends_weight = self.combiner.scalars_per_shared_param >= 2
         self.graph = graph
         self.family = ISING if family is None else family
         self.mesh = mesh
@@ -138,9 +175,13 @@ class StreamSimulator:
         self.newton_iters = newton_iters
         self._arr_rng = np.random.RandomState(seed)
 
+        # streamable schemes are exactly the influence-free ones (Linear-Opt
+        # is excluded by design), so simulator re-fits never materialize
+        # the per-sample influence stacks
         self.est = StreamingEstimator(graph, include_singleton, theta_fixed,
                                       capacity=capacity, n_iter=newton_iters,
-                                      family=self.family, mesh=mesh)
+                                      family=self.family, mesh=mesh,
+                                      want_influence=False)
         links = [(i, j) for (a, b) in graph.edges for (i, j) in ((a, b),
                                                                 (b, a))]
         self.net = Network(links, network or NetworkConfig())
@@ -170,6 +211,43 @@ class StreamSimulator:
                               for b in betas]
             self._admm_bar = [self.theta_fixed[np.asarray(b)].copy()
                               for b in betas]
+
+    # ---------------------------------------------------------- plan entry
+    @classmethod
+    def from_plan(cls, plan, pool, *, estimator: str = "one_step",
+                  mesh=None, **overrides) -> "StreamSimulator":
+        """Build a simulator from a declarative :class:`repro.api.Plan`.
+
+        The plan supplies graph, family, singleton policy, fixed
+        coordinates, buffer capacity, Newton budgets (``n_iter`` for
+        one-step re-fits, ``admm_newton_iters``/``admm_rho`` for streaming
+        ADMM), mesh policy, and the scheme — the first *streamable*
+        combiner the plan requests. ``overrides`` pass through to (and win
+        over) the constructor arguments, e.g. ``theta_star=``,
+        ``arrivals=``, ``network=``, ``seed=``.
+        """
+        streamable = _one_step_schemes()
+        scheme = next((n for n in plan.combiners if n in streamable), None)
+        if scheme is None and estimator == "one_step":
+            raise ValueError(
+                f"plan requests no streamable combiner "
+                f"({list(plan.combiners)}); streamable: "
+                f"{list(streamable)}")
+        if mesh is None and plan.mesh is not None:
+            from ..api.session import _resolve_mesh
+            mesh = _resolve_mesh(plan.mesh)
+        kwargs = dict(
+            estimator=estimator, scheme=scheme or "diagonal",
+            include_singleton=plan.include_singleton,
+            theta_fixed=(None if plan.theta_fixed is None
+                         else np.asarray(plan.theta_fixed,
+                                         dtype=np.float64)),
+            newton_iters=(plan.n_iter if estimator == "one_step"
+                          else plan.admm_newton_iters),
+            admm_rho=plan.admm_rho, capacity=plan.capacity,
+            family=plan.family_instance, mesh=mesh)
+        kwargs.update(overrides)
+        return cls(plan.graph, pool, **kwargs)
 
     # ------------------------------------------------------------- stepping
     def step(self) -> None:
@@ -210,7 +288,7 @@ class StreamSimulator:
             n_i = int(self.est.counts[i])
             for a in shared:
                 pos = fits[i].beta.index(a)
-                if self.scheme == "uniform":
+                if not self._sends_weight:
                     # weights are identically 1 and not transmitted — the
                     # billed scalar count must match the information sent
                     vals[a] = (float(fits[i].theta[pos]), 1.0)
@@ -315,7 +393,7 @@ class StreamSimulator:
             cands = []
             if self.est.counts[home] > 0:
                 pos = fits[home].beta.index(a)
-                if self.scheme == "uniform":
+                if not self._sends_weight:
                     cands.append((float(fits[home].theta[pos]), 1.0))
                 else:
                     cands.append((float(fits[home].theta[pos]),
@@ -331,18 +409,12 @@ class StreamSimulator:
             # source: a count-0 node neither broadcasts nor contributes its
             # own V = 0 "infinite precision" fit); the clamp below only
             # steadies legitimate near-saturated variances, mirroring
-            # consensus.combine
+            # the combine driver
             cands = [(e, max(v, 1e-12)) for (e, v) in cands if _guard(e, v)]
             if not cands:
                 continue
-            if self.scheme == "uniform":
-                theta[a] = float(np.mean([e for e, _ in cands]))
-            elif self.scheme == "diagonal":
-                w = np.array([1.0 / v for _, v in cands])
-                e = np.array([e for e, _ in cands])
-                theta[a] = float((w @ e) / w.sum())
-            else:  # max
-                theta[a] = min(cands, key=lambda c: c[1])[0]
+            # receiver-side fusion dispatches through the combiner strategy
+            theta[a] = self.combiner.combine_candidates(cands)
         return theta
 
     def mean_staleness(self) -> float:
@@ -354,6 +426,10 @@ class StreamSimulator:
     # ------------------------------------------------------------ trajectory
     def run(self, rounds: int, record_every: int = 1,
             record_score: bool = False) -> StreamResult:
+        # the estimate the network reports as recording starts — for a
+        # fresh simulator this is theta_fixed; StreamResult.estimate_at
+        # answers queries earlier than the first recorded round with it
+        initial = self.current_estimate()
         recs: List[dict] = []
         for r in range(rounds):
             self.step()
@@ -383,4 +459,5 @@ class StreamSimulator:
                  if self.theta_star is not None else None),
             score_norm=(np.array([r["score"] for r in recs])
                         if record_score else None),
-            staleness=np.array([r["stale"] for r in recs]))
+            staleness=np.array([r["stale"] for r in recs]),
+            initial=initial)

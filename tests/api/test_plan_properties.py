@@ -1,0 +1,107 @@
+"""Hypothesis property tests for the declarative estimation plan.
+
+* ``Plan.to_dict`` -> ``Plan.from_dict`` round-trips EXACTLY (equality and
+  hash) for random valid plans — every registered family x every non-empty
+  ordered subset of registered combiners x mesh policy on/off x random
+  graphs, precisions, fixed coordinates, and solver budgets;
+* two equal plans hash-key to the same cached session (the compiled-solver
+  sharing guarantee), and unequal plans to different sessions.
+"""
+import json
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.api as A  # noqa: E402
+import repro.core as C  # noqa: E402
+
+FAMILY_NAMES = [f.name for f in C.registered_families()]
+COMBINER_NAMES = [c.name for c in C.registered_combiners()]
+
+
+@st.composite
+def graphs(draw):
+    p = draw(st.integers(min_value=2, max_value=7))
+    pairs = [(i, j) for i in range(p) for j in range(i + 1, p)]
+    chosen = draw(st.lists(st.sampled_from(pairs), min_size=1,
+                           max_size=len(pairs), unique=True))
+    return C.Graph(p, tuple(sorted(chosen)))
+
+
+@st.composite
+def plans(draw):
+    graph = draw(graphs())
+    family = draw(st.sampled_from(FAMILY_NAMES))
+    combiners = tuple(draw(st.lists(st.sampled_from(COMBINER_NAMES),
+                                    min_size=1, max_size=len(COMBINER_NAMES),
+                                    unique=True)))
+    include_singleton = draw(st.booleans())
+    mesh = draw(st.sampled_from([None, "host"]))
+    n_params = C.get_family(family).n_params(graph)
+    theta_fixed = draw(st.one_of(
+        st.none(),
+        st.lists(st.floats(min_value=-1.0, max_value=1.0,
+                           allow_nan=False, width=32),
+                 min_size=n_params, max_size=n_params).map(tuple)))
+    return A.Plan(
+        graph=graph, family=family, combiners=combiners,
+        include_singleton=include_singleton, theta_fixed=theta_fixed,
+        n_iter=draw(st.integers(min_value=1, max_value=60)),
+        mesh=mesh,
+        precision=draw(st.sampled_from(["float32", "float64"])),
+        capacity=draw(st.integers(min_value=1, max_value=256)),
+        admm_iters=draw(st.integers(min_value=1, max_value=40)),
+        admm_init=draw(st.sampled_from(["zero", "uniform", "diagonal"])),
+        admm_newton_iters=draw(st.integers(min_value=1, max_value=20)),
+        admm_rho=draw(st.floats(min_value=1e-3, max_value=10.0,
+                                allow_nan=False)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(plan=plans())
+def test_plan_dict_round_trip_is_exact(plan):
+    d = plan.to_dict()
+    # the dict is honestly JSON (what configs/benchmarks persist)
+    d2 = json.loads(json.dumps(d))
+    back = A.Plan.from_dict(d2)
+    assert back == plan
+    assert hash(back) == hash(plan)
+    assert back.to_dict() == d
+
+
+@settings(max_examples=25, deadline=None)
+@given(plan=plans())
+def test_equal_plans_share_one_cached_session(plan):
+    """The session cache is keyed by plan equality: an equal plan built
+    from the serialized dict resolves to the SAME session object (hence
+    the same derived structures and jitted solver cache), while a
+    materially different plan gets its own."""
+    twin = A.Plan.from_dict(plan.to_dict())
+    s1 = A.EstimationSession.for_plan(plan)
+    s2 = A.EstimationSession.for_plan(twin)
+    assert s1 is s2
+    assert s2.plan == plan
+    other = plan.replace(n_iter=plan.n_iter + 1)
+    assert A.EstimationSession.for_plan(other) is not s1
+
+
+@settings(max_examples=25, deadline=None)
+@given(plan=plans())
+def test_session_derivations_are_consistent(plan):
+    """Compiled-session derivations agree with the registries for random
+    plans: bucket count, owner structure size, combiner demand union."""
+    sess = A.EstimationSession.for_plan(plan)
+    fam = plan.family_instance
+    assert sess.n_buckets == len(C.degree_buckets(plan.graph))
+    n_params = fam.n_params(plan.graph)
+    if plan.include_singleton:
+        assert set(sess.owners) == set(range(n_params))
+    assert sess.want_influence == any(
+        "influence" in c.needs for c in plan.combiner_instances)
+    assert sess.theta_fixed.shape == (n_params,)
+    if plan.theta_fixed is not None:
+        np.testing.assert_allclose(sess.theta_fixed,
+                                   np.asarray(plan.theta_fixed))

@@ -1,0 +1,294 @@
+"""The estimation-plan API contract.
+
+The acceptance criteria of the Plan -> EstimationSession redesign:
+
+* ``session.fit`` and the legacy ``fit_all_local`` + ``combine`` pipeline
+  agree to 1e-10 on the golden-fixture scenario, for EVERY registered
+  family and every combiner the plan requests (the shims and the session
+  share one engine — this pins it);
+* a warm session ``fit`` on fresh same-shape data triggers ZERO new bucket
+  solver compilations, and a cold one compiles exactly one program per
+  degree bucket;
+* ``session.stream()`` is plan-bound (chunked streaming == session.fit);
+* ``session.joint()`` converges to the centralized MPLE;
+* plans validate loudly and sessions honor the combiner ``needs``
+  declarations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as A
+import repro.core as C
+from repro.core.batched import (bucket_compile_count,
+                                clear_bucket_solver_caches as
+                                _clear_solver_caches)
+
+ALL_COMBINERS = tuple(c.name for c in C.registered_combiners())
+
+
+@pytest.fixture(scope="module", params=[f.name for f in
+                                        C.registered_families()])
+def family_setup(request):
+    """(family, graph, theta_star, X) on a small grid per family."""
+    fam = C.get_family(request.param)
+    g = C.grid_graph(2, 3)
+    theta = fam.random_params(g, jax.random.PRNGKey(3))
+    X = np.asarray(fam.exact_sample(g, theta, 900, jax.random.PRNGKey(4)))
+    return fam, g, np.asarray(theta, dtype=np.float64), X
+
+
+def test_session_fit_matches_legacy_pipeline_exactly(family_setup):
+    """Acceptance: session.fit == fit_all_local + combine to 1e-10, every
+    registered family, every registered combiner."""
+    fam, g, theta, X = family_setup
+    plan = A.Plan(graph=g, family=fam.name, combiners=ALL_COMBINERS)
+    res = plan.session().fit(X)
+    fits = C.fit_all_local(g, jnp.asarray(X), family=fam)
+    for a, b in zip(res.fits, fits):
+        assert a.beta == b.beta
+        np.testing.assert_allclose(a.theta, b.theta, atol=1e-10)
+    for name in ALL_COMBINERS:
+        ref = C.combine(g, fits, name, family=fam)
+        np.testing.assert_allclose(res.combined[name], ref, atol=1e-10,
+                                   err_msg=name)
+    assert np.array_equal(res.theta, res.combined[plan.combiners[0]])
+    assert res.mode == "fit" and res.n_samples == X.shape[0]
+    assert np.isfinite(res.score_norm) and res.wall_s > 0.0
+
+
+def test_warm_session_fit_compiles_nothing_new(family_setup):
+    """Acceptance: cold fit compiles one program per degree bucket; a warm
+    fit on FRESH same-shape data compiles nothing."""
+    fam, g, theta, X = family_setup
+    _clear_solver_caches()
+    plan = A.Plan(graph=g, family=fam.name, combiners=("diagonal", "max"))
+    sess = plan.session()
+    cold = sess.fit(X)
+    assert cold.new_compiles == sess.n_buckets
+    fresh = np.ascontiguousarray(X[::-1])          # same shape, new values
+    warm = sess.fit(fresh)
+    assert warm.new_compiles == 0
+    assert bucket_compile_count() == sess.n_buckets
+    # and a re-acquired session for an equal plan reuses the same solvers
+    again = A.Plan(graph=g, family=fam.name,
+                   combiners=("diagonal", "max")).session()
+    assert again is sess
+    assert again.fit(X).new_compiles == 0
+
+
+def test_session_stream_is_plan_bound(family_setup):
+    """The streaming verb inherits the plan: chunked ingestion through
+    session.stream() reproduces session.fit on the same data."""
+    fam, g, theta, X = family_setup
+    sess = A.Plan(graph=g, family=fam.name, capacity=32).session()
+    est = sess.stream()
+    assert est.family is fam
+    # the plan's influence demand threads through to streaming re-fits
+    assert est.want_influence == sess.want_influence
+    for chunk in np.array_split(X[:600], 4):
+        est.ingest(chunk)
+        est.refit()
+    ref = sess.fit(X[:600])
+    for a, b in zip(est.fits, ref.fits):
+        np.testing.assert_allclose(a.theta, b.theta, atol=2e-4)
+
+
+def test_session_joint_tracks_centralized_mple():
+    """The joint verb (family-generic batched ADMM) lands on the
+    centralized MPLE with decreasing primal residual."""
+    g = C.grid_graph(2, 3)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(7))
+    X = C.exact_sample(m, 800, jax.random.PRNGKey(8))
+    sess = A.Plan(graph=g, admm_iters=25).session()
+    res = sess.joint(X)
+    assert res.mode == "joint"
+    assert res.trajectory.shape == (26, g.n_params)
+    assert res.primal_residual[-1] < res.primal_residual[0]
+    mple = C.fit_mple(g, X)
+    assert float(np.max(np.abs(res.theta - mple))) < 5e-3
+    assert res.comm_scalars["admm"] == 25 * 2 * sum(
+        len(g.beta(i)) for i in range(g.p))
+
+
+def test_session_honors_combiner_needs():
+    """A plan whose combiners never declare "influence" gets fits without
+    the per-sample influence stacks; adding Linear-Opt turns them on."""
+    g = C.star_graph(6)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(9))
+    X = C.exact_sample(m, 500, jax.random.PRNGKey(10))
+    slim = A.Plan(graph=g, combiners=("diagonal",)).session()
+    assert not slim.want_influence
+    assert all(f.s.shape[0] == 0 for f in slim.fit(X).fits)
+    rich = A.Plan(graph=g, combiners=("diagonal", "optimal")).session()
+    assert rich.want_influence
+    res = rich.fit(X)
+    assert all(f.s.shape[0] == X.shape[0] for f in res.fits)
+    # slim and rich sessions agree on everything slim computes
+    np.testing.assert_allclose(slim.fit(X).combined["diagonal"],
+                               res.combined["diagonal"], atol=1e-10)
+
+
+def test_comm_scalar_accounting_matches_cost_table():
+    """EstimateResult.comm_scalars reproduces the shared combinatorial
+    accounting of repro.stream.costs for every distributable scheme."""
+    from repro.stream.costs import comm_costs
+    g = C.grid_graph(3, 3)
+    m = C.random_model(g, 0.5, 0.3, jax.random.PRNGKey(12))
+    X = C.exact_sample(m, 300, jax.random.PRNGKey(13))
+    sess = A.Plan(graph=g, combiners=("uniform", "diagonal", "max",
+                                      "weighted_vote", "optimal",
+                                      "matrix")).session()
+    res = sess.fit(X)
+    table = comm_costs(g, X.shape[0], 0)
+    assert res.comm_scalars["uniform"] == table["one_step_linear"]
+    assert res.comm_scalars["diagonal"] == table["diagonal_or_max"]
+    assert res.comm_scalars["max"] == table["diagonal_or_max"]
+    assert res.comm_scalars["weighted_vote"] == table["diagonal_or_max"]
+    assert res.comm_scalars["optimal"] == table["linear_opt"]
+    assert "matrix" not in res.comm_scalars      # not distributable
+
+
+def test_plan_validation_fails_loudly():
+    g = C.chain_graph(4)
+    with pytest.raises(KeyError, match="registered"):
+        A.Plan(graph=g, family="no_such_family")
+    with pytest.raises(ValueError, match="registered combiners"):
+        A.Plan(graph=g, combiners=("diagonal", "bogus"))
+    with pytest.raises(ValueError, match="at least one combiner"):
+        A.Plan(graph=g, combiners=())
+    with pytest.raises(ValueError, match="mesh policy"):
+        A.Plan(graph=g, mesh="torus")
+    with pytest.raises(ValueError, match="theta_fixed"):
+        A.Plan(graph=g, theta_fixed=(0.0,) * 3)
+    with pytest.raises(TypeError, match="Graph"):
+        A.Plan(graph="not a graph")
+    with pytest.raises(ValueError, match="admm_init"):
+        A.Plan(graph=g, admm_init="warm")
+    for rho in (0.0, -1.0, float("nan")):
+        with pytest.raises(ValueError, match="admm_rho"):
+            A.Plan(graph=g, admm_rho=rho)
+    # a bare string combiner is normalized, not 8 one-letter combiners
+    assert A.Plan(graph=g, combiners="diagonal").combiners == ("diagonal",)
+
+
+def test_simulate_accepts_mesh_override():
+    """session.simulate's documented override contract: an explicit mesh=
+    in overrides wins instead of colliding with the session's mesh."""
+    from repro.launch.mesh import make_host_mesh
+    g = C.star_graph(5)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(20))
+    pool = np.asarray(C.exact_sample(m, 200, jax.random.PRNGKey(21)))
+    sess = A.Plan(graph=g).session()
+    import repro.stream as S
+    sim = sess.simulate(pool, mesh=make_host_mesh(),
+                        arrivals=S.ArrivalSpec(rate=50.0))
+    sim.run(2)
+    assert np.all(np.isfinite(sim.current_estimate()))
+
+
+def test_float64_plan_fails_loudly_without_x64():
+    """precision="float64" without jax x64 raises instead of silently
+    truncating the samples to float32."""
+    g = C.chain_graph(4)
+    sess = A.Plan(graph=g, precision="float64").session()
+    with pytest.raises(ValueError, match="x64"):
+        sess.fit(np.zeros((8, 4), dtype=np.float64))
+
+
+def test_broken_third_party_candidates_cannot_break_streaming(monkeypatch):
+    """Streamability is detected by override, not by executing user code:
+    a registered combiner whose combine_candidates would crash on a probe
+    (e.g. assumes >= 2 candidates) is simply listed as streamable, and
+    built-in simulator construction keeps working."""
+    import repro.stream as S
+    from repro.core.combiners import (Combiner, DiagonalCombiner, _REGISTRY,
+                                      streamable_combiners)
+
+    class TrimmedMean(DiagonalCombiner):
+        name = "trimmed_mean"
+
+        def combine_candidates(self, cands):
+            return float(np.mean([e for e, _ in sorted(cands)[1:-1]]))
+
+    class NotStreamable(Combiner):
+        name = "batch_only"
+        scalars_per_shared_param = 2
+
+        def group_weights(self, est, diag, bad, cols):
+            return np.where(bad, 0.0, 1.0)
+
+    monkeypatch.setitem(_REGISTRY, "trimmed_mean", TrimmedMean())
+    monkeypatch.setitem(_REGISTRY, "batch_only", NotStreamable())
+    names = {c.name for c in streamable_combiners()}
+    assert "trimmed_mean" in names          # probe never executed it
+    assert "batch_only" not in names        # no combine_candidates override
+    g = C.star_graph(5)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(22))
+    pool = np.asarray(C.exact_sample(m, 200, jax.random.PRNGKey(23)))
+    sim = S.StreamSimulator(g, pool, scheme="diagonal",
+                            arrivals=S.ArrivalSpec(rate=50.0))
+    sim.run(2)
+    assert np.all(np.isfinite(sim.current_estimate()))
+
+
+def test_host_mesh_plan_matches_plain():
+    """mesh="host" (the 1x1 shard_map path) is numerically identical to
+    the plain single-program plan through the session facade — and the
+    compile-reuse invariant (cold == #buckets, warm == 0) holds on the
+    sharded solver path too, not just the plain one."""
+    g = C.star_graph(6)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(14))
+    X = C.exact_sample(m, 400, jax.random.PRNGKey(15))
+    plain = A.Plan(graph=g).session().fit(X)
+    _clear_solver_caches()
+    sess = A.Plan(graph=g, mesh="host").session()
+    meshed = sess.fit(X)
+    assert meshed.new_compiles == sess.n_buckets
+    warm = sess.fit(np.ascontiguousarray(np.asarray(X)[::-1]))
+    assert warm.new_compiles == 0
+    np.testing.assert_allclose(meshed.theta, plain.theta, atol=1e-10)
+    for a, b in zip(meshed.fits, plain.fits):
+        np.testing.assert_allclose(a.theta, b.theta, atol=1e-10)
+
+
+def test_late_registered_combiner_streams_and_bills(monkeypatch):
+    """Registry pluggability end to end: a combiner registered AFTER
+    import streams through the simulator (accepted, billed by its own
+    scalars_per_shared_param, fused by its combine_candidates) and plugs
+    into a Plan. Registered via monkeypatch so the registry is restored."""
+    import repro.stream as S
+    from repro.core.combiners import (DiagonalCombiner, _REGISTRY,
+                                      get_combiner)
+
+    class HalfWeight(DiagonalCombiner):
+        name = "half_weight"
+
+        def group_weights(self, est, diag, bad, cols):
+            return 0.5 / diag
+
+        def combine_candidates(self, cands):
+            w = np.array([0.5 / v for _, v in cands])
+            e = np.array([e for e, _ in cands])
+            return float((w @ e) / w.sum())
+
+    monkeypatch.setitem(_REGISTRY, "half_weight", HalfWeight())
+    assert get_combiner("half_weight").scalars_per_shared_param == 2
+    g = C.star_graph(5)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(16))
+    pool = np.asarray(C.exact_sample(m, 400, jax.random.PRNGKey(17)))
+    plan = A.Plan(graph=g, combiners=("half_weight",), capacity=64)
+    sim = S.StreamSimulator.from_plan(plan, pool,
+                                      arrivals=S.ArrivalSpec(rate=80.0))
+    res = sim.run(3)
+    assert np.all(np.isfinite(res.theta))
+    # billed through the live registry: 2 scalars per shared param slot,
+    # exactly like diagonal
+    assert sim.net.scalars_sent > 0
+    assert S.one_step_message_scalars(3, "half_weight") == 6
+    ref = S.StreamSimulator.from_plan(
+        A.Plan(graph=g, combiners=("diagonal",), capacity=64), pool,
+        arrivals=S.ArrivalSpec(rate=80.0))
+    ref.run(3)
+    assert sim.net.scalars_sent == ref.net.scalars_sent

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 import repro.core as C
-from repro.core.batched import _gauss_jordan_solve, _pad_degree, _solve_bucket
+from repro.core.batched import (_gauss_jordan_solve, _pad_degree,
+                                _solve_bucket, clear_bucket_solver_caches)
 
 
 # ------------------------------------------------------------ infrastructure
@@ -93,7 +94,7 @@ def test_compile_count_bounded_by_buckets():
     """One XLA compile per degree bucket, reused across data/replicates."""
     g = C.scale_free_graph(26, m=1, seed=7)
     m = C.random_model(g, 0.4, 0.3, jax.random.PRNGKey(4))
-    _solve_bucket.clear_cache()
+    clear_bucket_solver_caches()
     n_buckets = len(C.degree_buckets(g))
     for r in range(3):
         X = C.gibbs_sample(m, 400, jax.random.PRNGKey(10 + r),

@@ -44,6 +44,66 @@ def test_uniform_is_plain_average(grid_setup):
         np.testing.assert_allclose(th[a], avg, rtol=1e-6, atol=1e-7)
 
 
+def test_unknown_scheme_raises_listing_registered(grid_setup):
+    """Regression: an unknown scheme name must fail loudly — a ValueError
+    naming every registered combiner — through both the legacy facade and
+    the registry, never fall through silently."""
+    g, m, X, fits = grid_setup
+    with pytest.raises(ValueError) as ei:
+        C.combine(g, fits, "no_such_scheme")
+    msg = str(ei.value)
+    assert "no_such_scheme" in msg
+    for comb in C.registered_combiners():
+        assert comb.name in msg
+    with pytest.raises(ValueError) as ei2:
+        C.get_combiner("also_bogus")
+    assert "also_bogus" in str(ei2.value)
+
+
+def test_registry_resolves_every_seed_scheme(grid_setup):
+    """The registry serves every seed scheme name, and the facade's output
+    is the strategy object's output exactly."""
+    g, m, X, fits = grid_setup
+    for sch in C.SCHEMES:
+        comb = C.get_combiner(sch)
+        assert comb.name == sch
+        np.testing.assert_array_equal(
+            C.combine(g, fits, sch), comb.combine(g, fits))
+
+
+def test_weighted_vote_two_owners_matches_max(grid_setup):
+    """With exactly two owners per shared parameter (every pairwise graph),
+    the weighted median IS the max-vote winner up to exact weight ties."""
+    g, m, X, fits = grid_setup
+    tv = C.combine(g, fits, "weighted_vote")
+    tm = C.combine(g, fits, "max")
+    np.testing.assert_allclose(tv, tm, atol=1e-12)
+
+
+def test_combiner_needs_declarations(grid_setup):
+    """Strategies declare their second-order demands: only Linear-Opt asks
+    for influence samples, only the matrix reference for full Hessians —
+    and fits computed without influence make Linear-Opt fail loudly."""
+    g, m, X, fits = grid_setup
+    needs = {c.name: c.needs for c in C.registered_combiners()}
+    assert "influence" in needs["optimal"]
+    assert "hessian" in needs["matrix"]
+    for name in ("uniform", "diagonal", "max", "weighted_vote"):
+        assert "influence" not in needs[name]
+    from repro.core.batched import fit_all_local_batched
+    import jax.numpy as jnp
+    slim = fit_all_local_batched(g, jnp.asarray(X[:500]),
+                                 want_influence=False)
+    assert all(f.s.shape[0] == 0 for f in slim)
+    with pytest.raises(ValueError, match="influence"):
+        C.combine(g, slim, "optimal")
+    # slim fits lose nothing the variance-based schemes read
+    full = fit_all_local_batched(g, jnp.asarray(X[:500]))
+    for sch in ("uniform", "diagonal", "max", "weighted_vote"):
+        np.testing.assert_allclose(C.combine(g, slim, sch),
+                                   C.combine(g, full, sch), atol=1e-12)
+
+
 def test_max_picks_min_variance_owner(grid_setup):
     g, m, X, fits = grid_setup
     th = C.combine(g, fits, "max")
@@ -81,6 +141,23 @@ def test_admm_consensus_init_faster_than_zero(grid_setup):
     err_d = np.linalg.norm(res_d.trajectory[-1] - th_mple)
     err_0 = np.linalg.norm(res_0.trajectory[-1] - th_mple)
     assert err_d < err_0
+
+
+def test_admm_family_batched_matches_seed_trajectory(grid_setup):
+    """The family-generic batched ADMM (one prox solve per degree bucket
+    per round — the engine behind EstimationSession.joint) solves the same
+    objective as the seed per-node-loop ADMM: same fixed point, same
+    decreasing primal residual."""
+    g, m, X, fits = grid_setup
+    th_mple = C.fit_mple(g, X)
+    res = C.admm_mple_family(g, X, n_iters=20, init="diagonal", fits=fits,
+                             newton_iters=15)
+    assert np.linalg.norm(res.trajectory[-1] - th_mple) < 5e-3
+    assert res.primal_residual[-1] < res.primal_residual[0]
+    seed = C.admm_mple(g, X, n_iters=8, init="diagonal", fits=fits)
+    fam = C.admm_mple_family(g, X, n_iters=8, init="diagonal", fits=fits)
+    np.testing.assert_allclose(fam.trajectory[-1], seed.trajectory[-1],
+                               atol=2e-4)
 
 
 @pytest.mark.slow

@@ -169,21 +169,31 @@ def test_batched_equals_oracle_fixed_singleton(setup):
 
 
 # ------------------------------------------------- combine vs oracle MPLE
-def test_combine_schemes_track_centralized_mple(case, setup, fits):
-    """Every one-step consensus scheme stays within theoretical tolerance
-    of the centralized MPLE oracle (they share the sqrt(n) limit; at this n
-    the gap is O(1/sqrt(n)) with a scheme-dependent constant)."""
+@pytest.fixture(scope="module")
+def mple(setup):
     fam, g, theta, X = setup
-    mple = fit_mple_family(fam, g, jnp.asarray(X))
+    return fit_mple_family(fam, g, jnp.asarray(X))
+
+
+@pytest.mark.parametrize("scheme",
+                         [c.name for c in C.registered_combiners()])
+def test_combine_schemes_track_centralized_mple(case, setup, fits, mple,
+                                                scheme):
+    """EVERY combiner in the registry stays within the same theoretical
+    tolerance band of the centralized MPLE oracle, for every registered
+    family (they share the sqrt(n) limit; at this n the gap is
+    O(1/sqrt(n)) with a scheme-dependent constant). A newly registered
+    combiner is accepted or rejected by exactly this check — the combiner
+    twin of the family-registration gate."""
+    fam, g, theta, X = setup
     mse_mple = C.mse(mple, theta)
-    for scheme in C.SCHEMES:
-        th = C.combine(g, fits, scheme, family=fam)
-        assert np.all(np.isfinite(th)), scheme
-        gap = float(np.max(np.abs(th - mple)))
-        assert gap <= case.combine_tol, \
-            f"{scheme}: |combine - MPLE| = {gap}"
-        # and both estimate theta*: combining never catastrophically hurts
-        assert C.mse(th, theta) <= 25.0 * max(mse_mple, 1e-3), scheme
+    th = C.get_combiner(scheme).combine(g, fits, family=fam)
+    assert np.all(np.isfinite(th)), scheme
+    gap = float(np.max(np.abs(th - mple)))
+    assert gap <= case.combine_tol, \
+        f"{scheme}: |combine - MPLE| = {gap}"
+    # and both estimate theta*: combining never catastrophically hurts
+    assert C.mse(th, theta) <= 25.0 * max(mse_mple, 1e-3), scheme
 
 
 # ------------------------------------------------ chunked stream == batch

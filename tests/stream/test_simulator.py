@@ -181,8 +181,36 @@ def test_estimate_at_anytime_queries(star_setup):
                             arrivals=S.ArrivalSpec(rate=50.0), capacity=128)
     res = sim.run(6)
     np.testing.assert_array_equal(res.estimate_at(3), res.theta[2])
-    np.testing.assert_array_equal(res.estimate_at(0), res.theta[0])
+    np.testing.assert_array_equal(res.estimate_at(res.rounds[0]),
+                                  res.theta[0])
     np.testing.assert_array_equal(res.estimate_at(99), res.theta[-1])
+
+
+def test_estimate_at_before_first_round_returns_initial(star_setup):
+    """Both edges of the any-time query range: a query earlier than the
+    first recorded round returns the documented initial estimate (the
+    pre-data report — theta_fixed for a fresh simulator), never an index
+    error or a peek at the first snapshot; a query exactly at the first
+    recorded round returns that snapshot."""
+    g, m, pool = star_setup
+    sim = S.StreamSimulator(g, pool, scheme="diagonal",
+                            theta_star=np.asarray(m.theta),
+                            arrivals=S.ArrivalSpec(rate=50.0), capacity=128)
+    res = sim.run(5, record_every=2)        # snapshots at rounds 2, 4, 5
+    first = int(res.rounds[0])
+    assert first > 0
+    for t in (first - 1, 0, -3):            # strictly earlier than any
+        got = res.estimate_at(t)
+        np.testing.assert_array_equal(got, res.initial)
+    np.testing.assert_array_equal(res.initial, np.zeros(g.n_params))
+    np.testing.assert_array_equal(res.estimate_at(first), res.theta[0])
+    # legacy results without a recorded initial fall back to the earliest
+    # snapshot instead of raising
+    legacy = S.StreamResult(
+        rounds=res.rounds, theta=res.theta, samples_seen=res.samples_seen,
+        samples_total=res.samples_total, scalars_sent=res.scalars_sent,
+        err=res.err, score_norm=res.score_norm, staleness=res.staleness)
+    np.testing.assert_array_equal(legacy.estimate_at(0), res.theta[0])
 
 
 def test_dropped_messages_leave_views_stale_not_empty(star_setup):
