@@ -7,15 +7,25 @@ error-vs-samples-seen and error-vs-scalars-communicated, the measurable form
 of the paper's any-time + low-communication claims. Also asserts the
 chunked-streaming == one-shot-batch invariant on each graph.
 
+A second, hostile section replays the same engine through the fault-injection
+layer: 20% Byzantine sign-flip (robust combiners must land within 2x their
+fault-free error while Linear-Uniform degrades), a mid-stream change-point
+with windowed re-fits tracking it, a crash/restart schedule, and a
+kill-then-restore round asserting the durable checkpoint reproduces the
+uninterrupted trajectory to 1e-10.
+
 Writes ``BENCH_stream.json`` at the repo root.
 """
 from __future__ import annotations
+
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.api as A
+import repro.checkpoint as CK
 import repro.core as C
 import repro.stream as S
 from .util import emit, emit_json, scale
@@ -108,6 +118,100 @@ def _run_graph(name, g, rounds, rate, seed):
     return rec
 
 
+def _final_err(res) -> float:
+    return float(res.err[-1])
+
+
+def _run_hostile(rounds, rate):
+    """Hostile-network rows: the same streaming engine through the fault
+    layer. Star topology, leaves 8/9 Byzantine = 20% of the fleet."""
+    g = C.star_graph(10)
+    m = C.random_model(g, 0.5, 0.5, jax.random.PRNGKey(77))
+    theta_star = np.asarray(m.theta)
+    pool = _sample_pool(m, rounds * rate + rate, jax.random.PRNGKey(78))
+    rec = {"p": g.p, "byzantine_frac": 0.2, "methods": {}}
+
+    def run(scheme, faults=None, seed=21, **over):
+        sim = S.StreamSimulator(
+            g, pool, scheme=scheme, theta_star=theta_star,
+            arrivals=S.ArrivalSpec(rate=float(rate)),
+            network=S.NetworkConfig(drop_prob=0.1, delay=1),
+            capacity=128, seed=seed, faults=faults, **over)
+        return sim.run(rounds)
+
+    # --- 20% Byzantine sign-flip: robust schemes within 2x fault-free ----
+    byz = S.FaultPlan(byzantine=(S.ByzantineSpec(node=8, kind="sign_flip"),
+                                 S.ByzantineSpec(node=9, kind="sign_flip")))
+    for scheme in ("uniform", "trimmed_mean", "krum"):
+        clean = _final_err(run(scheme))
+        hostile_res = run(scheme, faults=byz)
+        hostile = _final_err(hostile_res)
+        rec["methods"][f"byzantine_{scheme}"] = {
+            "err_fault_free": clean, "err_hostile": hostile,
+            "err": hostile_res.err.tolist(),
+            "scalars_sent": hostile_res.scalars_sent.tolist(),
+        }
+        emit(f"stream_hostile_byz_{scheme}", 0.0,
+             f"clean {clean:.4f} hostile {hostile:.4f}")
+        if scheme in ("trimmed_mean", "krum"):
+            assert hostile <= 2.0 * clean + 1e-6, \
+                f"{scheme} did not survive 20% sign-flip " \
+                f"({hostile:.4f} vs fault-free {clean:.4f})"
+    u = rec["methods"]["byzantine_uniform"]
+    t = rec["methods"]["byzantine_trimmed_mean"]
+    assert u["err_hostile"] > 2.0 * u["err_fault_free"], \
+        "uniform unexpectedly survived Byzantine sign-flip"
+    assert u["err_hostile"] > 2.0 * t["err_hostile"], \
+        "robust fusion shows no advantage over uniform under attack"
+
+    # --- change-point drift: windowed re-fit tracks, infinite memory lags -
+    drift = S.FaultPlan(drift=(S.DriftSpec(at=rounds // 2, scale=0.6),))
+    plain = _final_err(run("diagonal", faults=drift))
+    windowed = _final_err(run("diagonal", faults=drift,
+                              window=(rounds - rounds // 2) * rate))
+    rec["methods"]["drift"] = {"err_plain": plain, "err_windowed": windowed}
+    emit("stream_hostile_drift", 0.0,
+         f"plain {plain:.4f} windowed {windowed:.4f}")
+    assert windowed < plain, \
+        "sliding-window re-fit did not beat infinite memory after drift"
+
+    # --- crash/restart: the survivor fleet keeps converging --------------
+    crash = S.FaultPlan(crashes=(
+        S.CrashSpec(node=3, at=2, restart_at=rounds - 2),))
+    res = run("diagonal", faults=crash)
+    rec["methods"]["crash_restart"] = {"err": res.err.tolist()}
+    assert np.all(np.isfinite(res.err)) and res.err[-1] < res.err[0], \
+        "fleet did not recover from crash/restart"
+    emit("stream_hostile_crash", 0.0,
+         f"err {res.err[0]:.4f}->{res.err[-1]:.4f}")
+
+    # --- kill + durable restore: bit-level trajectory continuity ---------
+    full = run("diagonal", faults=byz, window=4 * rate)
+    part_sim = S.StreamSimulator(
+        g, pool, scheme="diagonal", theta_star=theta_star,
+        arrivals=S.ArrivalSpec(rate=float(rate)),
+        network=S.NetworkConfig(drop_prob=0.1, delay=1),
+        capacity=128, seed=21, faults=byz, window=4 * rate)
+    part_sim.run(rounds // 2)
+    with tempfile.TemporaryDirectory() as d:
+        CK.save_stream(d, rounds // 2, part_sim)
+        fresh = S.StreamSimulator(
+            g, pool, scheme="diagonal", theta_star=theta_star,
+            arrivals=S.ArrivalSpec(rate=float(rate)),
+            network=S.NetworkConfig(drop_prob=0.1, delay=1),
+            capacity=128, seed=21, faults=byz, window=4 * rate)
+        CK.restore_stream(d, fresh)
+    resumed = fresh.run(rounds - rounds // 2)
+    restore_maxdiff = float(np.max(np.abs(
+        np.asarray(resumed.theta) - np.asarray(full.theta)[rounds // 2:])))
+    rec["methods"]["kill_restore"] = {"restore_maxdiff": restore_maxdiff}
+    assert restore_maxdiff <= 1e-10, \
+        f"restored stream diverged from uninterrupted run " \
+        f"({restore_maxdiff:.2e})"
+    emit("stream_hostile_restore", 0.0, f"maxdiff {restore_maxdiff:.1e}")
+    return rec
+
+
 def main() -> None:
     rounds = scale(10, 30)
     rate = scale(60, 300)
@@ -115,6 +219,7 @@ def main() -> None:
     for seed, (name, g) in enumerate(_graphs()):
         payload["graphs"][name] = _run_graph(name, g, rounds, rate,
                                              seed=10 * seed)
+    payload["hostile"] = _run_hostile(rounds, rate)
     emit_json("BENCH_stream.json", payload)
 
 

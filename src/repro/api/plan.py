@@ -73,6 +73,14 @@ class Plan:
         ``session.joint`` ADMM configuration (Sec. 3.2; ``admm_init`` of
         "uniform"/"diagonal" starts from that one-step consensus,
         ``admm_rho`` scales the "zero"-init unit penalties).
+    faults : optional :class:`~repro.stream.faults.FaultPlan` — the
+        hostile-network scenario ``session.simulate`` executes (crash
+        schedules, Byzantine corruption, replay, parameter drift). Frozen
+        and hashable like the plan itself.
+    stream_window / stream_discount : drift-tracking re-fit windows for
+        the streaming verbs — keep only each node's most recent
+        ``stream_window`` samples, and/or decay age-k samples by
+        ``stream_discount**k`` (see ``SampleBuffer.window_weights``).
     """
 
     graph: Graph
@@ -88,6 +96,9 @@ class Plan:
     admm_init: str = "diagonal"
     admm_newton_iters: int = 15
     admm_rho: float = 1.0
+    faults: Optional["FaultPlan"] = None
+    stream_window: Optional[int] = None
+    stream_discount: Optional[float] = None
 
     def __post_init__(self):
         if not isinstance(self.graph, Graph):
@@ -129,6 +140,23 @@ class Plan:
                 f"admm_rho must be a finite positive penalty, got "
                 f"{self.admm_rho!r} (zero rhos make the weighted consensus "
                 f"average 0/0)")
+        from ..stream.faults import FaultPlan
+        if self.faults is not None:
+            if isinstance(self.faults, dict):
+                object.__setattr__(self, "faults",
+                                   FaultPlan.from_dict(self.faults))
+            elif not isinstance(self.faults, FaultPlan):
+                raise TypeError(
+                    f"plan.faults must be a FaultPlan (or its to_dict "
+                    f"form), got {type(self.faults).__name__}")
+        if self.stream_window is not None and int(self.stream_window) < 1:
+            raise ValueError(f"stream_window must be >= 1 sample (None "
+                             f"disables it), got {self.stream_window!r}")
+        if self.stream_discount is not None and not (
+                0.0 < float(self.stream_discount) <= 1.0):
+            raise ValueError(
+                f"stream_discount must be in (0.0, 1.0] (None disables "
+                f"forgetting), got {self.stream_discount!r}")
 
     # -------------------------------------------------------- conveniences
     @property
@@ -169,6 +197,10 @@ class Plan:
             "admm_init": self.admm_init,
             "admm_newton_iters": self.admm_newton_iters,
             "admm_rho": self.admm_rho,
+            "faults": (None if self.faults is None
+                       else self.faults.to_dict()),
+            "stream_window": self.stream_window,
+            "stream_discount": self.stream_discount,
         }
 
     @classmethod
@@ -191,4 +223,9 @@ class Plan:
             admm_init=d.get("admm_init", "diagonal"),
             admm_newton_iters=int(d.get("admm_newton_iters", 15)),
             admm_rho=float(d.get("admm_rho", 1.0)),
+            faults=d.get("faults"),
+            stream_window=(None if d.get("stream_window") is None
+                           else int(d["stream_window"])),
+            stream_discount=(None if d.get("stream_discount") is None
+                             else float(d["stream_discount"])),
         )

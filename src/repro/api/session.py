@@ -225,7 +225,9 @@ class EstimationSession:
             theta_fixed=self.theta_fixed,
             capacity=capacity or self.plan.capacity,
             n_iter=self.plan.n_iter, family=self.family, mesh=self.mesh,
-            want_influence=self.want_influence)
+            want_influence=self.want_influence,
+            window=self.plan.stream_window,
+            discount=self.plan.stream_discount)
 
     def simulate(self, pool, **overrides):
         """An event-driven :class:`~repro.stream.simulator.StreamSimulator`

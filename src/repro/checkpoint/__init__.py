@@ -1,0 +1,11 @@
+"""Durable checkpoints: pytree and streaming-state save/restore.
+
+:func:`save`/:func:`restore` move arbitrary pytrees through the atomic
+``step_<N>/arrays.npz + manifest.json`` layout; :func:`save_state`/
+:func:`load_state` do the same for flat array dicts with a JSON meta blob;
+:func:`save_stream`/:func:`restore_stream` capture a full
+:class:`~repro.stream.simulator.StreamSimulator` mid-stream so a killed
+fleet restores to bit-identical ``estimate_at(t)`` trajectories.
+"""
+from .io import (latest_step, load_state, restore, restore_stream, save,
+                 save_state, save_stream)

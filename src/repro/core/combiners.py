@@ -34,6 +34,22 @@ Registered combiners:
                    owner sets it is robust to any minority of diverged
                    owners without collapsing to a single voter.
   matrix         — matrix consensus W^i = Hhat^i (Eq. 7)          (Cor 4.2)
+  trimmed_mean   — Byzantine-robust coordinate-wise trimmed mean: symmetric
+                   order-statistic trimming for larger owner sets, plus an
+                   anchored compatibility filter (candidates statistically
+                   incompatible with the home owner are discarded) that
+                   stays meaningful at the paper's two-owner edge blocks.
+  krum           — Krum-style nearest-neighbor selection (Blanchard et al.
+                   2017 adapted to scalar owner candidates): the candidate
+                   with the smallest summed distance to its nearest
+                   neighbors wins; exact score ties prefer the home owner,
+                   so a lying peer can never displace the home's own data.
+
+Each combiner also declares its ``breakdown_point`` — the fraction of
+Byzantine (arbitrarily corrupted) owner candidates it tolerates before the
+combined value can be driven arbitrarily far. The classical linear schemes
+all have breakdown 0 (one lying owner moves the mean arbitrarily); the
+voting/robust schemes trade statistical efficiency for a positive one.
 
 The grouped vectorized driver (pad per-node fits into dense float64 stacks,
 group parameters by owner count, batch every group's weighting) is the
@@ -70,6 +86,14 @@ class Combiner:
     #: scalars per shared parameter in a one-step message (None: the
     #: combiner is not expressible as one distributable message round)
     scalars_per_shared_param: Optional[int] = None
+    #: fraction of Byzantine owner candidates tolerated before the combined
+    #: value can be driven arbitrarily far (0.0 for the linear schemes)
+    breakdown_point: float = 0.0
+    #: True for robust combiners whose streaming fusion anchors on the
+    #: receiver's OWN candidate — the simulator then passes ``own_index``
+    #: to :meth:`combine_candidates` (third-party combiners with the plain
+    #: single-argument signature are never handed the extra keyword)
+    anchored: bool = False
 
     # ------------------------------------------------------------- strategy
     def group_weights(self, est: np.ndarray, diag: np.ndarray,
@@ -259,6 +283,145 @@ class WeightedVoteCombiner(Combiner):
         return float(cands[order[med]][0])
 
 
+class TrimmedMeanCombiner(Combiner):
+    """Byzantine-robust coordinate-wise trimmed mean.
+
+    Two filters compose, then the surviving candidates are plainly
+    averaged:
+
+    * **symmetric order-statistic trim** — drop the ``floor(trim * k)``
+      smallest and largest estimates among the sane candidates (the
+      classical coordinate-wise trimmed mean; breakdown point = ``trim``).
+      With the paper's two-owner edge blocks this trims nothing, which is
+      why the second filter exists;
+    * **anchored compatibility filter** — candidates farther than
+      ``kappa * sqrt(V_anchor + V_cand)`` from the *home* candidate
+      (column 0 convention: the lowest-index sane owner in the batch
+      driver, the receiver's own fit in streaming fusion) are discarded.
+      Since the streamed variances shrink as 1/n_i, any fixed-magnitude
+      lie (sign-flip, colluding constant) is eventually rejected, while
+      honest candidates — estimates of the same truth — stay within a few
+      standard errors of the anchor.
+
+    A Byzantine *peer* therefore never moves the combined value beyond the
+    compatibility radius of the home's own data; only a corrupted home
+    (which no per-parameter rule can fix at two owners) breaks it.
+    """
+    name = "trimmed_mean"
+    needs = frozenset({"variance"})
+    scalars_per_shared_param = 2     # estimate + variance (the filter input)
+    anchored = True
+
+    def __init__(self, trim: float = 0.25, kappa: float = 3.0) -> None:
+        if not (0.0 <= trim < 0.5):
+            raise ValueError(
+                f"trim fraction must be in [0.0, 0.5), got {trim!r} "
+                f"(trimming half or more of the owners from each side "
+                f"leaves nothing to average)")
+        if not (kappa > 0.0 and np.isfinite(kappa)):
+            raise ValueError(f"kappa must be a finite positive "
+                             f"compatibility radius, got {kappa!r}")
+        self.trim = float(trim)
+        self.kappa = float(kappa)
+        self.breakdown_point = float(trim)
+
+    def _keep_mask(self, est: np.ndarray, var: np.ndarray,
+                   bad: np.ndarray, anchor: np.ndarray) -> np.ndarray:
+        """(P, k) keep mask: symmetric trim ∩ anchored compatibility."""
+        P, k = est.shape
+        rows = np.arange(P)
+        a_e = est[rows, anchor]
+        a_v = np.where(np.isfinite(var[rows, anchor]),
+                       var[rows, anchor], 0.0)
+        tol = self.kappa * np.sqrt(np.maximum(a_v[:, None] + var, 1e-24))
+        keep = np.abs(est - a_e[:, None]) <= tol
+        # symmetric trim among sane candidates: rank sane estimates
+        # ascending (bad pushed to the end) and drop t from each side
+        sane = (~bad).sum(axis=1)
+        t = np.minimum((self.trim * sane).astype(np.int64),
+                       np.maximum(sane - 1, 0) // 2)
+        order = np.argsort(np.where(bad, np.inf, est), axis=1, kind="stable")
+        rank = np.empty_like(order)
+        np.put_along_axis(rank, order, np.broadcast_to(np.arange(k), (P, k)),
+                          axis=1)
+        keep &= (rank >= t[:, None]) & (rank < (sane - t)[:, None])
+        # the anchor itself always survives (it is its own reference)
+        keep[rows, anchor] = True
+        return keep & ~bad
+
+    def group_weights(self, est, diag, bad, cols):
+        anchor = np.argmax(~bad, axis=1)         # first sane owner = home
+        return self._keep_mask(est, diag, bad, anchor).astype(np.float64)
+
+    def combine_candidates(self, cands, own_index=None):
+        est = np.array([[e for e, _ in cands]])
+        var = np.array([[v for _, v in cands]])
+        bad = ~np.isfinite(est) | ~np.isfinite(var)
+        anchor = np.array([0 if own_index is None else int(own_index)])
+        keep = self._keep_mask(est, var, bad, anchor)[0]
+        return float(np.mean(np.asarray(est[0])[keep]))
+
+
+class KrumCombiner(Combiner):
+    """Krum-style nearest-neighbor selection over owner candidates.
+
+    Each sane candidate is scored by the summed squared distance to its
+    ``q = max(k_sane - t - 2, 1)`` nearest other candidates (``t =
+    floor((k_sane - 1) / 2)`` assumed Byzantines, the Krum rule of
+    Blanchard et al. 2017 collapsed to per-coordinate scalars); the lowest
+    score wins. Exact score ties — in particular the unavoidable tie at
+    the paper's two-owner edge blocks, where both candidates see the same
+    single distance — resolve to the *home* candidate (column 0 in the
+    batch driver, the receiver's own fit in streaming fusion): when
+    geometry cannot distinguish honest from lying, trust your own data.
+    Needs no transmitted variance, so its messages are as cheap as
+    Linear-Uniform's.
+    """
+    name = "krum"
+    needs = frozenset()
+    scalars_per_shared_param = 1     # estimate only (distances need no V)
+    breakdown_point = 0.5
+    anchored = True
+
+    @staticmethod
+    def _scores(est: np.ndarray, bad: np.ndarray) -> np.ndarray:
+        """(P, k) Krum scores (inf where bad)."""
+        d2 = (est[:, :, None] - est[:, None, :]) ** 2          # (P, k, k)
+        k = est.shape[1]
+        eye = np.eye(k, dtype=bool)
+        invalid = bad[:, :, None] | bad[:, None, :] | eye
+        d2 = np.where(invalid, np.inf, d2)
+        d2_sorted = np.sort(d2, axis=2)
+        sane = (~bad).sum(axis=1)
+        t = np.maximum(sane - 1, 0) // 2
+        q = np.maximum(sane - t - 2, 1)
+        take = np.minimum(q, np.maximum(sane - 1, 1))          # (P,)
+        idx = np.arange(k)
+        mask = idx[None, None, :] < take[:, None, None]
+        scores = np.where(mask & np.isfinite(d2_sorted),
+                          d2_sorted, 0.0).sum(axis=2)
+        return np.where(bad, np.inf, scores)
+
+    def group_weights(self, est, diag, bad, cols):
+        scores = self._scores(est, bad)
+        # argmin takes the FIRST minimum: column order is owner (node)
+        # order, so exact ties resolve to the lowest-index sane owner —
+        # the home-sensor convention
+        winner = np.argmin(scores, axis=1)
+        onehot = np.zeros_like(est)
+        onehot[np.arange(est.shape[0]), winner] = 1.0
+        return onehot
+
+    def combine_candidates(self, cands, own_index=None):
+        est = np.array([[e for e, _ in cands]])
+        bad = ~np.isfinite(est)
+        scores = self._scores(est, bad)[0]
+        if own_index is not None and np.isfinite(scores[own_index]) \
+                and scores[own_index] <= scores.min():
+            return float(est[0, own_index])
+        return float(est[0, int(np.argmin(scores))])
+
+
 class OptimalCombiner(Combiner):
     """Linear-Opt (Prop 4.6): weights from the empirical cross-covariance
     of the owners' influence columns, with a diagonal fallback when the
@@ -286,6 +449,13 @@ class MatrixCombiner(Combiner):
 
     Not distributable (global matrix inverse) — included as the reference
     point that is asymptotically equivalent to joint MPLE.
+
+    Diverged local fits (non-finite theta/H, or estimates outside the
+    shared trust radius) are *excluded* from the information sums — the
+    same disqualification rule the grouped driver applies — instead of
+    poisoning the global solve with NaNs; parameters whose every
+    contributing fit was excluded fall back to ``theta_fixed`` through the
+    ridge term.
     """
     name = "matrix"
     needs = frozenset({"hessian"})
@@ -303,6 +473,9 @@ class MatrixCombiner(Combiner):
         W_sum = np.zeros((d, d))
         Wt_sum = np.zeros(d)
         for f in fits:
+            if not (np.all(np.isfinite(f.theta)) and np.all(np.isfinite(f.H))
+                    and np.max(np.abs(f.theta)) <= TRUST_RADIUS):
+                continue
             idx = np.array([pos_of[a] for a in f.beta])
             W_sum[np.ix_(idx, idx)] += f.H
             Wt_sum[idx] += f.H @ f.theta
@@ -362,3 +535,5 @@ OPTIMAL = register_combiner(OptimalCombiner())
 MAX = register_combiner(MaxCombiner())
 MATRIX = register_combiner(MatrixCombiner())
 WEIGHTED_VOTE = register_combiner(WeightedVoteCombiner())
+TRIMMED_MEAN = register_combiner(TrimmedMeanCombiner())
+KRUM = register_combiner(KrumCombiner())

@@ -19,6 +19,8 @@ the combinatorial table agree exactly.
 from .buffer import SampleBuffer
 from .costs import (SCHEME_SCALARS_PER_PARAM, admm_message_scalars,
                     comm_costs, one_step_message_scalars)
+from .faults import (BYZANTINE_KINDS, ByzantineSpec, CrashSpec, DriftSpec,
+                     FaultPlan, ReplaySpec)
 from .network import Message, Network, NetworkConfig
 from .online import StreamingEstimator, pseudo_score
 from .simulator import (ONE_STEP_SCHEMES, ArrivalSpec, StreamResult,

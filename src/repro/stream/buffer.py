@@ -68,3 +68,26 @@ class SampleBuffer:
             raise ValueError("count exceeds samples in buffer")
         idx = np.arange(self.capacity, dtype=np.int64)
         return (idx[None, :] < counts[:, None]).astype(np.float32)
+
+    def window_weights(self, counts: np.ndarray,
+                       window=None, discount=None) -> np.ndarray:
+        """(len(counts), capacity) per-row fit weights over the pool.
+
+        The drift-tracking generalization of :meth:`prefix_masks`: with
+        both knobs None this IS the 0/1 prefix mask; ``window`` keeps only
+        each node's most recent ``window`` observed rows (sliding window);
+        ``discount`` in (0, 1) down-weights age — a node's newest row
+        weighs 1 and its age-k row ``discount**k`` (exponential
+        forgetting). The two compose. Weighted re-fits through the batched
+        engine then estimate the *recent* parameter, which is what tracks
+        a drifting truth.
+        """
+        w = self.prefix_masks(counts)
+        counts = np.asarray(counts, dtype=np.int64)
+        idx = np.arange(self.capacity, dtype=np.int64)
+        if window is not None:
+            w = w * (idx[None, :] >= counts[:, None] - int(window))
+        if discount is not None and discount < 1.0:
+            age = np.maximum(counts[:, None] - 1 - idx[None, :], 0)
+            w = w * (float(discount) ** age)
+        return w.astype(np.float32)

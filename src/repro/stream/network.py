@@ -12,7 +12,7 @@ is exactly reproducible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,12 +27,15 @@ class NetworkConfig:
     jitter — extra uniform random latency in {0, ..., jitter}.
     link_prob — per-round probability a directed link is usable at all
       (asynchronous gossip schedules; refusal costs no bandwidth).
+    seed — None (the default) lets an owner inject its generator (the
+      simulator threads one from its own key); an explicit int pins a
+      private legacy ``RandomState(seed)`` regardless of injection.
     """
     drop_prob: float = 0.0
     delay: int = 0
     jitter: int = 0
     link_prob: float = 1.0
-    seed: int = 0
+    seed: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -49,11 +52,17 @@ class Network:
     """Directed links with exact bandwidth accounting and a delivery queue."""
 
     def __init__(self, links: Sequence[Tuple[int, int]],
-                 config: NetworkConfig = NetworkConfig()) -> None:
+                 config: NetworkConfig = NetworkConfig(),
+                 rng: Optional[np.random.RandomState] = None) -> None:
         self.links = tuple(links)
         self._link_set = set(self.links)
         self.config = config
-        self._rng = np.random.RandomState(config.seed)
+        if config.seed is not None:
+            self._rng = np.random.RandomState(config.seed)
+        elif rng is not None:
+            self._rng = rng
+        else:
+            self._rng = np.random.RandomState(0)
         self._queue: List[Message] = []
         self.msgs_sent = 0
         self.msgs_dropped = 0
@@ -71,8 +80,10 @@ class Network:
         return bool(self._rng.rand() < self.config.link_prob)
 
     def send(self, rnd: int, src: int, dst: int, payload: Any,
-             n_scalars: int) -> bool:
-        """Transmit; returns False if the message was dropped in flight."""
+             n_scalars: int, extra_delay: int = 0) -> bool:
+        """Transmit; returns False if the message was dropped in flight.
+        ``extra_delay`` adds rounds of latency on top of the configured
+        delay/jitter (replayed stale copies arrive late by construction)."""
         self.msgs_sent += 1
         self.scalars_sent += int(n_scalars)
         if self.config.drop_prob > 0.0 and \
@@ -80,7 +91,7 @@ class Network:
             self.msgs_dropped += 1
             self.scalars_dropped += int(n_scalars)
             return False
-        lat = self.config.delay
+        lat = self.config.delay + int(extra_delay)
         if self.config.jitter > 0:
             lat += int(self._rng.randint(self.config.jitter + 1))
         self._queue.append(Message(src=src, dst=dst, payload=payload,
@@ -104,3 +115,29 @@ class Network:
     @property
     def scalars_in_flight(self) -> int:
         return sum(m.n_scalars for m in self._queue)
+
+    # --------------------------------------------------------- durability
+    _COUNTERS = ("msgs_sent", "msgs_dropped", "msgs_delivered",
+                 "scalars_sent", "scalars_dropped", "scalars_delivered")
+
+    def counters_dict(self) -> dict:
+        return {k: int(getattr(self, k)) for k in self._COUNTERS}
+
+    def set_counters(self, counters: dict) -> None:
+        for k in self._COUNTERS:
+            setattr(self, k, int(counters[k]))
+
+
+def rng_state_to_json(rng: np.random.RandomState) -> list:
+    """A RandomState's full MT19937 state as plain JSON values. Every entry
+    round-trips exactly: the key vector is uint32 ints, and json keeps the
+    cached gaussian's float64 repr."""
+    kind, keys, pos, has_gauss, cached = rng.get_state()
+    return [kind, [int(v) for v in keys], int(pos), int(has_gauss),
+            float(cached)]
+
+
+def rng_state_from_json(rng: np.random.RandomState, state: list) -> None:
+    kind, keys, pos, has_gauss, cached = state
+    rng.set_state((kind, np.asarray(keys, dtype=np.uint32), int(pos),
+                   int(has_gauss), float(cached)))

@@ -65,7 +65,20 @@ class StreamingEstimator:
                  theta_fixed: Optional[np.ndarray] = None,
                  capacity: int = 64, n_iter: int = 40,
                  family=None, mesh=None,
-                 want_influence: bool = True) -> None:
+                 want_influence: bool = True,
+                 window: Optional[int] = None,
+                 discount: Optional[float] = None) -> None:
+        if window is not None and int(window) < 1:
+            raise ValueError(
+                f"sliding window must be >= 1 sample (None disables it), "
+                f"got {window!r}")
+        if discount is not None and not (0.0 < float(discount) <= 1.0):
+            raise ValueError(
+                f"discount must be in (0.0, 1.0] (1.0 = no forgetting, "
+                f"None disables it), got {discount!r}")
+        #: drift-tracking re-fit windows — see SampleBuffer.window_weights
+        self.window = None if window is None else int(window)
+        self.discount = None if discount is None else float(discount)
         self.graph = graph
         self.family = ISING if family is None else family
         self.mesh = mesh
@@ -111,6 +124,81 @@ class StreamingEstimator:
     def n_pool(self) -> int:
         return self.buffer.n
 
+    @property
+    def effective_counts(self) -> np.ndarray:
+        """Per-node effective sample sizes: the total fit weight each node
+        places on the pool. Equal to ``counts`` without windows; the
+        window/discount-weighted mass otherwise — the right ``n`` for
+        1/n variance scalings under forgetting."""
+        if self.window is None and self.discount is None:
+            return self.counts.astype(np.float64)
+        return self.buffer.window_weights(
+            self.counts, self.window, self.discount).sum(
+                axis=1).astype(np.float64)
+
+    # ------------------------------------------------------------ durability
+    def state_dict(self):
+        """Full restorable state as (arrays, json_meta) — pool, per-node
+        prefix counts/versions, warm starts, and the fitted LocalFit bank —
+        everything a fresh estimator (constructed with the same
+        configuration) needs to continue bit-identically."""
+        arrays = {
+            "est/pool": self.buffer.data.copy(),
+            "est/counts": self.counts.copy(),
+            "est/versions": self.versions.copy(),
+            "est/fit_counts": self._fit_counts.copy(),
+            "est/theta_fixed": self.theta_fixed.copy(),
+        }
+        meta = {
+            "n": int(self.buffer.n),
+            "window": self.window,
+            "discount": self.discount,
+            "warm": [w is not None for w in (self._warm or [])],
+            "betas": None,
+        }
+        if self._warm is not None:
+            for i, w in enumerate(self._warm):
+                if w is not None:
+                    arrays[f"est/warm_{i}"] = np.asarray(w)
+        if self.fits is not None:
+            meta["betas"] = [list(map(int, f.beta)) for f in self.fits]
+            for f in self.fits:
+                for part in ("theta", "H", "J", "V", "s"):
+                    arrays[f"est/fit{f.i}_{part}"] = np.asarray(
+                        getattr(f, part))
+        return arrays, meta
+
+    def load_state(self, arrays, meta) -> None:
+        """Inverse of :meth:`state_dict`, in place."""
+        pool = np.asarray(arrays["est/pool"])
+        self.buffer._X = pool.copy()
+        self.buffer.n = int(meta["n"])
+        self.counts = np.asarray(arrays["est/counts"]).copy()
+        self.versions = np.asarray(arrays["est/versions"]).copy()
+        self._fit_counts = np.asarray(arrays["est/fit_counts"]).copy()
+        self.theta_fixed = np.asarray(arrays["est/theta_fixed"]).copy()
+        self.window = meta["window"]
+        self.discount = meta["discount"]
+        warm_flags = meta.get("warm") or []
+        if warm_flags:
+            self._warm = [
+                np.asarray(arrays[f"est/warm_{i}"]).copy() if present
+                else None for i, present in enumerate(warm_flags)]
+        else:
+            self._warm = None
+        betas = meta.get("betas")
+        if betas is None:
+            self.fits = None
+        else:
+            self.fits = [
+                LocalFit(i=i, beta=list(b),
+                         theta=np.asarray(arrays[f"est/fit{i}_theta"]),
+                         H=np.asarray(arrays[f"est/fit{i}_H"]),
+                         J=np.asarray(arrays[f"est/fit{i}_J"]),
+                         V=np.asarray(arrays[f"est/fit{i}_V"]),
+                         s=np.asarray(arrays[f"est/fit{i}_s"]))
+                for i, b in enumerate(betas)]
+
     # --------------------------------------------------------------- fitting
     def refit(self) -> List[LocalFit]:
         """Warm-started weighted re-fit of every node at its current prefix.
@@ -123,7 +211,8 @@ class StreamingEstimator:
         if self.fits is not None and np.array_equal(self.counts,
                                                     self._fit_counts):
             return self.fits
-        masks = self.buffer.prefix_masks(self.counts)
+        masks = self.buffer.window_weights(self.counts, self.window,
+                                           self.discount)
         fits = fit_all_local_batched(
             self.graph, jnp.asarray(self.buffer.data),
             include_singleton=self.include_singleton,

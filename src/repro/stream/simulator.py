@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 from ..core.asymptotics import free_indices, param_owners
@@ -31,7 +32,9 @@ from ..core.combiners import (TRUST_RADIUS, get_combiner,
                               streamable_combiners)
 from ..core.graphs import Graph
 from .costs import admm_message_scalars, one_step_message_scalars
-from .network import Network, NetworkConfig
+from .faults import FaultPlan
+from .network import (Network, NetworkConfig, rng_state_from_json,
+                      rng_state_to_json)
 from .online import StreamingEstimator
 
 
@@ -144,7 +147,10 @@ class StreamSimulator:
                  arrivals: ArrivalSpec = ArrivalSpec(rate=8.0),
                  refit_every: int = 1, newton_iters: int = 40,
                  admm_rho: float = 1.0, capacity: int = 64,
-                 seed: int = 0, family=None, mesh=None) -> None:
+                 seed: int = 0, family=None, mesh=None,
+                 faults: Optional[FaultPlan] = None,
+                 window: Optional[int] = None,
+                 discount: Optional[float] = None) -> None:
         if estimator not in ("one_step", "admm"):
             raise ValueError(f"unknown estimator {estimator!r}")
         streamable = _one_step_schemes()
@@ -152,6 +158,9 @@ class StreamSimulator:
             raise ValueError(
                 f"unknown streaming scheme {scheme!r}; streamable "
                 f"combiners: {list(streamable)}")
+        if faults is not None and not isinstance(faults, FaultPlan):
+            raise TypeError(f"faults must be a FaultPlan, "
+                            f"got {type(faults).__name__}")
         from ..core.families import ISING
         self.combiner = get_combiner(scheme)
         #: unit weights are implicit and never transmitted (uniform)
@@ -159,7 +168,24 @@ class StreamSimulator:
         self.graph = graph
         self.family = ISING if family is None else family
         self.mesh = mesh
-        self.pool = np.asarray(pool, dtype=np.float32)
+        self.faults = faults if faults is not None and not faults.empty \
+            else None
+        if self.faults is not None:
+            for spec in (self.faults.crashes + self.faults.byzantine):
+                if spec.node >= graph.p:
+                    raise ValueError(
+                        f"fault spec names node {spec.node}, but the "
+                        f"graph has only {graph.p} nodes (0.."
+                        f"{graph.p - 1})")
+            if self.faults.drift and theta_star is None:
+                raise ValueError(
+                    "parameter drift needs theta_star (the truth to "
+                    "perturb); pass theta_star= to the simulator")
+        # drift mutates the unseen pool tail in place — never the caller's
+        if self.faults is not None and self.faults.drift:
+            self.pool = np.array(pool, dtype=np.float32, copy=True)
+        else:
+            self.pool = np.asarray(pool, dtype=np.float32)
         self.estimator = estimator
         self.scheme = scheme
         self.include_singleton = include_singleton
@@ -173,7 +199,16 @@ class StreamSimulator:
         self.arrivals = arrivals
         self.refit_every = max(int(refit_every), 1)
         self.newton_iters = newton_iters
-        self._arr_rng = np.random.RandomState(seed)
+        # ONE threaded key: every stochastic subsystem (arrivals, network,
+        # fault draws, drift) gets an independent stream derived from the
+        # one seed, so a hostile scenario replays exactly
+        self.seed = int(seed)
+        s_arr, s_net, s_fault, s_drift = (
+            int(v) for v in np.random.SeedSequence(self.seed)
+            .generate_state(4))
+        self._arr_rng = np.random.RandomState(s_arr)
+        self._fault_rng = np.random.RandomState(s_fault)
+        self._drift_seed = s_drift
 
         # streamable schemes are exactly the influence-free ones (Linear-Opt
         # is excluded by design), so simulator re-fits never materialize
@@ -181,10 +216,12 @@ class StreamSimulator:
         self.est = StreamingEstimator(graph, include_singleton, theta_fixed,
                                       capacity=capacity, n_iter=newton_iters,
                                       family=self.family, mesh=mesh,
-                                      want_influence=False)
+                                      want_influence=False,
+                                      window=window, discount=discount)
         links = [(i, j) for (a, b) in graph.edges for (i, j) in ((a, b),
                                                                 (b, a))]
-        self.net = Network(links, network or NetworkConfig())
+        self.net = Network(links, network or NetworkConfig(),
+                           rng=np.random.RandomState(s_net))
         # params shared between the endpoints of each directed link: exactly
         # the link's own edge-coupling block (beta_i ∩ beta_j, Sec. 3.1)
         self._shared: Dict[Tuple[int, int], List[int]] = {}
@@ -197,6 +234,8 @@ class StreamSimulator:
         # (dst, src) -> {"vals": {a: (est, weight)}, "version", "sent_round"}
         self._view: Dict[Tuple[int, int], Dict] = {}
         self._last_sent = {link: -1 for link in links}
+        # per-link previous payload — what a replay attack re-injects
+        self._last_payload: Dict[Tuple[int, int], Dict] = {}
         self.round = 0
         self._fed = 0
 
@@ -245,16 +284,51 @@ class StreamSimulator:
             newton_iters=(plan.n_iter if estimator == "one_step"
                           else plan.admm_newton_iters),
             admm_rho=plan.admm_rho, capacity=plan.capacity,
-            family=plan.family_instance, mesh=mesh)
+            family=plan.family_instance, mesh=mesh,
+            faults=plan.faults, window=plan.stream_window,
+            discount=plan.stream_discount)
         kwargs.update(overrides)
         return cls(plan.graph, pool, **kwargs)
 
     # ------------------------------------------------------------- stepping
+    def _down_now(self, rnd: int) -> np.ndarray:
+        """(p,) crash mask for this round from the fault plan."""
+        if self.faults is None or not self.faults.crashes:
+            return np.zeros(self.graph.p, dtype=bool)
+        return np.array([self.faults.crashed(i, rnd)
+                         for i in range(self.graph.p)])
+
+    def _apply_drift(self, spec) -> None:
+        """Change-point: jump theta_star and re-draw the unseen pool tail
+        from the drifted model. Keyed statelessly off the drift stream and
+        the change-point round, so a restored simulator that already passed
+        the change-point needs no extra RNG state."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self._drift_seed),
+                                 spec.at)
+        k_delta, k_sample = jax.random.split(key)
+        delta = spec.scale * np.asarray(
+            jax.random.normal(k_delta, (len(self.free),)), dtype=np.float64)
+        self.theta_star = self.theta_star.copy()
+        self.theta_star[self.free] += delta
+        tail = len(self.pool) - self._fed
+        if tail > 0:
+            new = self.family.exact_sample(self.graph, self.theta_star,
+                                           tail, k_sample)
+            self.pool[self._fed:] = np.asarray(new, dtype=np.float32)
+
     def step(self) -> None:
         rnd = self.round
         p = self.graph.p
+        if self.faults is not None:
+            spec = self.faults.drift_at(rnd)
+            if spec is not None:
+                self._apply_drift(spec)
         # 1. arrivals: reveal new environment samples to each sensor
+        # (drawn for every node every round so the arrival stream does not
+        # depend on the crash schedule; a crashed sensor just samples none)
         draw = self.arrivals.draw(self._arr_rng, p)
+        down = self._down_now(rnd)
+        draw = np.where(down, 0, draw)
         target = np.minimum(self.est.counts + draw, len(self.pool))
         need = int(target.max()) if p else 0
         if need > self._fed:
@@ -263,18 +337,35 @@ class StreamSimulator:
         self.est.advance(target)
 
         if self.estimator == "one_step":
-            self._step_one_step(rnd)
+            self._step_one_step(rnd, down)
         else:
-            self._step_admm(rnd)
+            self._step_admm(rnd, down)
         self.round += 1
 
-    def _step_one_step(self, rnd: int) -> None:
+    def _corrupt_vals(self, spec, vals: Dict) -> Dict:
+        """Byzantine outbound corruption of one message's estimates. The
+        transmitted weight is untouched — a convincing liar claims its
+        honest precision."""
+        out = {}
+        for a, (e, w) in vals.items():
+            if spec.kind == "sign_flip":
+                e = -e
+            elif spec.kind == "scaled_noise":
+                e = e + spec.scale * float(self._fault_rng.randn())
+            else:                                    # fixed_value, colluding
+                e = float(spec.value)
+            out[a] = (e, w)
+        return out
+
+    def _step_one_step(self, rnd: int, down: np.ndarray) -> None:
         # 2. incremental warm-started re-fit on the configured cadence
         if rnd % self.refit_every == 0:
             self.est.refit()
         fits = self.est.fits
         if fits is None:
             return
+        eff = self.est.effective_counts
+        replay = self.faults.replay if self.faults is not None else None
         # 3. broadcast fresh shared-parameter estimates over live links
         for (i, j) in self.net.links:
             shared = self._shared[(i, j)]
@@ -282,10 +373,12 @@ class StreamSimulator:
                 continue
             if self.est.counts[i] == 0:
                 continue            # no data yet -> nothing worth sending
+            if down[i] or down[j]:
+                continue            # a crashed endpoint kills the link
             if not self.net.link_active(rnd, i, j):
                 continue            # retry while the version stays fresh
             vals = {}
-            n_i = int(self.est.counts[i])
+            n_i = max(float(eff[i]), 1e-12)
             for a in shared:
                 pos = fits[i].beta.index(a)
                 if not self._sends_weight:
@@ -296,23 +389,38 @@ class StreamSimulator:
                     # weight = the *estimator's* variance V_aa / n_i, so
                     # owners with more data genuinely count for more
                     # (Prop 4.7); the asymptotic V_aa alone is O(1) in n and
-                    # would weight a 10-sample sensor like a 10000-sample one
+                    # would weight a 10-sample sensor like a 10000-sample
+                    # one. n_i is the *effective* (window/discount) mass.
                     vals[a] = (float(fits[i].theta[pos]),
                                float(fits[i].V[pos, pos]) / n_i)
+            spec = (self.faults.byzantine_for(i, rnd)
+                    if self.faults is not None else None)
+            if spec is not None:
+                vals = self._corrupt_vals(spec, vals)
             payload = {"vals": vals, "version": int(self.est.versions[i]),
                        "sent_round": rnd}
-            if self.net.send(rnd, i, j, payload,
-                             one_step_message_scalars(len(shared),
-                                                      self.scheme)):
+            n_scal = one_step_message_scalars(len(shared), self.scheme)
+            if self.net.send(rnd, i, j, payload, n_scal):
                 # a drop is only "paid for" — the update is still owed, so
                 # the link keeps retrying until a copy gets through
                 self._last_sent[(i, j)] = int(self.est.versions[i])
+                # replay attack: re-inject the link's PREVIOUS payload as
+                # a late, stale duplicate (billed as real traffic; the
+                # receiver's freshest-version-wins rule must absorb it)
+                prev = self._last_payload.get((i, j))
+                if replay is not None and prev is not None \
+                        and self._fault_rng.rand() < replay.prob:
+                    self.net.send(rnd, i, j, prev, n_scal,
+                                  extra_delay=replay.delay)
+                self._last_payload[(i, j)] = payload
         # 4. deliveries update the receiver's view of its peers
         self._deliver_views(rnd)
 
-    def _step_admm(self, rnd: int) -> None:
+    def _step_admm(self, rnd: int, down: np.ndarray) -> None:
         # 2. one warm-started proximal primal round over the growing buffers
-        masks = self.est.buffer.prefix_masks(self.est.counts)
+        masks = self.est.buffer.window_weights(self.est.counts,
+                                               self.est.window,
+                                               self.est.discount)
         self._admm_theta = prox_update_batched(
             self.graph, self.est.buffer.data,
             [bar for bar in self._admm_bar],
@@ -331,11 +439,16 @@ class StreamSimulator:
         # 3. exchange shared coordinates
         for (i, j) in self.net.links:
             shared = self._shared[(i, j)]
-            if not shared or not self.net.link_active(rnd, i, j):
+            if not shared or down[i] or down[j] \
+                    or not self.net.link_active(rnd, i, j):
                 continue
             beta = self._betas[i]
             vals = {a: (float(self._admm_theta[i][beta.index(a)]), 1.0)
                     for a in shared}
+            spec = (self.faults.byzantine_for(i, rnd)
+                    if self.faults is not None else None)
+            if spec is not None:
+                vals = self._corrupt_vals(spec, vals)
             payload = {"vals": vals, "version": rnd, "sent_round": rnd}
             self.net.send(rnd, i, j, payload,
                           admm_message_scalars(len(shared)))
@@ -362,8 +475,13 @@ class StreamSimulator:
                 np.asarray(self._admm_theta[i]) - self._admm_bar[i])
 
     def _deliver_views(self, rnd: int) -> None:
-        """Apply due messages to receiver views, freshest version wins."""
+        """Apply due messages to receiver views, freshest version wins;
+        messages addressed to a crashed receiver are lost (delivered by the
+        network, never processed)."""
+        down = self._down_now(rnd)
         for msg in self.net.deliver(rnd):
+            if down[msg.dst]:
+                continue
             key = (msg.dst, msg.src)
             cur = self._view.get(key)
             if cur is None or msg.payload["version"] >= cur["version"]:
@@ -388,33 +506,48 @@ class StreamSimulator:
         fits = self.est.fits
         if fits is None:
             return theta
+        eff = self.est.effective_counts
+        anchored = getattr(self.combiner, "anchored", False)
         for a, own in self._owners.items():
             home = min(node for node, _ in own)
-            cands = []
+            raw = []
             if self.est.counts[home] > 0:
                 pos = fits[home].beta.index(a)
                 if not self._sends_weight:
-                    cands.append((float(fits[home].theta[pos]), 1.0))
+                    raw.append((float(fits[home].theta[pos]), 1.0, True))
                 else:
-                    cands.append((float(fits[home].theta[pos]),
-                                  float(fits[home].V[pos, pos])
-                                  / int(self.est.counts[home])))
+                    raw.append((float(fits[home].theta[pos]),
+                                float(fits[home].V[pos, pos])
+                                / max(float(eff[home]), 1e-12), True))
             for (node, _) in own:
                 if node == home:
                     continue
                 view = self._view.get((home, node))
                 if view is not None and a in view["vals"]:
-                    cands.append(view["vals"][a])
+                    e, v = view["vals"][a]
+                    raw.append((e, v, False))
             # data-free owners never make it here (they are excluded at the
             # source: a count-0 node neither broadcasts nor contributes its
             # own V = 0 "infinite precision" fit); the clamp below only
             # steadies legitimate near-saturated variances, mirroring
             # the combine driver
-            cands = [(e, max(v, 1e-12)) for (e, v) in cands if _guard(e, v)]
+            cands, own_index = [], None
+            for (e, v, is_own) in raw:
+                if _guard(e, v):
+                    if is_own:
+                        own_index = len(cands)
+                    cands.append((e, max(v, 1e-12)))
             if not cands:
                 continue
-            # receiver-side fusion dispatches through the combiner strategy
-            theta[a] = self.combiner.combine_candidates(cands)
+            # receiver-side fusion dispatches through the combiner strategy;
+            # robust (anchored) combiners additionally learn which candidate
+            # is the receiver's OWN honest fit — third-party combiners with
+            # the plain single-argument signature never see the keyword
+            if anchored:
+                theta[a] = self.combiner.combine_candidates(
+                    cands, own_index=own_index)
+            else:
+                theta[a] = self.combiner.combine_candidates(cands)
         return theta
 
     def mean_staleness(self) -> float:
@@ -422,6 +555,108 @@ class StreamSimulator:
         ages = [self.round - 1 - v["sent_round"]
                 for v in self._view.values()]
         return float(np.mean(ages)) if ages else 0.0
+
+    # ------------------------------------------------------------ durability
+    @staticmethod
+    def _payload_to_json(payload: Dict) -> Dict:
+        return {"vals": {str(a): [float(e), float(w)]
+                         for a, (e, w) in payload["vals"].items()},
+                "version": int(payload["version"]),
+                "sent_round": int(payload["sent_round"])}
+
+    @staticmethod
+    def _payload_from_json(d: Dict) -> Dict:
+        return {"vals": {int(a): (float(ew[0]), float(ew[1]))
+                         for a, ew in d["vals"].items()},
+                "version": int(d["version"]),
+                "sent_round": int(d["sent_round"])}
+
+    def state_dict(self) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Complete mid-stream state as (arrays, json_meta): estimator bank
+        (pool buffer, prefix counts, warm starts, fitted LocalFits),
+        environment pool and (possibly drifted) truth, per-link owed
+        versions and last payloads, received peer views, in-flight network
+        queue, bandwidth counters, and every RandomState. A fresh simulator
+        constructed with the same configuration + :meth:`load_state`
+        continues bit-identically — crash/Byzantine/drift activation is
+        derived from ``faults`` and the restored round, and drift keys are
+        stateless, so no fault bookkeeping beyond the RNG states is
+        needed. See :func:`repro.checkpoint.save_stream`."""
+        arrays, meta = self.est.state_dict()
+        arrays = dict(arrays)
+        arrays["sim/pool"] = self.pool.copy()
+        if self.theta_star is not None:
+            arrays["sim/theta_star"] = self.theta_star.copy()
+        if self.estimator == "admm":
+            for i in range(self.graph.p):
+                arrays[f"sim/admm_theta_{i}"] = np.asarray(
+                    self._admm_theta[i])
+                arrays[f"sim/admm_lam_{i}"] = np.asarray(self._admm_lam[i])
+                arrays[f"sim/admm_bar_{i}"] = np.asarray(self._admm_bar[i])
+        meta.update({
+            "round": int(self.round),
+            "fed": int(self._fed),
+            "seed": self.seed,
+            "scheme": self.scheme,
+            "estimator": self.estimator,
+            "last_sent": [[int(i), int(j), int(v)]
+                          for (i, j), v in self._last_sent.items()],
+            "last_payload": [[int(i), int(j), self._payload_to_json(p)]
+                             for (i, j), p in self._last_payload.items()],
+            "views": [[int(dst), int(src), self._payload_to_json(p)]
+                      for (dst, src), p in self._view.items()],
+            "arr_rng": rng_state_to_json(self._arr_rng),
+            "fault_rng": rng_state_to_json(self._fault_rng),
+            "net_rng": rng_state_to_json(self.net._rng),
+            "net_counters": self.net.counters_dict(),
+            "net_queue": [[int(m.src), int(m.dst),
+                           self._payload_to_json(m.payload),
+                           int(m.n_scalars), int(m.created),
+                           int(m.deliver_at)] for m in self.net._queue],
+        })
+        return arrays, meta
+
+    def load_state(self, arrays: Dict[str, np.ndarray],
+                   meta: Dict) -> None:
+        """Inverse of :meth:`state_dict`, in place, on a simulator
+        constructed with the same configuration (graph, pool shape,
+        scheme, faults, network config, seed)."""
+        if meta["scheme"] != self.scheme \
+                or meta["estimator"] != self.estimator:
+            raise ValueError(
+                f"checkpoint was written by a "
+                f"{meta['estimator']}/{meta['scheme']} simulator; this one "
+                f"is {self.estimator}/{self.scheme}")
+        self.est.load_state(arrays, meta)
+        self.pool = np.asarray(arrays["sim/pool"]).copy()
+        if "sim/theta_star" in arrays:
+            self.theta_star = np.asarray(arrays["sim/theta_star"]).copy()
+        if self.estimator == "admm":
+            self._admm_theta = [np.asarray(
+                arrays[f"sim/admm_theta_{i}"]).copy()
+                for i in range(self.graph.p)]
+            self._admm_lam = [np.asarray(arrays[f"sim/admm_lam_{i}"]).copy()
+                              for i in range(self.graph.p)]
+            self._admm_bar = [np.asarray(arrays[f"sim/admm_bar_{i}"]).copy()
+                              for i in range(self.graph.p)]
+        self.round = int(meta["round"])
+        self._fed = int(meta["fed"])
+        self._last_sent = {(int(i), int(j)): int(v)
+                           for i, j, v in meta["last_sent"]}
+        self._last_payload = {(int(i), int(j)): self._payload_from_json(p)
+                              for i, j, p in meta["last_payload"]}
+        self._view = {(int(dst), int(src)): self._payload_from_json(p)
+                      for dst, src, p in meta["views"]}
+        rng_state_from_json(self._arr_rng, meta["arr_rng"])
+        rng_state_from_json(self._fault_rng, meta["fault_rng"])
+        rng_state_from_json(self.net._rng, meta["net_rng"])
+        self.net.set_counters(meta["net_counters"])
+        from .network import Message
+        self.net._queue = [
+            Message(src=int(s), dst=int(d),
+                    payload=self._payload_from_json(p), n_scalars=int(n),
+                    created=int(c), deliver_at=int(at))
+            for s, d, p, n, c, at in meta["net_queue"]]
 
     # ------------------------------------------------------------ trajectory
     def run(self, rounds: int, record_every: int = 1,

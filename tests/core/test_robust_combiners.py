@@ -1,0 +1,179 @@
+"""Byzantine-robust combiners (trimmed_mean, krum): unit semantics of the
+filters/selectors, the registry contracts they declare, batch-driver
+robustness to a corrupted leaf fit, and the everyone-rejects-NaN
+conformance check over the full combiner registry."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.combiners import (KrumCombiner, TrimmedMeanCombiner,
+                                  get_combiner, registered_combiners)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    g = C.star_graph(6)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(4))
+    X = C.exact_sample(m, 2000, jax.random.PRNGKey(5))
+    fits = C.fit_all_local(g, X)
+    return g, m, fits
+
+
+# ------------------------------------------------------- declared contracts
+def test_robust_combiners_declare_their_contracts():
+    tm = get_combiner("trimmed_mean")
+    kr = get_combiner("krum")
+    assert tm.anchored and kr.anchored
+    assert tm.breakdown_point == tm.trim > 0.0
+    assert kr.breakdown_point == 0.5
+    assert tm.needs == {"variance"} and tm.scalars_per_shared_param == 2
+    assert kr.needs == frozenset() and kr.scalars_per_shared_param == 1
+    # the classical linear schemes honestly declare breakdown 0
+    for name in ("uniform", "diagonal", "optimal"):
+        assert get_combiner(name).breakdown_point == 0.0
+        assert not getattr(get_combiner(name), "anchored", False)
+
+
+def test_trim_fraction_validation():
+    with pytest.raises(ValueError, match=r"\[0\.0, 0\.5\)"):
+        TrimmedMeanCombiner(trim=0.5)
+    with pytest.raises(ValueError, match="kappa"):
+        TrimmedMeanCombiner(kappa=0.0)
+    with pytest.raises(ValueError, match="kappa"):
+        TrimmedMeanCombiner(kappa=float("nan"))
+
+
+# -------------------------------------------------- streaming-side fusion
+def test_trimmed_mean_rejects_incompatible_candidate():
+    """A fixed-magnitude lie lands outside kappa*sqrt(V_a+V_b) once the
+    variances have shrunk; the honest pair is averaged, the liar dropped."""
+    tm = TrimmedMeanCombiner()
+    v = 1e-4                       # ~n=10k worth of variance
+    honest = [(0.50, v), (0.52, v)]
+    out = tm.combine_candidates(honest + [(-0.50, v)], own_index=0)
+    np.testing.assert_allclose(out, 0.51, atol=1e-12)
+    # ...while a statistically compatible spread is fully averaged
+    out2 = tm.combine_candidates([(0.50, v), (0.51, v)], own_index=0)
+    np.testing.assert_allclose(out2, 0.505, atol=1e-12)
+
+
+def test_trimmed_mean_anchor_is_the_receiver_not_column_zero():
+    tm = TrimmedMeanCombiner()
+    v = 1e-4
+    cands = [(-0.5, v), (0.5, v), (0.52, v)]
+    assert tm.combine_candidates(cands, own_index=1) == pytest.approx(0.51)
+    # anchored on the liar, the honest pair is what gets rejected — the
+    # documented two-owner limitation: a corrupted HOME cannot be fixed
+    assert tm.combine_candidates(cands, own_index=0) == pytest.approx(-0.5)
+
+
+def test_trimmed_mean_rank_trim_drops_extremes_with_many_owners():
+    """With k=8 candidates and trim=0.25, two come off each flank even
+    when all are within the compatibility radius (huge kappa isolates the
+    order-statistic path)."""
+    tm = TrimmedMeanCombiner(trim=0.25, kappa=1e9)
+    ests = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]
+    out = tm.combine_candidates([(e, 1.0) for e in ests], own_index=3)
+    np.testing.assert_allclose(out, np.mean(ests[2:-2]), atol=1e-12)
+
+
+def test_krum_two_owner_tie_prefers_home():
+    """At the paper's two-owner edge blocks both candidates see the same
+    single distance — a lying peer must never displace the home fit."""
+    kr = KrumCombiner()
+    assert kr.combine_candidates([(0.4, 0.0), (-4.0, 0.0)],
+                                 own_index=0) == 0.4
+    assert kr.combine_candidates([(-4.0, 0.0), (0.4, 0.0)],
+                                 own_index=1) == 0.4
+    # without an anchor, first minimum wins (lowest-index convention)
+    assert kr.combine_candidates([(0.4, 0.0), (-4.0, 0.0)]) == 0.4
+
+
+def test_krum_selects_from_the_majority_cluster():
+    kr = KrumCombiner()
+    cands = [(0.50, 0.0), (0.51, 0.0), (0.49, 0.0), (5.0, 0.0), (-5.0, 0.0)]
+    out = kr.combine_candidates(cands, own_index=4)   # even anchored on liar
+    assert out in (0.50, 0.51, 0.49)
+
+
+def test_non_finite_candidates_are_ignored_by_both():
+    tm, kr = TrimmedMeanCombiner(), KrumCombiner()
+    cands = [(0.5, 1e-4), (np.nan, 1e-4), (0.52, np.inf), (0.54, 1e-4)]
+    assert np.isfinite(tm.combine_candidates(cands, own_index=0))
+    assert np.isfinite(kr.combine_candidates(cands, own_index=0))
+    assert abs(tm.combine_candidates(cands, own_index=0)) < 1.0
+
+
+# ------------------------------------------------------------ batch driver
+def test_batch_combine_survives_corrupted_leaf(fitted):
+    """Poison one leaf's outbound estimates by +10: uniform averages the
+    lie in (shifts by ~5 on that leaf's edge params); trimmed_mean and krum
+    stay glued to the clean consensus."""
+    g, m, fits = fitted
+    clean = {s: C.combine(g, fits, s)
+             for s in ("uniform", "trimmed_mean", "krum")}
+    liar = 3
+    dirty = list(fits)
+    dirty[liar] = dataclasses.replace(
+        fits[liar], theta=fits[liar].theta + 10.0)
+    hostile = {s: C.combine(g, dirty, s)
+               for s in ("uniform", "trimmed_mean", "krum")}
+    owners = C.param_owners(g)
+    lied = [a for a, own in owners.items()
+            if len(own) > 1 and any(i == liar for i, _ in own)]
+    assert lied                                      # the leaf owns edges
+    # krum picked the home owner already, so rejecting the liar changes
+    # nothing; trimmed_mean falls back to the surviving honest owner,
+    # moving only by the (tiny) honest-pair gap — never by the lie
+    np.testing.assert_allclose(hostile["krum"][lied], clean["krum"][lied],
+                               atol=1e-12)
+    np.testing.assert_allclose(hostile["trimmed_mean"][lied],
+                               clean["trimmed_mean"][lied], atol=0.05)
+    assert np.min(np.abs(hostile["uniform"][lied]
+                         - clean["uniform"][lied])) > 1.0
+
+
+def test_krum_batch_equals_clean_under_perfect_honesty(fitted):
+    """All-honest Krum picks the home owner everywhere at k=2 — identical
+    to itself under any candidate permutation-free corruption-free run
+    (determinism of the first-minimum convention)."""
+    g, m, fits = fitted
+    th1 = C.combine(g, fits, "krum")
+    th2 = C.combine(g, fits, "krum")
+    np.testing.assert_array_equal(th1, th2)
+    assert np.all(np.isfinite(th1))
+
+
+# ----------------------------------------- satellite 2: NaN/inf conformance
+@pytest.mark.parametrize("poison", ["nan", "inf", "huge"])
+def test_every_registered_combiner_rejects_poisoned_fit(fitted, poison):
+    """Conformance: a single NaN/inf/diverged local fit must not leak into
+    ANY registered combiner's output — diverged owners are disqualified
+    (the TRUST_RADIUS rule) and the combined estimate stays finite and
+    close to the clean consensus."""
+    g, m, fits = fitted
+    bad_theta = {"nan": np.nan, "inf": np.inf, "huge": 1e6}[poison]
+    dirty = list(fits)
+    dirty[0] = dataclasses.replace(
+        fits[0],
+        theta=np.full_like(fits[0].theta, bad_theta),
+        H=np.full_like(fits[0].H, bad_theta),
+        V=np.full_like(fits[0].V, bad_theta))
+    for comb in registered_combiners():
+        th = comb.combine(g, dirty, family=C.get_family("ising"))
+        assert np.all(np.isfinite(th)), \
+            f"{comb.name} leaked {poison} into the combined estimate"
+        clean = comb.combine(g, fits, family=C.get_family("ising"))
+        shared = [a for a, own in C.param_owners(g).items() if len(own) > 1]
+        # params NOT owned by the poisoned node are untouched
+        untouched = [a for a in shared
+                     if all(i != 0 for i, _ in C.param_owners(g)[a])]
+        if untouched:
+            np.testing.assert_allclose(th[untouched], clean[untouched],
+                                       atol=1e-8,
+                                       err_msg=f"{comb.name} perturbed "
+                                               f"params the bad node "
+                                               f"does not own")

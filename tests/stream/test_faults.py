@@ -1,0 +1,324 @@
+"""Hostile-network survival: FaultPlan validation, exact reproducibility of
+hostile scenarios under one threaded PRNG key, crash/restart semantics,
+Byzantine corruption vs robust combiners, replay absorption, drift +
+windowed tracking, and the Plan facade carrying all of it."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.stream as S
+from repro.api import Plan
+
+
+@pytest.fixture(scope="module")
+def star_setup():
+    g = C.star_graph(6)
+    m = C.random_model(g, 0.5, 0.4, jax.random.PRNGKey(2))
+    pool = np.asarray(C.exact_sample(m, 1000, jax.random.PRNGKey(3)))
+    return g, m, pool
+
+
+# ------------------------------------------------------------- validation
+def test_unknown_byzantine_kind_lists_valid_options():
+    with pytest.raises(ValueError) as e:
+        S.ByzantineSpec(node=1, kind="gaslight")
+    msg = str(e.value)
+    for kind in S.BYZANTINE_KINDS:
+        assert kind in msg
+
+
+def test_negative_crash_time_rejected():
+    with pytest.raises(ValueError, match=">= 0"):
+        S.CrashSpec(node=0, at=-1)
+    with pytest.raises(ValueError, match="strictly after"):
+        S.CrashSpec(node=0, at=5, restart_at=5)
+    with pytest.raises(ValueError):
+        S.CrashSpec(node=-2, at=0)
+
+
+def test_replay_and_drift_validation():
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        S.ReplaySpec(prob=1.5)
+    with pytest.raises(ValueError, match=">= 1"):
+        S.ReplaySpec(prob=0.5, delay=0)
+    with pytest.raises(ValueError, match=">= 0"):
+        S.DriftSpec(at=-3)
+    with pytest.raises(ValueError, match="finite"):
+        S.DriftSpec(at=2, scale=float("inf"))
+
+
+def test_trim_fraction_validation():
+    from repro.core.combiners import TrimmedMeanCombiner
+    for bad in (0.5, 0.7, -0.1):
+        with pytest.raises(ValueError, match=r"\[0.0, 0.5\)"):
+            TrimmedMeanCombiner(trim=bad)
+    with pytest.raises(ValueError, match="kappa"):
+        TrimmedMeanCombiner(kappa=0.0)
+
+
+def test_window_discount_validation(star_setup):
+    g, m, pool = star_setup
+    with pytest.raises(ValueError, match="window"):
+        S.StreamingEstimator(g, window=0)
+    with pytest.raises(ValueError, match="discount"):
+        S.StreamingEstimator(g, discount=0.0)
+    with pytest.raises(ValueError, match="discount"):
+        S.StreamingEstimator(g, discount=1.5)
+
+
+def test_fault_spec_off_graph_node_rejected(star_setup):
+    g, m, pool = star_setup
+    fp = S.FaultPlan(crashes=(S.CrashSpec(node=g.p, at=0),))
+    with pytest.raises(ValueError, match="nodes"):
+        S.StreamSimulator(g, pool, faults=fp)
+
+
+def test_drift_without_theta_star_rejected(star_setup):
+    g, m, pool = star_setup
+    fp = S.FaultPlan(drift=(S.DriftSpec(at=2),))
+    with pytest.raises(ValueError, match="theta_star"):
+        S.StreamSimulator(g, pool, faults=fp)
+
+
+def test_fault_plan_serialization_round_trips():
+    fp = S.FaultPlan(
+        crashes=(S.CrashSpec(node=2, at=3, restart_at=6),
+                 S.CrashSpec(node=4, at=1)),
+        byzantine=(S.ByzantineSpec(node=5, kind="scaled_noise", scale=2.5),
+                   S.ByzantineSpec(node=1, kind="fixed_value", value=-1.0)),
+        replay=S.ReplaySpec(prob=0.25, delay=4),
+        drift=(S.DriftSpec(at=7, scale=0.4),))
+    assert S.FaultPlan.from_dict(fp.to_dict()) == fp
+    assert hash(fp) == hash(S.FaultPlan.from_dict(fp.to_dict()))
+    assert S.FaultPlan().empty and not fp.empty
+
+
+def test_plan_facade_carries_faults_and_windows(star_setup):
+    g, m, pool = star_setup
+    fp = S.FaultPlan(byzantine=(S.ByzantineSpec(node=5),),
+                     replay=S.ReplaySpec(prob=0.1, delay=2))
+    plan = Plan(graph=g, combiners=("trimmed_mean",), faults=fp,
+                stream_window=64, stream_discount=0.98)
+    again = Plan.from_dict(plan.to_dict())
+    assert again == plan and hash(again) == hash(plan)
+    sim = S.StreamSimulator.from_plan(plan, pool)
+    assert sim.faults == fp
+    assert sim.est.window == 64 and sim.est.discount == 0.98
+    assert sim.scheme == "trimmed_mean"
+    est = plan.session().stream()
+    assert est.window == 64 and est.discount == 0.98
+    with pytest.raises(ValueError, match="stream_window"):
+        Plan(graph=g, stream_window=0)
+    with pytest.raises(ValueError, match="stream_discount"):
+        Plan(graph=g, stream_discount=2.0)
+
+
+# -------------------------------------------------------- reproducibility
+def _hostile_plan():
+    return S.FaultPlan(
+        crashes=(S.CrashSpec(node=2, at=3, restart_at=6),),
+        byzantine=(S.ByzantineSpec(node=5, kind="scaled_noise", start=2,
+                                   scale=1.5),),
+        replay=S.ReplaySpec(prob=0.5, delay=2),
+        drift=(S.DriftSpec(at=5, scale=0.3),))
+
+
+def test_hostile_runs_replay_exactly_from_one_seed(star_setup):
+    """ONE threaded PRNG key: the same seed reproduces an entire hostile
+    scenario — arrival draws, drops/jitter, Byzantine noise, replay
+    coin-flips, drift perturbation — bit for bit; a different seed does
+    not."""
+    g, m, pool = star_setup
+
+    def run(seed):
+        sim = S.StreamSimulator(
+            g, pool, scheme="trimmed_mean", theta_star=np.asarray(m.theta),
+            network=S.NetworkConfig(drop_prob=0.3, jitter=1),
+            arrivals=S.ArrivalSpec(kind="poisson", rate=40.0),
+            capacity=128, seed=seed, faults=_hostile_plan())
+        return sim.run(10)
+
+    a, b, c = run(7), run(7), run(8)
+    np.testing.assert_array_equal(a.theta, b.theta)
+    np.testing.assert_array_equal(a.scalars_sent, b.scalars_sent)
+    np.testing.assert_array_equal(a.err, b.err)
+    assert not np.array_equal(a.theta, c.theta)
+
+
+def test_explicit_network_seed_keeps_legacy_stream(star_setup):
+    """NetworkConfig(seed=int) still pins a private legacy generator:
+    simulator-level seeds must not change the link/drop draws."""
+    g, m, pool = star_setup
+    runs = []
+    for sim_seed in (0, 123):
+        sim = S.StreamSimulator(
+            g, pool[:300], scheme="diagonal",
+            network=S.NetworkConfig(drop_prob=0.5, seed=9),
+            arrivals=S.ArrivalSpec(rate=30.0), capacity=128, seed=sim_seed)
+        sim.run(5)
+        runs.append((sim.net.msgs_dropped, sim.net.msgs_sent))
+    assert runs[0] == runs[1]
+
+
+# ------------------------------------------------------- crash semantics
+def test_crashed_node_stops_sampling_and_talking(star_setup):
+    g, m, pool = star_setup
+    fp = S.FaultPlan(crashes=(S.CrashSpec(node=3, at=0),))
+    sim = S.StreamSimulator(g, pool, scheme="diagonal", faults=fp,
+                            arrivals=S.ArrivalSpec(rate=30.0), capacity=128)
+    sim.run(6)
+    assert sim.est.counts[3] == 0
+    # no message from node 3 was ever processed by any receiver
+    assert all(src != 3 for (dst, src) in sim._view)
+
+
+def test_crash_restart_resumes_sampling(star_setup):
+    g, m, pool = star_setup
+    fp = S.FaultPlan(crashes=(S.CrashSpec(node=3, at=2, restart_at=5),))
+    sim = S.StreamSimulator(g, pool, scheme="diagonal", faults=fp,
+                            arrivals=S.ArrivalSpec(rate=20.0), capacity=128)
+    sim.run(3)
+    down_counts = int(sim.est.counts[3])
+    sim.run(5)
+    assert int(sim.est.counts[3]) > down_counts        # resumed after restart
+    # and the 3-round outage cost exactly 3 rounds of arrivals
+    assert int(sim.est.counts[3]) == int(sim.est.counts[1]) - 3 * 20
+
+
+# -------------------------------------------------- byzantine vs robust
+def test_robust_combiners_survive_sign_flip_uniform_does_not(star_setup):
+    """Byzantine leaves sign-flip their outbound estimates: the hub's
+    uniform average of (theta, -theta) collapses toward 0, while anchored
+    trimmed-mean/krum fusion rejects the lies and tracks the fault-free
+    error."""
+    g, m, pool = star_setup
+    ts = np.asarray(m.theta)
+    fp = S.FaultPlan(byzantine=(S.ByzantineSpec(node=4, kind="sign_flip"),
+                                S.ByzantineSpec(node=5, kind="sign_flip")))
+    err = {}
+    for scheme in ("uniform", "trimmed_mean", "krum"):
+        clean = S.StreamSimulator(g, pool, scheme=scheme, theta_star=ts,
+                                  arrivals=S.ArrivalSpec(rate=60.0),
+                                  capacity=128).run(8)
+        hostile = S.StreamSimulator(g, pool, scheme=scheme, theta_star=ts,
+                                    arrivals=S.ArrivalSpec(rate=60.0),
+                                    capacity=128, faults=fp).run(8)
+        err[scheme] = (float(clean.err[-1]), float(hostile.err[-1]))
+    # robust schemes: hostile within 2x of fault-free
+    for scheme in ("trimmed_mean", "krum"):
+        clean_e, hostile_e = err[scheme]
+        assert hostile_e <= 2.0 * clean_e + 1e-6, (scheme, err[scheme])
+    # uniform: the lies dominate its error
+    assert err["uniform"][1] > 5.0 * err["uniform"][0]
+    assert err["uniform"][1] > 3.0 * err["trimmed_mean"][1]
+
+
+def test_colluding_fixed_value_rejected_by_trimmed_mean(star_setup):
+    g, m, pool = star_setup
+    ts = np.asarray(m.theta)
+    fp = S.FaultPlan(byzantine=(
+        S.ByzantineSpec(node=4, kind="fixed_value", value=3.0),
+        S.ByzantineSpec(node=5, kind="fixed_value", value=3.0)))
+    hostile = S.StreamSimulator(g, pool, scheme="trimmed_mean",
+                                theta_star=ts,
+                                arrivals=S.ArrivalSpec(rate=60.0),
+                                capacity=128, faults=fp).run(8)
+    clean = S.StreamSimulator(g, pool, scheme="trimmed_mean", theta_star=ts,
+                              arrivals=S.ArrivalSpec(rate=60.0),
+                              capacity=128).run(8)
+    assert float(hostile.err[-1]) <= 2.0 * float(clean.err[-1]) + 1e-6
+
+
+# ----------------------------------------------------------------- replay
+def test_replayed_stale_messages_are_billed_and_absorbed(star_setup):
+    """Certain replay: every successful send re-injects the previous
+    payload. Bandwidth goes up, conservation holds, and the
+    freshest-version-wins rule keeps every view at the final version."""
+    g, m, pool = star_setup
+    fp = S.FaultPlan(replay=S.ReplaySpec(prob=1.0, delay=2))
+    sim = S.StreamSimulator(g, pool[:200], scheme="diagonal", faults=fp,
+                            arrivals=S.ArrivalSpec(rate=100.0),
+                            capacity=128)
+    sim.run(20)
+    base = S.StreamSimulator(g, pool[:200], scheme="diagonal",
+                             arrivals=S.ArrivalSpec(rate=100.0),
+                             capacity=128)
+    base.run(20)
+    assert sim.net.scalars_sent > base.net.scalars_sent
+    net = sim.net
+    assert net.scalars_sent == (net.scalars_delivered + net.scalars_dropped
+                                + net.scalars_in_flight)
+    final_versions = {i: int(sim.est.versions[i]) for i in range(g.p)}
+    for (dst, src), view in sim._view.items():
+        assert view["version"] == final_versions[src]
+
+
+# ------------------------------------------------------------------ drift
+def test_drift_changes_truth_and_unseen_pool_only(star_setup):
+    g, m, pool = star_setup
+    ts = np.asarray(m.theta)
+    fp = S.FaultPlan(drift=(S.DriftSpec(at=3, scale=0.5),))
+    sim = S.StreamSimulator(g, pool, scheme="diagonal", theta_star=ts,
+                            arrivals=S.ArrivalSpec(rate=50.0), capacity=256,
+                            faults=fp)
+    sim.run(2)
+    seen_before = sim.pool[:sim._fed].copy()
+    sim.run(4)
+    assert not np.array_equal(sim.theta_star, ts)       # truth jumped
+    # rows revealed before the change-point kept their original draw
+    np.testing.assert_array_equal(sim.pool[:len(seen_before)], seen_before)
+    # the caller's pool was never mutated
+    np.testing.assert_array_equal(
+        pool, np.asarray(C.exact_sample(m, 1000, jax.random.PRNGKey(3))))
+    assert np.all(np.isfinite(sim.run(2).err))
+
+
+def test_windowed_refit_tracks_drift_better_than_infinite_memory(
+        star_setup):
+    """After a large change-point, a sliding-window stream (which forgets
+    the stale regime) ends closer to the drifted truth than the
+    infinite-memory stream averaging both regimes."""
+    g, m, pool = star_setup
+    ts = np.asarray(m.theta)
+    fp = S.FaultPlan(drift=(S.DriftSpec(at=6, scale=1.0),))
+    kw = dict(scheme="diagonal", theta_star=ts,
+              arrivals=S.ArrivalSpec(rate=60.0), capacity=1024, faults=fp,
+              seed=4)
+    plain = S.StreamSimulator(g, pool, **kw).run(16)
+    windowed = S.StreamSimulator(g, pool, window=200, **kw).run(16)
+    assert float(windowed.err[-1]) < float(plain.err[-1])
+
+
+# ------------------------------------------------- window weight algebra
+def test_window_weights_shapes_and_composition():
+    buf = S.SampleBuffer(3, capacity=8)
+    buf.append(np.ones((6, 3), dtype=np.float32))
+    counts = np.array([5, 2, 0])
+    w = buf.window_weights(counts, window=3)
+    np.testing.assert_array_equal(w.sum(axis=1), [3, 2, 0])
+    np.testing.assert_array_equal(w[0], [0, 0, 1, 1, 1, 0, 0, 0])
+    d = buf.window_weights(counts, discount=0.5)
+    np.testing.assert_allclose(d[0, :5], [0.0625, 0.125, 0.25, 0.5, 1.0])
+    assert not d[0, 5:].any()
+    both = buf.window_weights(counts, window=2, discount=0.5)
+    np.testing.assert_allclose(both[0], [0, 0, 0, 0.5, 1.0, 0, 0, 0])
+    # plain call is exactly the prefix mask
+    np.testing.assert_array_equal(buf.window_weights(counts),
+                                  buf.prefix_masks(counts))
+
+
+def test_windowed_fit_equals_fit_on_window_rows(star_setup):
+    """A window-w node fit equals the plain fit on its last w rows."""
+    import jax.numpy as jnp
+    from repro.core.batched import fit_all_local_batched
+    g, m, pool = star_setup
+    est = S.StreamingEstimator(g, capacity=64, window=150)
+    est.ingest(pool[:400])
+    est.refit()
+    ref = fit_all_local_batched(g, jnp.asarray(pool[250:400]))
+    for i in (0, g.p - 1):
+        np.testing.assert_allclose(est.fits[i].theta, ref[i].theta,
+                                   atol=2e-4)
