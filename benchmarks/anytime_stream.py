@@ -209,6 +209,48 @@ def _run_hostile(rounds, rate):
         f"restored stream diverged from uninterrupted run " \
         f"({restore_maxdiff:.2e})"
     emit("stream_hostile_restore", 0.0, f"maxdiff {restore_maxdiff:.1e}")
+
+    # --- telemetry: the same hostile run, fully instrumented -------------
+    # The JSONL event log (BENCH_stream_trace.jsonl, uploaded as a CI
+    # artifact) must replay to EXACTLY the live network counters, and the
+    # recorded any-time timeline must equal the result's own err column.
+    import os
+
+    from repro.telemetry import (TelemetrySpec, read_events,
+                                 replay_network_counters)
+    from .util import REPO_ROOT
+    trace_path = os.path.join(REPO_ROOT, "BENCH_stream_trace.jsonl")
+    if os.path.exists(trace_path):
+        os.remove(trace_path)
+    tel_sim = S.StreamSimulator(
+        g, pool, scheme="trimmed_mean", theta_star=theta_star,
+        arrivals=S.ArrivalSpec(rate=float(rate)),
+        network=S.NetworkConfig(drop_prob=0.1, delay=1),
+        capacity=128, seed=21, faults=byz,
+        telemetry=TelemetrySpec(jsonl=trace_path))
+    tel_res = tel_sim.run(rounds)
+    t_rounds, t_err = tel_res.timeline("err")
+    assert np.array_equal(t_rounds, tel_res.rounds) \
+        and np.array_equal(t_err, tel_res.err), \
+        "telemetry err timeline diverged from the recorded trajectory"
+    live = tel_sim.net.counters_dict()
+    replayed = replay_network_counters(read_events(trace_path))
+    for key, val in live.items():
+        assert replayed[key] == val, \
+            (f"JSONL replay reconstructed {key}={replayed[key]}, live "
+             f"counter says {val}")
+    snap = tel_res.telemetry
+    rec["telemetry"] = {
+        "events": len(snap.events),
+        "fault_injections": int(snap.counters.get("fault.injections", 0)),
+        "robust_rejections": int(
+            snap.counters.get("combine.robust_rejections", 0)),
+        "scalars_sent_replayed": int(replayed["scalars_sent"]),
+        "trace_file": os.path.basename(trace_path),
+    }
+    emit("stream_hostile_telemetry", 0.0,
+         f"events {len(snap.events)} replay-exact "
+         f"scalars {replayed['scalars_sent']}")
     return rec
 
 

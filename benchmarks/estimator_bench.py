@@ -123,9 +123,19 @@ def bench_session_reuse(g, X):
     assert res_warm.new_compiles == 0, \
         (f"warm session fit on fresh same-shape data recompiled "
          f"{res_warm.new_compiles} bucket solvers; session reuse broken")
+    # the wall/compile split must be coherent: a cold fit spends most of
+    # its wall on compiling dispatches, a warm fit compiles nothing
+    assert 0.0 < res_cold.compile_s <= res_cold.wall_s, \
+        (f"cold fit compile_s {res_cold.compile_s!r} not within its wall "
+         f"{res_cold.wall_s!r}")
+    assert res_warm.compile_s == 0.0, \
+        (f"warm fit reported compile_s {res_warm.compile_s!r}; the "
+         f"compile/execute wall split is broken")
     return {
         "session_fit_cold_s": cold,
         "session_fit_warm_s": warm,
+        "session_fit_cold_compile_s": res_cold.compile_s,
+        "session_fit_cold_execute_s": cold - res_cold.compile_s,
         "session_reuse_speedup": cold / warm,
         "session_cold_compiles": res_cold.new_compiles,
         "session_warm_compiles": res_warm.new_compiles,

@@ -25,9 +25,10 @@ The legacy entry points (``repro.core.fit_all_local`` + ``combine``,
 ``admm_mple``, direct ``StreamingEstimator``/``StreamSimulator``
 construction) remain as thin shims over a default plan.
 """
+from ..telemetry import TelemetrySpec
 from .plan import MESH_POLICIES, Plan
 from .result import EstimateResult
 from .session import EstimationSession, compile_plan
 
 __all__ = ["Plan", "EstimationSession", "EstimateResult", "compile_plan",
-           "MESH_POLICIES"]
+           "MESH_POLICIES", "TelemetrySpec"]

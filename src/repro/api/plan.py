@@ -77,6 +77,12 @@ class Plan:
         hostile-network scenario ``session.simulate`` executes (crash
         schedules, Byzantine corruption, replay, parameter drift). Frozen
         and hashable like the plan itself.
+    telemetry : optional :class:`~repro.telemetry.TelemetrySpec` — turn on
+        the instrumentation layer (spans, metrics, JSONL event log) for
+        every verb of this plan's session and for simulators built from
+        it. None (the default) keeps the allocation-free
+        :data:`~repro.telemetry.NULL_RECORDER` on every hot path. Frozen
+        and serialized like ``faults``.
     stream_window / stream_discount : drift-tracking re-fit windows for
         the streaming verbs — keep only each node's most recent
         ``stream_window`` samples, and/or decay age-k samples by
@@ -99,6 +105,7 @@ class Plan:
     faults: Optional["FaultPlan"] = None
     stream_window: Optional[int] = None
     stream_discount: Optional[float] = None
+    telemetry: Optional["TelemetrySpec"] = None
 
     def __post_init__(self):
         if not isinstance(self.graph, Graph):
@@ -149,6 +156,15 @@ class Plan:
                 raise TypeError(
                     f"plan.faults must be a FaultPlan (or its to_dict "
                     f"form), got {type(self.faults).__name__}")
+        from ..telemetry.spec import TelemetrySpec
+        if self.telemetry is not None:
+            if isinstance(self.telemetry, dict):
+                object.__setattr__(self, "telemetry",
+                                   TelemetrySpec.from_dict(self.telemetry))
+            elif not isinstance(self.telemetry, TelemetrySpec):
+                raise TypeError(
+                    f"plan.telemetry must be a TelemetrySpec (or its "
+                    f"to_dict form), got {type(self.telemetry).__name__}")
         if self.stream_window is not None and int(self.stream_window) < 1:
             raise ValueError(f"stream_window must be >= 1 sample (None "
                              f"disables it), got {self.stream_window!r}")
@@ -201,6 +217,8 @@ class Plan:
                        else self.faults.to_dict()),
             "stream_window": self.stream_window,
             "stream_discount": self.stream_discount,
+            "telemetry": (None if self.telemetry is None
+                          else self.telemetry.to_dict()),
         }
 
     @classmethod
@@ -228,4 +246,5 @@ class Plan:
                            else int(d["stream_window"])),
             stream_discount=(None if d.get("stream_discount") is None
                              else float(d["stream_discount"])),
+            telemetry=d.get("telemetry"),
         )

@@ -34,7 +34,12 @@ class EstimateResult:
     n_samples       — rows of the sample matrix the verb consumed.
     score_norm      — ||grad pseudo-loglik(theta)|| over those samples;
                       the model-free convergence diagnostic.
-    wall_s          — wall-clock of the verb, compile time included.
+    wall_s          — wall-clock of the verb, compile time included
+                      (backward-compatible: still the total).
+    compile_s       — wall-clock spent in bucket-solver dispatches that
+                      triggered a compilation (measured around the
+                      first-dispatch path; 0.0 on a warm session), so
+                      warm-vs-cold comparisons can subtract it.
     new_compiles    — bucket-solver compilations this call triggered
                       (0 on a warm session; -1 if the jit-cache probe is
                       unavailable).
@@ -45,6 +50,10 @@ class EstimateResult:
     trajectory      — (admm_iters + 1, n_params) consensus iterates
                       (``joint`` only).
     primal_residual — (admm_iters,) rms primal residuals (``joint`` only).
+    telemetry       — :class:`~repro.telemetry.TelemetrySnapshot` of the
+                      verb's spans/metrics when the plan declares a
+                      :class:`~repro.telemetry.TelemetrySpec`; None when
+                      telemetry is off.
     """
 
     mode: str
@@ -58,6 +67,8 @@ class EstimateResult:
     comm_scalars: Dict[str, int]
     trajectory: Optional[np.ndarray] = None
     primal_residual: Optional[np.ndarray] = None
+    compile_s: float = 0.0
+    telemetry: Optional[object] = None
 
     def mse(self, theta_star: np.ndarray, free=None) -> float:
         """||theta - theta*||^2 over ``free`` (default: all) coordinates."""

@@ -37,6 +37,7 @@ from ..core.batched import (bucket_compile_count, degree_buckets,
                             fit_all_local_batched)
 from ..core.estimators import LocalFit
 from ..core.graphs import Graph
+from ..telemetry.recorder import make_recorder
 from .plan import Plan
 from .result import EstimateResult
 
@@ -97,6 +98,11 @@ class EstimationSession:
         self.shared_owner_slots = sum(
             len(own) for own in self.owners.values() if len(own) > 1)
         self.fit_calls = 0
+        #: the plan's telemetry recorder — the shared allocation-free
+        #: NULL_RECORDER unless the plan declares a TelemetrySpec; one
+        #: long-lived recorder per session, scoped per verb call via
+        #: mark()/snapshot()
+        self.recorder = make_recorder(plan.telemetry)
 
     # ----------------------------------------------------------- caching
     @classmethod
@@ -162,7 +168,7 @@ class EstimationSession:
 
     def fit_local(self, X, sample_weight=None, warm_start=None,
                   want_influence: Optional[bool] = None,
-                  theta_fixed=None) -> List[LocalFit]:
+                  theta_fixed=None, stats=None) -> List[LocalFit]:
         """Per-node local CL fits under this plan (the raw engine call the
         legacy ``fit_all_local`` shim routes through).
 
@@ -181,7 +187,8 @@ class EstimationSession:
             sample_weight=sample_weight, warm_start=warm_start,
             family=self.family, mesh=self.mesh,
             want_influence=(self.want_influence if want_influence is None
-                            else want_influence))
+                            else want_influence),
+            recorder=self.recorder, stats=stats)
 
     # -------------------------------------------------------------- verbs
     def fit(self, X, sample_weight=None, warm_start=None) -> EstimateResult:
@@ -191,28 +198,46 @@ class EstimationSession:
         solver compilations (the bench's ``session_reuse`` row and
         ``tests/api`` assert this).
         """
+        rec = self.recorder
+        mark = rec.mark()
         t0 = time.perf_counter()
         c0 = bucket_compile_count()
-        Xj = self._as_samples(X)
-        n = int(Xj.shape[0])
-        fits = self.fit_local(Xj, sample_weight=sample_weight,
-                              warm_start=warm_start)
-        combined = {
-            c.name: c.combine(self.graph, fits,
-                              include_singleton=self.plan.include_singleton,
-                              theta_fixed=self.theta_fixed,
-                              family=self.family)
-            for c in self.combiners}
-        theta = combined[self.plan.combiners[0]]
-        score = self._score_norm(theta, Xj, n)
+        stats = {"compile_s": 0.0}
+        with rec.span("fit"):
+            Xj = self._as_samples(X)
+            n = int(Xj.shape[0])
+            fits = self.fit_local(Xj, sample_weight=sample_weight,
+                                  warm_start=warm_start, stats=stats)
+
+            def _combine_one(c):
+                return c.combine(
+                    self.graph, fits,
+                    include_singleton=self.plan.include_singleton,
+                    theta_fixed=self.theta_fixed, family=self.family)
+
+            combined = {}
+            for c in self.combiners:
+                if rec.enabled:
+                    with rec.span("combine", scheme=c.name):
+                        combined[c.name] = _combine_one(c)
+                else:
+                    combined[c.name] = _combine_one(c)
+            theta = combined[self.plan.combiners[0]]
+            score = self._score_norm(theta, Xj, n)
         c1 = bucket_compile_count()
         self.fit_calls += 1
+        comm = self._one_step_comm(n)
+        if rec.enabled:
+            for scheme, cost in comm.items():
+                rec.gauge("comm.scalars_per_round", cost, scheme=scheme)
         return EstimateResult(
             mode="fit", theta=theta, combined=combined, fits=fits,
             n_samples=n, score_norm=score,
             wall_s=time.perf_counter() - t0,
+            compile_s=stats["compile_s"],
             new_compiles=(c1 - c0 if c0 >= 0 and c1 >= 0 else -1),
-            comm_scalars=self._one_step_comm(n))
+            comm_scalars=comm,
+            telemetry=rec.snapshot(mark) if rec.enabled else None)
 
     def stream(self, capacity: Optional[int] = None):
         """Streaming verb: a :class:`~repro.stream.online.StreamingEstimator`
@@ -227,7 +252,8 @@ class EstimationSession:
             n_iter=self.plan.n_iter, family=self.family, mesh=self.mesh,
             want_influence=self.want_influence,
             window=self.plan.stream_window,
-            discount=self.plan.stream_discount)
+            discount=self.plan.stream_discount,
+            recorder=self.recorder)
 
     def simulate(self, pool, **overrides):
         """An event-driven :class:`~repro.stream.simulator.StreamSimulator`
@@ -235,39 +261,49 @@ class EstimationSession:
         ``overrides`` win, including an explicit ``mesh=``."""
         from ..stream.simulator import StreamSimulator
         overrides.setdefault("mesh", self.mesh)
+        overrides.setdefault("telemetry", self.recorder)
         return StreamSimulator.from_plan(self.plan, pool, **overrides)
 
     def joint(self, X, sample_weight=None) -> EstimateResult:
         """Joint verb: ADMM MPLE (Sec. 3.2) through the batched proximal
         engine — one compiled solve per degree bucket per round, shared
         with ``fit``'s solver cache through the common engine."""
+        rec = self.recorder
+        mark = rec.mark()
         t0 = time.perf_counter()
         c0 = bucket_compile_count()
-        Xj = self._as_samples(X)
-        n = int(Xj.shape[0])
-        plan = self.plan
-        fits = None
-        if plan.admm_init != "zero":
-            fits = self.fit_local(Xj, sample_weight=sample_weight,
-                                  want_influence=False)
-        res = admm_mple_family(
-            self.graph, Xj, n_iters=plan.admm_iters, init=plan.admm_init,
-            fits=fits, include_singleton=plan.include_singleton,
-            theta_fixed=self.theta_fixed,
-            newton_iters=plan.admm_newton_iters, family=self.family,
-            mesh=self.mesh, sample_weight=sample_weight,
-            rho0=plan.admm_rho)
-        theta = res.trajectory[-1]
-        score = self._score_norm(theta, Xj, n)
+        stats = {"compile_s": 0.0}
+        with rec.span("joint"):
+            Xj = self._as_samples(X)
+            n = int(Xj.shape[0])
+            plan = self.plan
+            fits = None
+            if plan.admm_init != "zero":
+                fits = self.fit_local(Xj, sample_weight=sample_weight,
+                                      want_influence=False, stats=stats)
+            res = admm_mple_family(
+                self.graph, Xj, n_iters=plan.admm_iters,
+                init=plan.admm_init, fits=fits,
+                include_singleton=plan.include_singleton,
+                theta_fixed=self.theta_fixed,
+                newton_iters=plan.admm_newton_iters, family=self.family,
+                mesh=self.mesh, sample_weight=sample_weight,
+                rho0=plan.admm_rho, recorder=self.recorder, stats=stats)
+            theta = res.trajectory[-1]
+            score = self._score_norm(theta, Xj, n)
         c1 = bucket_compile_count()
         comm = plan.admm_iters * 2 * sum(len(b) for b in self.betas)
+        if rec.enabled:
+            rec.gauge("comm.scalars_per_round", comm, scheme="admm")
         return EstimateResult(
             mode="joint", theta=theta, combined={"admm": theta}, fits=fits,
             n_samples=n, score_norm=score,
             wall_s=time.perf_counter() - t0,
+            compile_s=stats["compile_s"],
             new_compiles=(c1 - c0 if c0 >= 0 and c1 >= 0 else -1),
             comm_scalars={"admm": comm},
-            trajectory=res.trajectory, primal_residual=res.primal_residual)
+            trajectory=res.trajectory, primal_residual=res.primal_residual,
+            telemetry=rec.snapshot(mark) if rec.enabled else None)
 
     def __repr__(self) -> str:
         return (f"EstimationSession(family={self.plan.family!r}, "

@@ -167,7 +167,8 @@ def admm_mple_family(graph: Graph, X, n_iters: int = 30,
                      theta_fixed: Optional[np.ndarray] = None,
                      newton_iters: int = 15, family=None,
                      mesh=None, sample_weight=None,
-                     rho0: float = 1.0) -> ADMMResult:
+                     rho0: float = 1.0, recorder=None,
+                     stats: Optional[dict] = None) -> ADMMResult:
     """Joint MPLE via ADMM, generalized over the model-family contract and
     run through the degree-bucketed batched proximal engine.
 
@@ -184,11 +185,19 @@ def admm_mple_family(graph: Graph, X, n_iters: int = 30,
     init: "zero" (theta_bar = 0, rho = rho0) or "uniform"/"diagonal"
     (theta_bar = the corresponding one-step consensus of ``fits``, rho =
     its weights — "uniform" scaled by ``rho0``), matching Fig. 3(c).
+
+    ``recorder`` / ``stats`` (see :func:`repro.core.batched.
+    fit_all_local_batched`): one ``admm_iter`` span per round with the rms
+    primal residual observed, prox compile/dispatch time accumulated into
+    ``stats``.
     """
     import jax.numpy as jnp
 
+    from ..telemetry.recorder import NULL_RECORDER
     from .batched import prox_update_batched
     from .families import ISING
+
+    rec = NULL_RECORDER if recorder is None else recorder
 
     fam = ISING if family is None else family
     n_params = fam.n_params(graph)
@@ -215,14 +224,17 @@ def admm_mple_family(graph: Graph, X, n_iters: int = 30,
 
     traj = [np.array(theta_bar, copy=True)]
     resid = []
-    for _ in range(n_iters):
+    for it in range(n_iters):
+        span = rec.span("admm_iter", it=it) if rec.enabled else None
+        if span is not None:
+            span.__enter__()
         # 1) batched local proximal updates (one solve per degree bucket)
         thetas = prox_update_batched(
             graph, X, theta_bar, lambdas, rhos, thetas0=thetas,
             include_singleton=include_singleton,
             theta_fixed=jnp.asarray(theta_fixed, X.dtype),
             sample_weight=sample_weight, n_iter=newton_iters,
-            family=fam, mesh=mesh)
+            family=fam, mesh=mesh, recorder=recorder, stats=stats)
         # 2) weighted linear consensus
         new_bar = np.array(theta_bar, copy=True)
         for a, own in owners.items():
@@ -242,6 +254,9 @@ def admm_mple_family(graph: Graph, X, n_iters: int = 30,
             cnt += len(b)
         resid.append(np.sqrt(r2 / max(cnt, 1)))
         traj.append(np.array(theta_bar, copy=True))
+        if span is not None:
+            rec.observe("admm.primal_residual", resid[-1], it=it)
+            span.__exit__(None, None, None)
 
     return ADMMResult(trajectory=np.stack(traj),
                       primal_residual=np.asarray(resid))

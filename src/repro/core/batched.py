@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -62,6 +63,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..kernels.cl.epilogues import get_epilogue
 from ..kernels.cl.ops import bucket_newton_stats_op
+from ..telemetry.recorder import NULL_RECORDER
 from .estimators import LocalFit
 from .families import ISING
 from .graphs import Graph
@@ -328,10 +330,13 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
     past it only bounces around the optimum, which is all the seed's fixed
     40-iteration schedule does after convergence.
 
-    Returns (W, H, J, V, S) with leading bucket dimension k and flat
+    Returns (W, H, J, V, S, I) with leading bucket dimension k and flat
     parameter dimension d*C (coordinate-major blocks); padded coordinates
     are exactly zero in W and carry a ``-1`` placeholder diagonal in the
-    Newton system. A node whose weights sum to zero (nothing observed yet)
+    Newton system. ``I`` is the (k,) Newton-iteration count the damped
+    solve actually used (bucket-wide — the while_loop stops when every
+    node's step converged — broadcast per node so it shards like the other
+    outputs). A node whose weights sum to zero (nothing observed yet)
     stays at W0 untouched by data: its gradient vanishes and the guarded
     denominator keeps it finite.
     """
@@ -394,7 +399,8 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
         delta = jnp.max(jnp.abs(step))
         return W - step, it + 1, delta
 
-    W, _, _ = jax.lax.while_loop(cond, newton_step, (W0, 0, jnp.inf))
+    W, iters, _ = jax.lax.while_loop(cond, newton_step, (W0, 0, jnp.inf))
+    I = jnp.full((k,), iters, dtype=jnp.int32)
 
     # sandwich diagnostics at W_hat (closed forms again; no autodiff).
     # Under 0/1 weights the masked-out samples' scores are zeroed, so their
@@ -415,7 +421,7 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
         # influence stack; a session whose combiners never request
         # "influence" skips materializing it (static branch)
         S = jnp.zeros((k, 0, dC), Zb.dtype)
-    return W, H, J, V, S
+    return W, H, J, V, S, I
 
 
 @functools.partial(jax.jit,
@@ -470,7 +476,7 @@ def _solve_bucket_sharded(X, nodes, nbrs, mask, offsets, W0, sw,
         body, mesh=mesh,
         in_specs=(P(), data, data, data, data, data,
                   data if weighted else P()),
-        out_specs=(data, data, data, data, data),
+        out_specs=(data, data, data, data, data, data),
         check_rep=False,
     )(X, nodes, nbrs, mask, offsets, W0, sw)
 
@@ -553,7 +559,9 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
                           sample_weight: Optional[jnp.ndarray] = None,
                           warm_start: Optional[Sequence] = None,
                           family=None, mesh=None,
-                          want_influence: bool = True) -> List[LocalFit]:
+                          want_influence: bool = True,
+                          recorder=None,
+                          stats: Optional[dict] = None) -> List[LocalFit]:
     """Fit all p local CL estimators via degree-bucketed batched solves.
 
     Drop-in replacement for the per-node loop: returns the same
@@ -583,9 +591,20 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
     influence stacks (``LocalFit.s`` comes back with zero rows) — only the
     Linear-Opt combiner reads them, and a compiled estimation session whose
     requested combiners never declare ``"influence"`` opts out.
+
+    Observability: ``recorder`` (a :mod:`repro.telemetry` recorder; the
+    allocation-free ``NULL_RECORDER`` when None) gets one ``bucket_solve``
+    span per degree bucket with Newton-iteration histograms; ``stats``
+    (a caller-provided dict) receives the compile-time split —
+    ``stats["compile_s"]`` accumulates the wall seconds of bucket
+    dispatches that triggered a compilation (the first-dispatch path) and
+    ``stats["dispatch_s"]`` the total dispatch wall. Both default to off
+    and cost nothing when unused.
     """
     if family is None:
         family = ISING
+    rec = NULL_RECORDER if recorder is None else recorder
+    track = stats is not None or rec.enabled
     C = family.block_dim
     if theta_fixed is None:
         theta_fixed = jnp.zeros(family.n_params(graph), X.dtype)
@@ -604,8 +623,15 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
         weighted = sample_weight is not None
         if sw is None:
             sw = jnp.ones((1, 1), X.dtype)   # placeholder, never read
+        if track:
+            c0 = bucket_compile_count()
+            t0 = time.perf_counter()
+        span = (rec.span("bucket_solve", deg_pad=b.deg_pad, k=k)
+                if rec.enabled else None)
+        if span is not None:
+            span.__enter__()
         if mesh is None:
-            W, H, J, V, S = _solve_bucket(
+            W, H, J, V, S, I = _solve_bucket(
                 X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
                 jnp.asarray(b.mask), offsets, W0, sw, include_singleton,
                 n_iter, weighted, warm_start is not None, family,
@@ -616,7 +642,7 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
                 shards, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
                 jnp.asarray(b.mask), offsets, W0)
             sw_ = _pad_bucket_rows(shards, sw)[0] if weighted else sw
-            W, H, J, V, S = _solve_bucket_sharded(
+            W, H, J, V, S, I = _solve_bucket_sharded(
                 X, nodes_, nbrs_, mask_, offsets_, W0_, sw_,
                 include_singleton, n_iter, weighted,
                 warm_start is not None, family, mesh,
@@ -624,6 +650,23 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
         W, H, J, V, S = (np.asarray(W)[:k], np.asarray(H)[:k],
                          np.asarray(J)[:k], np.asarray(V)[:k],
                          np.asarray(S)[:k])
+        if span is not None:
+            span.__exit__(None, None, None)
+        if track:
+            # the np.asarray conversions above block on the device work, so
+            # dt covers trace+compile+execute for a compiling dispatch
+            dt = time.perf_counter() - t0
+            c1 = bucket_compile_count()
+            compiled = c1 > c0 >= 0
+            if stats is not None:
+                stats["dispatch_s"] = stats.get("dispatch_s", 0.0) + dt
+                if compiled:
+                    stats["compile_s"] = stats.get("compile_s", 0.0) + dt
+            if rec.enabled:
+                rec.observe("engine.newton_iters", int(np.max(np.asarray(I)[:k])),
+                            deg_pad=b.deg_pad)
+                rec.observe("engine.bucket_dispatch_s", dt,
+                            deg_pad=b.deg_pad, compiled=compiled)
         degs = b.mask.sum(axis=1).astype(np.int64)
         for row, i in enumerate(b.nodes):
             i = int(i)
@@ -741,6 +784,19 @@ def _solve_bucket_prox_sharded(X, nodes, nbrs, mask, offsets, W0, sw, lam,
     )(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho, tbar)
 
 
+def prox_compile_count() -> int:
+    """Proximal-solver compilations (plain + mesh-sharded) — the ADMM twin
+    of :func:`bucket_compile_count`, used for the joint verb's
+    compile-time split. Returns -1 if the jit-cache probe is gone."""
+    total = 0
+    for fn in (_solve_bucket_prox, _solve_bucket_prox_sharded):
+        probe = getattr(fn, "_cache_size", None)
+        if not callable(probe):
+            return -1
+        total += int(probe())
+    return total
+
+
 def prox_update_batched(graph: Graph, X: jnp.ndarray,
                         theta_bar: np.ndarray,
                         lambdas: Sequence[np.ndarray],
@@ -750,7 +806,8 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
                         theta_fixed: Optional[jnp.ndarray] = None,
                         sample_weight: Optional[jnp.ndarray] = None,
                         n_iter: int = 15, family=None,
-                        mesh=None) -> List[np.ndarray]:
+                        mesh=None, recorder=None,
+                        stats: Optional[dict] = None) -> List[np.ndarray]:
     """Batched ADMM primal update across all nodes (one solve per bucket).
 
     Per-node inputs follow :func:`repro.core.admm.admm_mple`: ``lambdas`` /
@@ -766,9 +823,15 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
     ``family.beta`` block order), and the same ``mesh`` scale-out path
     (bucket nodes sharded along the mesh's ``data`` axis). Returns the
     updated per-node theta vectors.
+
+    ``recorder`` / ``stats`` mirror :func:`fit_all_local_batched`: one
+    ``prox_bucket_solve`` span per bucket, and ``stats["compile_s"]`` /
+    ``stats["dispatch_s"]`` accumulation keyed to the prox-solver caches.
     """
     if family is None:
         family = ISING
+    rec = NULL_RECORDER if recorder is None else recorder
+    track = stats is not None or rec.enabled
     C = family.block_dim
     if theta_fixed is None:
         theta_fixed = jnp.zeros(family.n_params(graph), X.dtype)
@@ -813,6 +876,13 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
         if sw is None:
             sw = jnp.ones((1, 1), X.dtype)
         offsets = node_tf[jnp.asarray(b.nodes)]
+        if track:
+            c0 = prox_compile_count()
+            t0 = time.perf_counter()
+        span = (rec.span("prox_bucket_solve", deg_pad=b.deg_pad, k=k)
+                if rec.enabled else None)
+        if span is not None:
+            span.__enter__()
         if mesh is None:
             W = _solve_bucket_prox(
                 X, jnp.asarray(b.nodes), jnp.asarray(b.nbrs),
@@ -831,6 +901,19 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
                 X, nodes_, nbrs_, mask_, offsets_, W0_, sw_, lam_, rho_,
                 tbar_, include_singleton, n_iter, weighted, family, mesh)
         W = np.asarray(W)[:len(b.nodes)]
+        if span is not None:
+            span.__exit__(None, None, None)
+        if track:
+            dt = time.perf_counter() - t0
+            c1 = prox_compile_count()
+            compiled = c1 > c0 >= 0
+            if stats is not None:
+                stats["dispatch_s"] = stats.get("dispatch_s", 0.0) + dt
+                if compiled:
+                    stats["compile_s"] = stats.get("compile_s", 0.0) + dt
+            if rec.enabled:
+                rec.observe("engine.prox_dispatch_s", dt,
+                            deg_pad=b.deg_pad, compiled=compiled)
         for row, i in enumerate(b.nodes):
             di = (lead + int(degs[row])) * C
             out[int(i)] = W[row, :di].copy()

@@ -116,6 +116,17 @@ class Combiner:
         raise NotImplementedError(
             f"combiner {self.name!r} is not a streamable one-step scheme")
 
+    def filter_mask(self, cands: List[Tuple[float, float]],
+                    own_index: Optional[int] = None
+                    ) -> Optional[np.ndarray]:
+        """(k,) boolean keep mask a *filtering* robust combiner would apply
+        to ``cands`` before averaging, or None when the strategy does not
+        reject candidates (linear and voting schemes select/weight instead
+        of discarding). The observability hook behind the streaming
+        simulator's robust-combiner rejection counters — it must match
+        what :meth:`combine_candidates` actually drops."""
+        return None
+
     # --------------------------------------------------------------- driver
     def combine(self, graph: Graph, fits, include_singleton: bool = True,
                 theta_fixed: Optional[np.ndarray] = None,
@@ -353,13 +364,17 @@ class TrimmedMeanCombiner(Combiner):
         anchor = np.argmax(~bad, axis=1)         # first sane owner = home
         return self._keep_mask(est, diag, bad, anchor).astype(np.float64)
 
-    def combine_candidates(self, cands, own_index=None):
+    def filter_mask(self, cands, own_index=None):
         est = np.array([[e for e, _ in cands]])
         var = np.array([[v for _, v in cands]])
         bad = ~np.isfinite(est) | ~np.isfinite(var)
         anchor = np.array([0 if own_index is None else int(own_index)])
-        keep = self._keep_mask(est, var, bad, anchor)[0]
-        return float(np.mean(np.asarray(est[0])[keep]))
+        return self._keep_mask(est, var, bad, anchor)[0]
+
+    def combine_candidates(self, cands, own_index=None):
+        keep = self.filter_mask(cands, own_index=own_index)
+        est = np.array([e for e, _ in cands])
+        return float(np.mean(est[keep]))
 
 
 class KrumCombiner(Combiner):

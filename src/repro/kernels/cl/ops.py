@@ -1,17 +1,33 @@
 """Jit'd public wrappers: pick the compiled Pallas kernel on TPU, the
 pure-jnp reference elsewhere (CPU dry-runs / tests use interpret mode
-explicitly)."""
+explicitly).
+
+Every dispatcher tags the innermost active telemetry recorder (see
+:func:`repro.telemetry.record_kernel_trace`) with the kernel kind, the
+chosen backend, and the operand shape. The calls run at *trace time* —
+inside jit they fire once per compiled shape, so a telemetry log shows
+exactly which kernels compiled for which shapes, at zero steady-state
+cost; with telemetry off the hook is a single falsy list check.
+"""
 import jax
 
+from ...telemetry.recorder import record_kernel_trace
 from .kernel import cl_score_channels, ising_cl_logits
 from .newton import bucket_newton_stats, bucket_newton_stats_ref
 from .ref import cl_score_channels_ref, cl_score_ref, ising_cl_logits_ref
 from .score import cl_score
 
 
+def _backend_tag(use_pallas: bool) -> str:
+    return "pallas" if use_pallas else "jnp_ref"
+
+
 def conditional_logits_op(x, theta, mask, bias, *, use_pallas=None):
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    record_kernel_trace("kernel.conditional_logits",
+                        backend=_backend_tag(use_pallas),
+                        shape=tuple(x.shape))
     if use_pallas:
         return ising_cl_logits(x, theta, mask, bias, interpret=False)
     return ising_cl_logits_ref(x, theta, mask, bias)
@@ -26,6 +42,9 @@ def score_stats_op(x, theta, mask, bias, *, kind: str = "ising",
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    record_kernel_trace("kernel.score_stats", kind=kind,
+                        backend=_backend_tag(use_pallas),
+                        shape=tuple(x.shape))
     if use_pallas:
         return cl_score(x, theta, mask, bias, kind=kind, interpret=False)
     return cl_score_ref(x, theta, mask, bias, kind=kind)
@@ -37,6 +56,9 @@ def score_stats_channels_op(F, theta, mask, bias, *, kind: str,
     :func:`score_stats_op`."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    record_kernel_trace("kernel.score_stats_channels", kind=kind,
+                        backend=_backend_tag(use_pallas),
+                        shape=tuple(F.shape))
     if use_pallas:
         return cl_score_channels(F, theta, mask, bias, kind=kind,
                                  interpret=False)
@@ -50,6 +72,9 @@ def bucket_newton_stats_op(kind, Zb, base, xi, W, sw=None, *,
     trace-time constant."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    record_kernel_trace("kernel.bucket_newton_stats", kind=kind,
+                        backend=_backend_tag(use_pallas),
+                        shape=tuple(Zb.shape))
     if use_pallas:
         return bucket_newton_stats(kind, Zb, base, xi, W, sw,
                                    interpret=False)

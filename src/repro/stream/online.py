@@ -37,6 +37,7 @@ import numpy as np
 
 from ..core.batched import fit_all_local_batched
 from ..core.consensus import TRUST_RADIUS
+from ..telemetry.recorder import NULL_RECORDER
 from ..core.estimators import LocalFit
 from ..core.families import ISING
 from ..core.graphs import Graph
@@ -67,7 +68,8 @@ class StreamingEstimator:
                  family=None, mesh=None,
                  want_influence: bool = True,
                  window: Optional[int] = None,
-                 discount: Optional[float] = None) -> None:
+                 discount: Optional[float] = None,
+                 recorder=None) -> None:
         if window is not None and int(window) < 1:
             raise ValueError(
                 f"sliding window must be >= 1 sample (None disables it), "
@@ -79,6 +81,10 @@ class StreamingEstimator:
         #: drift-tracking re-fit windows — see SampleBuffer.window_weights
         self.window = None if window is None else int(window)
         self.discount = None if discount is None else float(discount)
+        #: telemetry recorder (see :mod:`repro.telemetry`); the shared
+        #: allocation-free NULL_RECORDER unless an owner (session or
+        #: simulator) injects a live one
+        self.recorder = NULL_RECORDER if recorder is None else recorder
         self.graph = graph
         self.family = ISING if family is None else family
         self.mesh = mesh
@@ -211,18 +217,28 @@ class StreamingEstimator:
         if self.fits is not None and np.array_equal(self.counts,
                                                     self._fit_counts):
             return self.fits
+        rec = self.recorder
         masks = self.buffer.window_weights(self.counts, self.window,
                                            self.discount)
-        fits = fit_all_local_batched(
-            self.graph, jnp.asarray(self.buffer.data),
-            include_singleton=self.include_singleton,
-            theta_fixed=jnp.asarray(self.theta_fixed,
-                                    dtype=self.buffer.data.dtype),
-            n_iter=self.n_iter,
-            sample_weight=jnp.asarray(masks),
-            warm_start=self._warm,
-            family=self.family, mesh=self.mesh,
-            want_influence=self.want_influence)
+        with rec.span("refit"):
+            fits = fit_all_local_batched(
+                self.graph, jnp.asarray(self.buffer.data),
+                include_singleton=self.include_singleton,
+                theta_fixed=jnp.asarray(self.theta_fixed,
+                                        dtype=self.buffer.data.dtype),
+                n_iter=self.n_iter,
+                sample_weight=jnp.asarray(masks),
+                warm_start=self._warm,
+                family=self.family, mesh=self.mesh,
+                want_influence=self.want_influence,
+                recorder=rec)
+        if rec.enabled:
+            # buffer occupancy + window effective counts at this re-fit
+            rec.gauge("stream.buffer_rows", int(self.buffer.n))
+            rec.gauge("stream.buffer_capacity",
+                      int(self.buffer.data.shape[0]))
+            rec.gauge("stream.effective_count_mean",
+                      float(self.effective_counts.mean()))
         changed = self.counts != self._fit_counts
         self.versions = self.versions + changed.astype(np.int64)
         self._fit_counts = self.counts.copy()

@@ -32,6 +32,7 @@ from ..core.combiners import (TRUST_RADIUS, get_combiner,
                               streamable_combiners)
 from ..core.graphs import Graph
 from .costs import admm_message_scalars, one_step_message_scalars
+from ..telemetry.recorder import make_recorder
 from .faults import FaultPlan
 from .network import (Network, NetworkConfig, rng_state_from_json,
                       rng_state_to_json)
@@ -93,6 +94,35 @@ class StreamResult:
     #: pre-data estimate — theta_fixed for a fresh simulator); answers
     #: any-time queries earlier than the first recorded round
     initial: Optional[np.ndarray] = None
+    #: :class:`repro.telemetry.TelemetrySnapshot` of the run's events when
+    #: the simulator carried a live recorder, else None
+    telemetry: Optional[object] = None
+
+    #: recorded columns addressable through :meth:`timeline`
+    _COLUMNS = ("err", "scalars_sent", "samples_seen", "samples_total",
+                "staleness", "score_norm")
+
+    def timeline(self, metric: str) -> Tuple[np.ndarray, np.ndarray]:
+        """(rounds, values) any-time curve for one recorded metric.
+
+        Resolution order: the telemetry snapshot's ``point`` events when a
+        live recorder captured them (byte-identical to a JSONL replay),
+        falling back to the result's own recorded columns
+        (``err`` / ``scalars_sent`` / ``samples_seen`` / ``samples_total``
+        / ``staleness`` / ``score_norm``)."""
+        if self.telemetry is not None and metric in self.telemetry.points:
+            return self.telemetry.timeline(metric)
+        if metric not in self._COLUMNS:
+            raise KeyError(
+                f"unknown timeline metric {metric!r}; have "
+                f"{sorted(self._COLUMNS)}")
+        col = getattr(self, metric)
+        if col is None:
+            raise KeyError(
+                f"metric {metric!r} was not recorded for this run "
+                f"(pass theta_star / record_score to the simulator)")
+        return (np.asarray(self.rounds, dtype=np.int64),
+                np.asarray(col, dtype=np.float64))
 
     def estimate_at(self, t: int) -> np.ndarray:
         """Combined theta as of round ``t``: the last snapshot at or before
@@ -150,7 +180,8 @@ class StreamSimulator:
                  seed: int = 0, family=None, mesh=None,
                  faults: Optional[FaultPlan] = None,
                  window: Optional[int] = None,
-                 discount: Optional[float] = None) -> None:
+                 discount: Optional[float] = None,
+                 telemetry=None) -> None:
         if estimator not in ("one_step", "admm"):
             raise ValueError(f"unknown estimator {estimator!r}")
         streamable = _one_step_schemes()
@@ -162,6 +193,11 @@ class StreamSimulator:
             raise TypeError(f"faults must be a FaultPlan, "
                             f"got {type(faults).__name__}")
         from ..core.families import ISING
+        #: telemetry recorder threaded through the estimator bank, the
+        #: network, and the round loop (a TelemetrySpec, an existing
+        #: Recorder — e.g. the owning session's — or None for the shared
+        #: zero-overhead null)
+        self.recorder = make_recorder(telemetry)
         self.combiner = get_combiner(scheme)
         #: unit weights are implicit and never transmitted (uniform)
         self._sends_weight = self.combiner.scalars_per_shared_param >= 2
@@ -217,11 +253,13 @@ class StreamSimulator:
                                       capacity=capacity, n_iter=newton_iters,
                                       family=self.family, mesh=mesh,
                                       want_influence=False,
-                                      window=window, discount=discount)
+                                      window=window, discount=discount,
+                                      recorder=self.recorder)
         links = [(i, j) for (a, b) in graph.edges for (i, j) in ((a, b),
                                                                 (b, a))]
         self.net = Network(links, network or NetworkConfig(),
-                           rng=np.random.RandomState(s_net))
+                           rng=np.random.RandomState(s_net),
+                           recorder=self.recorder)
         # params shared between the endpoints of each directed link: exactly
         # the link's own edge-coupling block (beta_i ∩ beta_j, Sec. 3.1)
         self._shared: Dict[Tuple[int, int], List[int]] = {}
@@ -286,7 +324,7 @@ class StreamSimulator:
             admm_rho=plan.admm_rho, capacity=plan.capacity,
             family=plan.family_instance, mesh=mesh,
             faults=plan.faults, window=plan.stream_window,
-            discount=plan.stream_discount)
+            discount=plan.stream_discount, telemetry=plan.telemetry)
         kwargs.update(overrides)
         return cls(plan.graph, pool, **kwargs)
 
@@ -319,28 +357,43 @@ class StreamSimulator:
     def step(self) -> None:
         rnd = self.round
         p = self.graph.p
-        if self.faults is not None:
-            spec = self.faults.drift_at(rnd)
-            if spec is not None:
-                self._apply_drift(spec)
-        # 1. arrivals: reveal new environment samples to each sensor
-        # (drawn for every node every round so the arrival stream does not
-        # depend on the crash schedule; a crashed sensor just samples none)
-        draw = self.arrivals.draw(self._arr_rng, p)
-        down = self._down_now(rnd)
-        draw = np.where(down, 0, draw)
-        target = np.minimum(self.est.counts + draw, len(self.pool))
-        need = int(target.max()) if p else 0
-        if need > self._fed:
-            self.est.extend_pool(self.pool[self._fed: need])
-            self._fed = need
-        self.est.advance(target)
+        rec = self.recorder
+        span = rec.span("round", round=rnd) if rec.enabled else None
+        if span is not None:
+            span.__enter__()
+        try:
+            if self.faults is not None:
+                spec = self.faults.drift_at(rnd)
+                if spec is not None:
+                    self._apply_drift(spec)
+                    if rec.enabled:
+                        rec.inc("fault.injections", 1, kind="drift",
+                                round=rnd, at=spec.at)
+            # 1. arrivals: reveal new environment samples to each sensor
+            # (drawn for every node every round so the arrival stream does
+            # not depend on the crash schedule; a crashed sensor just
+            # samples none)
+            draw = self.arrivals.draw(self._arr_rng, p)
+            down = self._down_now(rnd)
+            draw = np.where(down, 0, draw)
+            if rec.enabled and self.faults is not None \
+                    and self.faults.crashes:
+                rec.gauge("fault.nodes_down", int(down.sum()), round=rnd)
+            target = np.minimum(self.est.counts + draw, len(self.pool))
+            need = int(target.max()) if p else 0
+            if need > self._fed:
+                self.est.extend_pool(self.pool[self._fed: need])
+                self._fed = need
+            self.est.advance(target)
 
-        if self.estimator == "one_step":
-            self._step_one_step(rnd, down)
-        else:
-            self._step_admm(rnd, down)
-        self.round += 1
+            if self.estimator == "one_step":
+                self._step_one_step(rnd, down)
+            else:
+                self._step_admm(rnd, down)
+            self.round += 1
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
 
     def _corrupt_vals(self, spec, vals: Dict) -> Dict:
         """Byzantine outbound corruption of one message's estimates. The
@@ -397,6 +450,10 @@ class StreamSimulator:
                     if self.faults is not None else None)
             if spec is not None:
                 vals = self._corrupt_vals(spec, vals)
+                if self.recorder.enabled:
+                    self.recorder.inc("fault.injections", 1,
+                                      kind="byzantine", node=i,
+                                      attack=spec.kind, round=rnd)
             payload = {"vals": vals, "version": int(self.est.versions[i]),
                        "sent_round": rnd}
             n_scal = one_step_message_scalars(len(shared), self.scheme)
@@ -412,6 +469,10 @@ class StreamSimulator:
                         and self._fault_rng.rand() < replay.prob:
                     self.net.send(rnd, i, j, prev, n_scal,
                                   extra_delay=replay.delay)
+                    if self.recorder.enabled:
+                        self.recorder.inc("fault.injections", 1,
+                                          kind="replay", src=i, dst=j,
+                                          round=rnd)
                 self._last_payload[(i, j)] = payload
         # 4. deliveries update the receiver's view of its peers
         self._deliver_views(rnd)
@@ -449,6 +510,10 @@ class StreamSimulator:
                     if self.faults is not None else None)
             if spec is not None:
                 vals = self._corrupt_vals(spec, vals)
+                if self.recorder.enabled:
+                    self.recorder.inc("fault.injections", 1,
+                                      kind="byzantine", node=i,
+                                      attack=spec.kind, round=rnd)
             payload = {"vals": vals, "version": rnd, "sent_round": rnd}
             self.net.send(rnd, i, j, payload,
                           admm_message_scalars(len(shared)))
@@ -508,6 +573,8 @@ class StreamSimulator:
             return theta
         eff = self.est.effective_counts
         anchored = getattr(self.combiner, "anchored", False)
+        rec = self.recorder
+        guard_rej = robust_rej = 0
         for a, own in self._owners.items():
             home = min(node for node, _ in own)
             raw = []
@@ -537,6 +604,8 @@ class StreamSimulator:
                     if is_own:
                         own_index = len(cands)
                     cands.append((e, max(v, 1e-12)))
+                else:
+                    guard_rej += 1
             if not cands:
                 continue
             # receiver-side fusion dispatches through the combiner strategy;
@@ -546,8 +615,21 @@ class StreamSimulator:
             if anchored:
                 theta[a] = self.combiner.combine_candidates(
                     cands, own_index=own_index)
+                if rec.enabled:
+                    mask = self.combiner.filter_mask(
+                        cands, own_index=own_index)
+                    if mask is not None:
+                        robust_rej += len(cands) - int(
+                            np.count_nonzero(mask))
             else:
                 theta[a] = self.combiner.combine_candidates(cands)
+        if rec.enabled:
+            if guard_rej:
+                rec.inc("combine.guard_rejections", guard_rej,
+                        round=self.round)
+            if robust_rej:
+                rec.inc("combine.robust_rejections", robust_rej,
+                        round=self.round)
         return theta
 
     def mean_staleness(self) -> float:
@@ -665,25 +747,48 @@ class StreamSimulator:
         # fresh simulator this is theta_fixed; StreamResult.estimate_at
         # answers queries earlier than the first recorded round with it
         initial = self.current_estimate()
-        recs: List[dict] = []
-        for r in range(rounds):
-            self.step()
-            if (r + 1) % record_every == 0 or r == rounds - 1:
-                theta = self.current_estimate()
-                rec = {
-                    "round": self.round,
-                    "theta": theta,
-                    "seen": float(self.est.counts.mean()),
-                    "total": int(self.est.counts.sum()),
-                    "scalars": int(self.net.scalars_sent),
-                    "stale": self.mean_staleness(),
-                }
-                if self.theta_star is not None:
-                    d = (theta - self.theta_star)[self.free]
-                    rec["err"] = float(d @ d)
-                if record_score:
-                    rec["score"] = self.est.score_norm(theta)
-                recs.append(rec)
+        tel = self.recorder
+        mark = tel.mark()
+        span = tel.span("stream", rounds=rounds) if tel.enabled else None
+        if span is not None:
+            span.__enter__()
+        try:
+            recs: List[dict] = []
+            for r in range(rounds):
+                self.step()
+                if (r + 1) % record_every == 0 or r == rounds - 1:
+                    theta = self.current_estimate()
+                    rec = {
+                        "round": self.round,
+                        "theta": theta,
+                        "seen": float(self.est.counts.mean()),
+                        "total": int(self.est.counts.sum()),
+                        "scalars": int(self.net.scalars_sent),
+                        "stale": self.mean_staleness(),
+                    }
+                    if self.theta_star is not None:
+                        d = (theta - self.theta_star)[self.free]
+                        rec["err"] = float(d @ d)
+                    if record_score:
+                        rec["score"] = self.est.score_norm(theta)
+                    recs.append(rec)
+                    if tel.enabled:
+                        # any-time timeline samples: same values, same
+                        # rounds as the recorded columns, so timeline()
+                        # from a snapshot or a JSONL replay is exact
+                        tel.point("scalars_sent", self.round,
+                                  rec["scalars"])
+                        tel.point("samples_seen", self.round, rec["seen"])
+                        tel.point("staleness", self.round, rec["stale"])
+                        if "err" in rec:
+                            tel.point("err", self.round, rec["err"])
+                        if "score" in rec:
+                            tel.point("score_norm", self.round,
+                                      rec["score"])
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
+        tel.flush()
         return StreamResult(
             rounds=np.array([r["round"] for r in recs]),
             theta=np.stack([r["theta"] for r in recs]),
@@ -695,4 +800,5 @@ class StreamSimulator:
             score_norm=(np.array([r["score"] for r in recs])
                         if record_score else None),
             staleness=np.array([r["stale"] for r in recs]),
-            initial=initial)
+            initial=initial,
+            telemetry=tel.snapshot(mark) if tel.enabled else None)

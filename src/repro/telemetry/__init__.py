@@ -1,0 +1,31 @@
+"""Telemetry: structured spans, a metrics registry, and pluggable sinks.
+
+The observability substrate for the estimation stack. A frozen
+:class:`TelemetrySpec` on a :class:`~repro.api.plan.Plan` turns recording
+on; the default is the shared :data:`NULL_RECORDER`, whose every method is
+a no-op so instrumented hot paths stay allocation-free and bit-identical
+when telemetry is off.
+
+* :class:`Recorder` — hierarchical spans (wall time + bucket-solver
+  compile-count deltas), counters/gauges/histograms, per-round timeline
+  points, and trace-time kernel tags.
+* sinks — every event lands in the in-memory aggregator (exposed as
+  ``EstimateResult.telemetry`` / ``StreamResult.timeline(metric)``) and,
+  when ``TelemetrySpec.jsonl`` names a path, in an append-only JSONL
+  event log.
+* :mod:`~repro.telemetry.replay` — reconstructs the exact comm accounting
+  (the :class:`~repro.stream.network.Network` counters) from a JSONL log.
+"""
+from .recorder import (NULL_RECORDER, NullRecorder, Recorder,
+                       TelemetrySnapshot, make_recorder, record_kernel_trace)
+from .replay import (read_events, replay_comm_scalars,
+                     replay_network_counters, timeline_from_events)
+from .sinks import JsonlSink, read_jsonl
+from .spec import TelemetrySpec
+
+__all__ = [
+    "TelemetrySpec", "Recorder", "NullRecorder", "NULL_RECORDER",
+    "TelemetrySnapshot", "make_recorder", "record_kernel_trace",
+    "JsonlSink", "read_jsonl", "read_events", "replay_network_counters",
+    "replay_comm_scalars", "timeline_from_events",
+]

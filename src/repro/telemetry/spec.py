@@ -1,0 +1,55 @@
+"""The frozen, serializable telemetry declaration a :class:`Plan` carries.
+
+Like :class:`~repro.stream.faults.FaultPlan`, a :class:`TelemetrySpec` is a
+plain hashable value object: it rides on the (frozen, hashable) plan, keys
+session caches, and round-trips exactly through ``to_dict``/``from_dict``
+so plans with telemetry still serialize into configs and benchmark JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Declarative telemetry configuration.
+
+    spans — record hierarchical spans (``fit`` → bucket solve → kernel
+        dispatch; ``stream`` → round → receive/refit/combine; ``joint`` →
+        ADMM iteration) with wall time and compile-count deltas.
+    metrics — record counters/gauges/histograms (comm scalars by scheme,
+        buffer occupancy, window effective counts, fault injections fired,
+        robust-combiner rejections, per-bucket Newton iterations).
+    jsonl — path of an append-only JSONL event log (None = in-memory
+        only). Replaying the log reconstructs the exact comm accounting
+        (see :mod:`repro.telemetry.replay`).
+    profile_dir — when set, activate a ``jax.profiler`` trace around the
+        outermost span of each instrumented verb (compiled regions show up
+        in the profile); silently skipped if the profiler is unavailable.
+    """
+
+    spans: bool = True
+    metrics: bool = True
+    jsonl: Optional[str] = None
+    profile_dir: Optional[str] = None
+
+    def __post_init__(self):
+        for field in ("jsonl", "profile_dir"):
+            v = getattr(self, field)
+            if v is not None and not isinstance(v, str):
+                raise TypeError(f"TelemetrySpec.{field} must be a path "
+                                f"string or None, got {type(v).__name__}")
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """Plain-JSON form; exact inverse of :meth:`from_dict`."""
+        return {"spans": self.spans, "metrics": self.metrics,
+                "jsonl": self.jsonl, "profile_dir": self.profile_dir}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TelemetrySpec":
+        return cls(spans=bool(d.get("spans", True)),
+                   metrics=bool(d.get("metrics", True)),
+                   jsonl=d.get("jsonl"),
+                   profile_dir=d.get("profile_dir"))

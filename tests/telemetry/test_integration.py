@@ -1,0 +1,207 @@
+"""Telemetry integration: session verbs, streaming, and exact JSONL replay.
+
+The three contracts the observability layer must keep:
+
+* **off == invisible** — with no ``telemetry`` on the plan every numeric
+  output is bit-identical to the uninstrumented path and nothing is
+  attached to results;
+* **on == faithful** — ``StreamResult.timeline("err")`` equals the
+  recorded error column, and replaying the JSONL event log reconstructs
+  the network's live bandwidth counters exactly (lossy + Byzantine +
+  replay faults included);
+* **compile split** — ``EstimateResult.wall_s`` still means total wall
+  (backward compatible) while ``compile_s`` isolates the compiling
+  dispatches: positive on a cold fit, exactly 0.0 warm.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as A
+from repro.core.batched import clear_bucket_solver_caches
+from repro.core.families import ISING
+from repro.core.graphs import chain_graph, star_graph
+from repro.stream.faults import ByzantineSpec, FaultPlan, ReplaySpec
+from repro.stream.network import NetworkConfig
+from repro.stream.simulator import ArrivalSpec, StreamSimulator
+from repro.telemetry import (TelemetrySpec, read_events,
+                             replay_network_counters)
+
+
+@pytest.fixture(scope="module")
+def chain_data():
+    g = chain_graph(6)
+    theta = np.full(ISING.n_params(g), 0.25)
+    X = np.asarray(ISING.exact_sample(g, theta, 400, jax.random.PRNGKey(1)))
+    return g, theta, X
+
+
+# ----------------------------------------------------------------- session
+def test_fit_bit_identical_with_telemetry(chain_data):
+    g, _, X = chain_data
+    on = A.Plan(graph=g, combiners=("uniform", "diagonal"),
+                telemetry=TelemetrySpec()).session().fit(X)
+    off = A.Plan(graph=g, combiners=("uniform", "diagonal")).session().fit(X)
+    np.testing.assert_array_equal(on.theta, off.theta)
+    for scheme in on.combined:
+        np.testing.assert_array_equal(on.combined[scheme],
+                                      off.combined[scheme])
+    assert off.telemetry is None
+    assert on.telemetry is not None
+
+
+def test_fit_snapshot_spans_and_kernel_tags(chain_data):
+    g, _, X = chain_data
+    sess = A.Plan(graph=g, combiners=("uniform",),
+                  telemetry=TelemetrySpec()).session()
+    clear_bucket_solver_caches()
+    res = sess.fit(X)
+    snap = res.telemetry
+    assert "fit" in snap.spans
+    assert "fit/bucket_solve" in snap.spans
+    assert "fit/combine" in snap.spans
+    assert snap.spans["fit"]["new_compiles"] == res.new_compiles > 0
+    # trace-time kernel tags landed while the bucket solvers compiled
+    kernels = [e for e in snap.events if e["kind"] == "event"
+               and e["name"].startswith("kernel.")]
+    assert kernels, "expected trace-time kernel dispatch events"
+    assert all(e["tags"]["backend"] in ("pallas", "jnp_ref")
+               for e in kernels)
+    # per-bucket Newton iteration counts observed
+    assert snap.histograms["engine.newton_iters"]
+    # comm scalars gauged per requested scheme
+    assert "comm.scalars_per_round" in snap.gauges
+
+
+def test_compile_split_cold_then_warm(chain_data):
+    g, _, X = chain_data
+    clear_bucket_solver_caches()
+    sess = A.Plan(graph=g, combiners=("diagonal",),
+                  telemetry=TelemetrySpec()).session()
+    cold = sess.fit(X)
+    assert 0.0 < cold.compile_s <= cold.wall_s
+    warm = sess.fit(np.ascontiguousarray(X[::-1]))
+    assert warm.compile_s == 0.0
+    assert warm.new_compiles == 0
+
+
+def test_compile_split_tracked_without_telemetry(chain_data):
+    """The wall/compile split is measured by the stats dict, not the
+    recorder — a plain plan still reports it."""
+    g, _, X = chain_data
+    clear_bucket_solver_caches()
+    sess = A.Plan(graph=g, combiners=("diagonal",)).session()
+    cold = sess.fit(X)
+    assert 0.0 < cold.compile_s <= cold.wall_s
+    assert cold.telemetry is None
+
+
+def test_joint_spans(chain_data):
+    g, _, X = chain_data
+    res = A.Plan(graph=g, combiners=("diagonal",), admm_iters=3,
+                 telemetry=TelemetrySpec()).session().joint(X)
+    snap = res.telemetry
+    assert "joint" in snap.spans
+    assert snap.spans["joint/admm_iter"]["count"] == 3
+    assert len(snap.histograms["admm.primal_residual"]) == 3
+    assert res.compile_s > 0.0
+
+
+def test_plan_serializes_telemetry(chain_data):
+    g, _, _ = chain_data
+    plan = A.Plan(graph=g, combiners=("uniform",),
+                  telemetry=TelemetrySpec(metrics=False,
+                                          jsonl="/tmp/t.jsonl"))
+    again = A.Plan.from_dict(plan.to_dict())
+    assert again == plan
+    assert again.telemetry == plan.telemetry
+    with pytest.raises(TypeError, match="telemetry"):
+        A.Plan(graph=g, combiners=("uniform",), telemetry="yes")
+
+
+# ------------------------------------------------------------------ stream
+def _hostile_sim(pool, theta_star, g, telemetry=None, jsonl=None):
+    faults = FaultPlan(
+        byzantine=(ByzantineSpec(node=4, kind="sign_flip", start=1),),
+        replay=ReplaySpec(prob=0.4, delay=2))
+    spec = telemetry
+    if spec is None and jsonl is not None:
+        spec = TelemetrySpec(jsonl=jsonl)
+    return StreamSimulator(
+        g, pool, scheme="trimmed_mean", theta_star=theta_star,
+        arrivals=ArrivalSpec(rate=8.0),
+        network=NetworkConfig(drop_prob=0.25, delay=1),
+        capacity=64, seed=5, faults=faults, telemetry=spec)
+
+
+@pytest.fixture(scope="module")
+def star_pool():
+    g = star_graph(5)
+    theta_star = np.full(ISING.n_params(g), 0.3)
+    pool = np.asarray(ISING.exact_sample(g, theta_star, 400,
+                                         jax.random.PRNGKey(2)))
+    return g, theta_star, pool
+
+
+def test_stream_timeline_matches_recorded_columns(star_pool, tmp_path):
+    g, theta_star, pool = star_pool
+    sim = _hostile_sim(pool, theta_star, g,
+                       jsonl=os.path.join(tmp_path, "t.jsonl"))
+    res = sim.run(6, record_every=2)
+    rounds, err = res.timeline("err")
+    np.testing.assert_array_equal(rounds, res.rounds)
+    np.testing.assert_array_equal(err, res.err)
+    _, scal = res.timeline("scalars_sent")
+    np.testing.assert_array_equal(scal.astype(np.int64), res.scalars_sent)
+    _, stale = res.timeline("staleness")
+    np.testing.assert_array_equal(stale, res.staleness)
+    # observability counters fired under the hostile plan
+    snap = res.telemetry
+    assert snap.counters.get("fault.injections", 0) > 0
+    assert "stream/round/refit" in snap.spans
+
+
+def test_stream_run_bit_identical_with_telemetry(star_pool, tmp_path):
+    g, theta_star, pool = star_pool
+    on = _hostile_sim(pool, theta_star, g,
+                      jsonl=os.path.join(tmp_path, "t.jsonl")).run(5)
+    off = _hostile_sim(pool, theta_star, g).run(5)
+    np.testing.assert_array_equal(on.theta, off.theta)
+    np.testing.assert_array_equal(on.scalars_sent, off.scalars_sent)
+    assert off.telemetry is None
+    # the fallback timeline still answers from the recorded columns
+    rounds, err = off.timeline("err")
+    np.testing.assert_array_equal(err, off.err)
+    with pytest.raises(KeyError, match="unknown timeline"):
+        off.timeline("nonsense")
+
+
+def test_jsonl_replay_reconstructs_live_counters(star_pool, tmp_path):
+    g, theta_star, pool = star_pool
+    path = os.path.join(tmp_path, "replay.jsonl")
+    sim = _hostile_sim(pool, theta_star, g, jsonl=path)
+    sim.run(6)
+    replayed = replay_network_counters(read_events(path))
+    live = sim.net.counters_dict()
+    for key, val in live.items():
+        assert replayed[key] == val, (key, replayed[key], val)
+    assert replayed["in_flight"] == sim.net.in_flight
+    assert replayed["scalars_in_flight"] == sim.net.scalars_in_flight
+    # conservation holds in the replayed ledger too
+    assert replayed["scalars_sent"] == (replayed["scalars_delivered"]
+                                        + replayed["scalars_dropped"]
+                                        + replayed["scalars_in_flight"])
+
+
+def test_session_simulate_shares_recorder(star_pool):
+    g, theta_star, pool = star_pool
+    plan = A.Plan(graph=g, combiners=("diagonal",),
+                  telemetry=TelemetrySpec())
+    sess = plan.session()
+    sim = sess.simulate(pool, theta_star=theta_star, seed=3)
+    assert sim.recorder is sess.recorder
+    res = sim.run(4)
+    assert res.telemetry is not None
+    assert "stream" in res.telemetry.spans

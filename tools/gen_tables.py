@@ -1,11 +1,18 @@
-"""Generate the EXPERIMENTS.md dry-run + roofline markdown tables from
-experiments/dryrun/*.json.
+"""Generate markdown tables from the machine-readable benchmark records:
+the EXPERIMENTS.md dry-run + roofline tables from experiments/dryrun/*.json
+and the streaming/hostile-network tables from BENCH_stream.json.
 
-The records are not checked in — generate them first with the dry-run
-harness (its ``--out`` default is exactly the directory this script reads):
+The dry-run records are not checked in — generate them first with the
+dry-run harness (its ``--out`` default is exactly the directory this
+script reads):
 
     PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
     PYTHONPATH=src python tools/gen_tables.py > experiments/tables.md
+
+BENCH_stream.json is produced by ``python -m benchmarks.anytime_stream``.
+Records carrying an unknown ``schema_version`` are REJECTED loudly (exit
+1) rather than rendered wrong: a version this reader does not know means
+the payload layout changed after this script was written.
 """
 import glob
 import json
@@ -28,6 +35,83 @@ def fmt(x, unit=""):
     return f"{x:.2f}{unit}"
 
 
+#: BENCH_*.json schema versions this reader understands. 1 == the
+#: pre-provenance payloads, which carried no version stamp at all.
+KNOWN_SCHEMA_VERSIONS = (1, 2)
+
+
+def check_schema(payload: dict, path: str) -> None:
+    """Refuse to render a BENCH record whose schema this script predates."""
+    version = payload.get("schema_version", 1)
+    if version not in KNOWN_SCHEMA_VERSIONS:
+        sys.exit(
+            f"{path}: schema_version {version!r} is unknown to this "
+            f"reader (understands {list(KNOWN_SCHEMA_VERSIONS)}); "
+            f"regenerate the record or update tools/gen_tables.py")
+
+
+def stream_tables():
+    """Render BENCH_stream.json: per-graph any-time rows plus the PR 6
+    hostile-network section (Byzantine robustness, drift tracking,
+    crash/restart, durable restore)."""
+    path = "BENCH_stream.json"
+    print("\n### Streaming any-time trajectories (BENCH_stream.json)\n")
+    if not os.path.exists(path):
+        print("(no record — run `python -m benchmarks.anytime_stream`)")
+        return
+    payload = json.load(open(path))
+    check_schema(payload, path)
+    prov = payload.get("provenance")
+    if prov:
+        print(f"_{prov.get('backend', '?')}/{prov.get('kernel_mode', '?')}"
+              f", {prov.get('git_sha', 'unknown')[:12]}, "
+              f"{prov.get('timestamp', '?')}_\n")
+    print("| graph | method | err first | err last | samples/node | "
+          "scalars sent |")
+    print("|---|---|---|---|---|---|")
+    for gname, rec in sorted(payload.get("graphs", {}).items()):
+        for meth, tr in sorted(rec.get("methods", {}).items()):
+            err = tr["err"]
+            print(f"| {gname} | {meth} | {err[0]:.4f} | {err[-1]:.4f} | "
+                  f"{tr['samples_seen'][-1]:.0f} | "
+                  f"{tr['scalars_sent'][-1]} |")
+
+    hostile = payload.get("hostile")
+    if not hostile:
+        return
+    print("\n### Hostile network (star10, 20% Byzantine)\n")
+    print("| scenario | fault-free err | hostile err | note |")
+    print("|---|---|---|---|")
+    meths = hostile.get("methods", {})
+    for scheme in ("uniform", "trimmed_mean", "krum"):
+        row = meths.get(f"byzantine_{scheme}")
+        if row is None:
+            continue
+        ratio = row["err_hostile"] / max(row["err_fault_free"], 1e-12)
+        print(f"| byzantine sign-flip / {scheme} | "
+              f"{row['err_fault_free']:.4f} | {row['err_hostile']:.4f} | "
+              f"{ratio:.1f}x fault-free |")
+    if "drift" in meths:
+        d = meths["drift"]
+        print(f"| change-point drift | {d['err_plain']:.4f} (plain) | "
+              f"{d['err_windowed']:.4f} (windowed) | windowed re-fit "
+              f"tracks |")
+    if "crash_restart" in meths:
+        err = meths["crash_restart"]["err"]
+        print(f"| crash/restart | {err[0]:.4f} | {err[-1]:.4f} | "
+              f"survivors keep converging |")
+    if "kill_restore" in meths:
+        md = meths["kill_restore"]["restore_maxdiff"]
+        print(f"| kill + durable restore | - | {md:.1e} | max traj diff "
+              f"vs uninterrupted |")
+    tel = hostile.get("telemetry")
+    if tel:
+        print(f"| telemetry replay | - | - | {tel['events']} events, "
+              f"{tel['fault_injections']} faults fired, "
+              f"{tel['robust_rejections']} robust rejections, "
+              f"replayed scalars {tel['scalars_sent_replayed']} |")
+
+
 def main():
     recs = {}
     paths = sorted(glob.glob("experiments/dryrun/*.json"))
@@ -37,6 +121,7 @@ def main():
               "    PYTHONPATH=src python -m repro.launch.dryrun --all "
               "--out experiments/dryrun", file=sys.stderr)
         print("### Dry-run\n\n(no records)\n\n### Roofline\n\n(no records)")
+        stream_tables()
         return
     for path in paths:
         r = json.load(open(path))
@@ -79,6 +164,8 @@ def main():
             note = f"SWA w={r['window_override']}"
         print(f"| {arch} | {shape} | {tc:.2e} | {tm:.2e} | {tl:.2e} | "
               f"{dom} | {fmt(mf)} | {ratio:.2f} | {note} |")
+
+    stream_tables()
 
 
 if __name__ == "__main__":

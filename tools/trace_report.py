@@ -1,0 +1,169 @@
+"""Render a markdown run report from a telemetry JSONL event log.
+
+    PYTHONPATH=src python tools/trace_report.py BENCH_stream_trace.jsonl
+
+Sections:
+
+* **Phase breakdown** — every span path with call count, total/mean wall
+  seconds, and the bucket-solver compile-count delta attributed to it.
+* **Metrics** — counter totals, final gauge values, histogram summaries.
+* **Any-time curve** — the error-vs-scalars-sent trajectory assembled
+  from the ``point`` timeline events (the measurable form of the paper's
+  any-time claim), rendered as a table plus a coarse ASCII sparkline.
+* **Network ledger** — the comm accounting replayed from the per-message
+  ``net.*`` counter events, including the conservation check
+  ``sent == delivered + dropped + in_flight``.
+* **Fault timeline** — every fault injection (byzantine / replay / drift
+  / crash gauge changes) in round order.
+
+Reads only the JSONL file — the report is reproducible from the artifact
+alone, no live process needed.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.telemetry import (read_events, replay_network_counters,  # noqa
+                             timeline_from_events)
+from repro.telemetry.recorder import TelemetrySnapshot  # noqa
+
+
+BARS = " ▁▂▃▄▅▆▇█"
+
+
+def sparkline(values):
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    span = (hi - lo) or 1.0
+    return "".join(BARS[1 + int((v - lo) / span * (len(BARS) - 2))]
+                   for v in values)
+
+
+def phase_breakdown(snap):
+    print("## Phase breakdown\n")
+    if not snap.spans:
+        print("(no spans recorded)\n")
+        return
+    print("| span | count | total s | mean s | new compiles |")
+    print("|---|---|---|---|---|")
+    for path in sorted(snap.spans,
+                       key=lambda k: -snap.spans[k]["total_s"]):
+        agg = snap.spans[path]
+        mean = agg["total_s"] / max(agg["count"], 1)
+        print(f"| `{path}` | {agg['count']} | {agg['total_s']:.3f} | "
+              f"{mean:.4f} | {agg['new_compiles']} |")
+    print()
+
+
+def metrics(snap):
+    print("## Metrics\n")
+    if not (snap.counters or snap.gauges or snap.histograms):
+        print("(no metrics recorded)\n")
+        return
+    if snap.counters:
+        print("| counter | total |")
+        print("|---|---|")
+        for name in sorted(snap.counters):
+            print(f"| `{name}` | {snap.counters[name]} |")
+        print()
+    if snap.gauges:
+        print("| gauge | last value |")
+        print("|---|---|")
+        for name in sorted(snap.gauges):
+            print(f"| `{name}` | {snap.gauges[name]} |")
+        print()
+    if snap.histograms:
+        print("| histogram | n | min | mean | max |")
+        print("|---|---|---|---|---|")
+        for name in sorted(snap.histograms):
+            obs = snap.histograms[name]
+            mean = sum(obs) / len(obs)
+            print(f"| `{name}` | {len(obs)} | {min(obs):.4g} | "
+                  f"{mean:.4g} | {max(obs):.4g} |")
+        print()
+
+
+def anytime_curve(events):
+    print("## Any-time curve (error vs scalars sent)\n")
+    try:
+        rounds, err = timeline_from_events(events, "err")
+        _, scal = timeline_from_events(events, "scalars_sent")
+    except KeyError as e:
+        print(f"(not recorded: {e})\n")
+        return
+    print("| round | scalars sent | err |")
+    print("|---|---|---|")
+    for r, s, e in zip(rounds, scal, err):
+        print(f"| {int(r)} | {int(s)} | {e:.6g} |")
+    print(f"\nerr trajectory: `{sparkline(list(err))}`\n")
+
+
+def network_ledger(events):
+    print("## Network ledger (replayed from per-message events)\n")
+    c = replay_network_counters(events)
+    if c["msgs_sent"] == 0:
+        print("(no network traffic recorded)\n")
+        return
+    print("| counter | value |")
+    print("|---|---|")
+    for key in ("msgs_sent", "msgs_dropped", "msgs_delivered", "in_flight",
+                "scalars_sent", "scalars_dropped", "scalars_delivered",
+                "scalars_in_flight"):
+        print(f"| {key} | {c[key]} |")
+    ok = (c["scalars_sent"] == c["scalars_delivered"]
+          + c["scalars_dropped"] + c["scalars_in_flight"])
+    print(f"\nscalar conservation (`sent == delivered + dropped + "
+          f"in_flight`): **{'holds' if ok else 'VIOLATED'}**\n")
+
+
+def fault_timeline(events):
+    print("## Fault timeline\n")
+    rows = []
+    for ev in events:
+        tags = ev.get("tags") or {}
+        if ev["kind"] == "counter" and ev["name"] == "fault.injections":
+            rnd = tags.get("round", "?")
+            detail = ", ".join(f"{k}={v}" for k, v in sorted(tags.items())
+                               if k != "round")
+            rows.append((rnd, detail))
+        elif ev["kind"] == "gauge" and ev["name"] == "fault.nodes_down":
+            rows.append((tags.get("round", "?"),
+                         f"kind=crash, nodes_down={ev['value']}"))
+    if not rows:
+        print("(no faults fired)\n")
+        return
+    print("| round | injection |")
+    print("|---|---|")
+    last_crash = None
+    for rnd, detail in rows:
+        if detail.startswith("kind=crash"):
+            if detail == last_crash:      # only report crash-mask changes
+                continue
+            last_crash = detail
+        print(f"| {rnd} | {detail} |")
+    print()
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="markdown run report from a telemetry JSONL log")
+    ap.add_argument("jsonl", help="path to the event log")
+    args = ap.parse_args()
+    events = read_events(args.jsonl)
+    if not events:
+        sys.exit(f"{args.jsonl}: no events")
+    snap = TelemetrySnapshot.from_events(events)
+    print(f"# Telemetry run report\n\n`{args.jsonl}` — "
+          f"{len(events)} events, "
+          f"{events[-1]['t'] - events[0]['t']:.3f} s span\n")
+    phase_breakdown(snap)
+    metrics(snap)
+    anytime_curve(events)
+    network_ledger(events)
+    fault_timeline(snap.events)
+
+
+if __name__ == "__main__":
+    main()
