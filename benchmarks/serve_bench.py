@@ -1,0 +1,102 @@
+"""Serving benchmark: multi-tenant latency/throughput with and without
+cross-tenant coalescing.
+
+A deterministic synthetic workload (many tenants of a few equal plans,
+pre-drawn sample matrices) is replayed against two fresh servers — one
+coalescing same-shape requests into union dispatches, one serving every
+request through its own session serially. Reported per mode: p50/p99
+latency, served-request throughput, mean coalesce group size, and the
+warm-path compile count.
+
+Invariants this benchmark *asserts* (it is CI for the serving tier's two
+headline claims, not just a number printer):
+
+* coalesced throughput strictly exceeds serial throughput on the measured
+  (warm) phase;
+* the measured phase triggers zero new bucket-solver compilations in
+  either mode.
+
+Writes ``BENCH_serve.json`` (schema v2 + provenance). Quick mode runs a
+CI-sized load; ``REPRO_BENCH_FULL=1`` scales tenants and rounds up.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as C
+from repro.api.plan import Plan
+from repro.serve import SessionServer, VirtualClock, run_load, \
+    synthetic_workload
+from .util import emit, emit_json, scale
+
+
+def _tenant_plans(n_tenants: int):
+    """n_tenants spread over two distinct plans (so coalescing has both
+    same-plan groups to merge and plan boundaries to respect)."""
+    base = Plan(graph=C.scale_free_graph(24, seed=0), family="ising",
+                combiners=("diagonal",), n_iter=8)
+    alt = base.replace(combiners=("uniform",))
+    return {f"t{j:02d}": (base if j % 4 else alt)
+            for j in range(n_tenants)}
+
+
+def _serve(plans, schedule):
+    def run(coalesce):
+        srv = SessionServer(coalesce=coalesce,
+                            max_coalesce=scale(4, 8),
+                            clock=VirtualClock())
+        for tid, plan in plans.items():
+            srv.register(tid, plan)
+        warm = run_load(srv, schedule[:1])      # compile pass
+        measured = run_load(srv, schedule[1:])  # steady state
+        return warm, measured
+    return run(True), run(False)
+
+
+def main():
+    n_tenants = scale(8, 32)
+    rounds = scale(4, 12)   # round 0 is the warmup/compile pass
+    n_rows = scale(64, 256)
+    plans = _tenant_plans(n_tenants)
+    schedule = synthetic_workload(plans, rounds=rounds, n_rows=n_rows,
+                                  seed=0)
+    (warm_c, meas_c), (warm_s, meas_s) = _serve(plans, schedule)
+
+    for rep, mode in ((meas_c, "coalesced"), (meas_s, "serial")):
+        assert rep.n_rejected == 0, (mode, rep.rejected_by_reason)
+        assert rep.new_compiles == 0, (
+            f"{mode} measured phase compiled {rep.new_compiles} new bucket "
+            f"programs; the warm path must compile nothing")
+    assert meas_c.throughput_rps > meas_s.throughput_rps, (
+        f"coalescing must strictly beat serial serving: "
+        f"{meas_c.throughput_rps:.1f} <= {meas_s.throughput_rps:.1f} rps")
+
+    speedup = meas_c.throughput_rps / meas_s.throughput_rps
+    for rep, mode in ((meas_c, "coalesced"), (meas_s, "serial")):
+        emit(f"serve_{mode}_p50", rep.latency_ms(50) * 1e3,
+             f"p99_ms={rep.latency_ms(99):.2f}")
+        emit(f"serve_{mode}_throughput", 1e6 / rep.throughput_rps,
+             f"rps={rep.throughput_rps:.1f}")
+    emit("serve_coalesce_speedup", 0.0, f"x{speedup:.2f}")
+
+    payload = {
+        "config": {
+            "n_tenants": n_tenants, "rounds": rounds, "n_rows": n_rows,
+            "graph_p": 24, "max_coalesce": scale(4, 8),
+        },
+        "coalesced": {"warmup": warm_c.summary(),
+                      "measured": meas_c.summary()},
+        "serial": {"warmup": warm_s.summary(),
+                   "measured": meas_s.summary()},
+        "speedup_throughput": speedup,
+        "invariants": {
+            "warm_new_compiles_coalesced": meas_c.new_compiles,
+            "warm_new_compiles_serial": meas_s.new_compiles,
+            "coalesced_strictly_faster": True,
+        },
+    }
+    emit_json("BENCH_serve.json", payload)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 import repro.configs as CFG
 from repro.models import transformer as T
-from repro.serve import engine as E
+from repro.models import decoding as E
 
 
 def main():

@@ -148,23 +148,21 @@ class EstimationSession:
         g = pseudo_score(self.graph, theta, X, n, family=self.family)
         return float(np.linalg.norm(g))
 
-    def _one_step_comm(self, n: int) -> Dict[str, int]:
+    def one_step_comm(self, n: int) -> Dict[str, int]:
         """Scalars a network transmits per requested scheme — the
         family-block generalization of :mod:`repro.stream.costs`, with the
         per-param message size read from the combiner registry (the single
         source ``Combiner.scalars_per_shared_param``): every owner of every
         shared param ships its estimate (+ weight when the scheme uses
         one); Linear-Opt additionally ships its n influence samples per
-        shared slot."""
-        out: Dict[str, int] = {}
-        for c in self.combiners:
-            if c.scalars_per_shared_param is None:
-                continue          # not distributable as one message round
-            cost = c.scalars_per_shared_param * self.shared_owner_slots
-            if "influence" in c.needs:
-                cost += n * self.shared_owner_slots
-            out[c.name] = cost
-        return out
+        shared slot. The serving tier bills per-tenant comm budgets with
+        exactly this accounting (summed over schemes)."""
+        from ..stream.costs import one_step_comm_by_scheme
+        return one_step_comm_by_scheme(self.shared_owner_slots,
+                                       self.plan.combiners, n)
+
+    # backward-compatible private alias
+    _one_step_comm = one_step_comm
 
     def fit_local(self, X, sample_weight=None, warm_start=None,
                   want_influence: Optional[bool] = None,

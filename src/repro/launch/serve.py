@@ -1,55 +1,15 @@
-"""Serving launcher: batched greedy decoding with KV caches.
+"""Migration shim — the transformer serving CLI was retired.
 
-CPU demo:
-    PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
-        --reduced --batch 4 --prompt-len 16 --new-tokens 16
+``repro.serve`` is now the multi-tenant estimation session server; there
+is no decode CLI behind this entry point any more. The batched-decode
+demo lives in ``examples/serve_batched.py`` (built on
+:mod:`repro.models.decoding`), and the serving benchmark is
+``python -m benchmarks.serve_bench``.
 """
-from __future__ import annotations
-
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-
-import repro.configs as CFG
-from repro.models import transformer as T
-from repro.serve import engine as E
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="phi3-mini-3.8b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--window", type=int, default=0,
-                    help="sliding-window override (long-context serving)")
-    args = ap.parse_args()
-
-    cfg = CFG.get(args.arch)
-    if args.reduced:
-        cfg = CFG.reduced(cfg)
-    params = T.model_init(cfg, jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    enc = None
-    if cfg.enc_dec:
-        enc = 0.1 * jnp.ones((args.batch, cfg.n_frames, cfg.d_model),
-                             cfg.jdtype)
-    t0 = time.time()
-    out = E.generate(cfg, params, prompts, args.new_tokens,
-                     temperature=args.temperature, enc_frames=enc,
-                     window_override=args.window or None)
-    dt = time.time() - t0
-    n_tok = args.batch * args.new_tokens
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s batched)")
-    print(out[:, :12])
-
-
-if __name__ == "__main__":
-    main()
+raise ModuleNotFoundError(
+    "repro.launch.serve has been removed: repro.serve is now the "
+    "multi-tenant estimation session server (repro.serve.SessionServer). "
+    "For batched transformer decoding use examples/serve_batched.py with "
+    "repro.models.decoding; for serving load numbers run "
+    "'python -m benchmarks.serve_bench'.",
+    name="repro.launch.serve")

@@ -1,0 +1,81 @@
+"""Autoregressive decoding over KV caches: prefill + batched greedy/
+temperature generation for the transformer model zoo.
+
+Moved verbatim from the pre-serving ``repro.serve.engine`` — these are
+*model* utilities (the decode dry-run shapes and the arch smoke tests use
+them), not a serving tier; ``repro.serve`` now hosts the multi-tenant
+estimation session server.
+
+``make_serve_step`` builds the one-token jitted step the decode dry-run
+shapes (decode_32k, long_500k) lower. ``generate`` is the host loop used by
+the examples; prefill reuses ``forward(..., return_cache=True)`` so the
+prefill compute path is identical to training (and to the prefill_32k
+dry-run shape).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ArchConfig, *, window_override: Optional[int] = None,
+                    temperature: float = 0.0):
+    """Returns serve_step(params, cache, tokens, pos, rng, enc_out=None).
+
+    tokens: (B, 1) current token; returns (next_token (B, 1), logits, cache).
+    """
+    def serve_step(params, cache, tokens, pos, rng, enc_out=None):
+        logits, cache = T.decode_step(cfg, params, cache, tokens, pos,
+                                      enc_out=enc_out,
+                                      window_override=window_override)
+        last = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, cache
+    return serve_step
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_len: int, *,
+            enc_frames=None, patch_embeds=None,
+            window_override: Optional[int] = None):
+    """Run the full-sequence forward and return (logits, cache) with the
+    cache sized to ``max_len`` (prompt written at positions [0, S))."""
+    logits, _, cache = T.forward(cfg, params, tokens, enc_frames=enc_frames,
+                                 patch_embeds=patch_embeds, remat=False,
+                                 return_cache=True, cache_len=max_len,
+                                 window_override=window_override)
+    return logits, cache
+
+
+def generate(cfg: ArchConfig, params, prompt, n_new: int, *,
+             max_len: Optional[int] = None, temperature: float = 0.0,
+             seed: int = 0, enc_frames=None,
+             window_override: Optional[int] = None):
+    """Greedy/temperature generation. prompt: (B, S) int32."""
+    b, s = prompt.shape
+    max_len = max_len or (s + n_new)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = T.encode(cfg, params, enc_frames)
+    logits, cache = prefill(cfg, params, prompt, max_len,
+                            enc_frames=enc_frames,
+                            window_override=window_override)
+    step = jax.jit(make_serve_step(cfg, window_override=window_override,
+                                   temperature=temperature))
+    last = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None]
+    last = last.astype(jnp.int32)
+    out = [last]
+    rng = jax.random.PRNGKey(seed)
+    for t in range(n_new - 1):
+        rng, sub = jax.random.split(rng)
+        last, _, cache = step(params, cache, last, s + t, sub,
+                              enc_out=enc_out)
+        out.append(last)
+    return jnp.concatenate(out, axis=1)

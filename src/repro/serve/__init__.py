@@ -1,0 +1,38 @@
+"""Estimation-as-a-service: the multi-tenant session server.
+
+Serve many concurrent tenants — each a frozen
+:class:`~repro.api.plan.Plan` plus an optional communication
+:class:`BudgetSpec` — through the plan-keyed session cache, with
+cross-tenant coalesced batching (one XLA dispatch per same-shape group,
+see :mod:`repro.serve.coalesce`), admission control billed in exact
+one-step message scalars (:mod:`repro.serve.admission`), and a
+deterministic load harness (:mod:`repro.serve.loadgen`).
+
+    from repro.serve import SessionServer, BudgetSpec
+
+    srv = SessionServer(max_coalesce=8)
+    srv.register("acme", plan, budget=BudgetSpec(scalars=10_000,
+                                                 replenish_every=60.0))
+    ticket = srv.submit("acme", X)          # admission-controlled
+    srv.drain()                             # coalesced dispatch
+    ticket.result.theta                     # == serial session.fit(X)
+
+The transformer-era ``repro.serve.engine`` (KV-cache decode) moved to
+:mod:`repro.models.decoding`; importing the old name raises a migration
+error.
+"""
+from .admission import (REJECT_BUDGET, REJECT_QUEUE_FULL, BudgetSpec,
+                        BudgetState, VirtualClock)
+from .coalesce import (coalesced_plan, pad_group_size, split_fits,
+                       tenant_param_slots, union_graph)
+from .loadgen import LoadReport, run_load, synthetic_workload
+from .server import ServeResult, SessionServer, Tenant, Ticket
+
+__all__ = [
+    "SessionServer", "Tenant", "Ticket", "ServeResult",
+    "BudgetSpec", "BudgetState", "VirtualClock",
+    "REJECT_QUEUE_FULL", "REJECT_BUDGET",
+    "union_graph", "coalesced_plan", "split_fits", "tenant_param_slots",
+    "pad_group_size",
+    "synthetic_workload", "run_load", "LoadReport",
+]

@@ -1,0 +1,159 @@
+"""Deterministic load-test harness for the session server.
+
+The workload is built up-front and replayed: :func:`synthetic_workload`
+pre-draws every request's sample rows from each tenant family's exact
+sampler with keys folded from ``(seed, round, tenant)``, so two runs (or
+two server configurations — coalescing ON vs OFF) see byte-identical
+request streams in the same order. :func:`run_load` submits round by
+round, drains between rounds, optionally advances a
+:class:`~repro.serve.admission.VirtualClock`, and folds the tickets into a
+:class:`LoadReport` — p50/p99 latency, throughput, admission outcomes,
+coalesce sizes, and warm-path compile counts, the numbers
+``benchmarks/serve_bench.py`` publishes.
+
+Determinism covers everything *decision-shaped*: which requests are
+admitted or rejected (and why), how groups coalesce, and every numerical
+result. Wall-clock latencies obviously vary by machine — they are the
+measurement, not the schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from ..api.plan import Plan
+from .admission import VirtualClock
+from .server import SessionServer, Ticket
+
+__all__ = ["LoadReport", "synthetic_workload", "run_load"]
+
+#: one request: (tenant_id, sample rows, kind)
+Request = Tuple[str, np.ndarray, str]
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """Aggregate of one load run; latencies in seconds."""
+
+    n_submitted: int
+    n_served: int
+    n_rejected: int
+    rejected_by_reason: Dict[str, int]
+    latencies_s: np.ndarray
+    wall_s: float
+    coalesce_sizes: List[int]
+    new_compiles: int
+    tickets: List[Ticket]
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.n_served / self.wall_s if self.wall_s > 0 else 0.0
+
+    def latency_ms(self, q: float) -> float:
+        """The q-th latency percentile in milliseconds (e.g. 50, 99)."""
+        if self.latencies_s.size == 0:
+            return float("nan")
+        return float(np.percentile(self.latencies_s, q) * 1e3)
+
+    def summary(self) -> dict:
+        return {
+            "n_submitted": self.n_submitted,
+            "n_served": self.n_served,
+            "n_rejected": self.n_rejected,
+            "rejected_by_reason": dict(self.rejected_by_reason),
+            "p50_ms": self.latency_ms(50),
+            "p99_ms": self.latency_ms(99),
+            "throughput_rps": self.throughput_rps,
+            "wall_s": self.wall_s,
+            "mean_coalesce_size": (float(np.mean(self.coalesce_sizes))
+                                   if self.coalesce_sizes else 0.0),
+            "new_compiles": self.new_compiles,
+        }
+
+
+#: largest graph the exact (full state enumeration) sampler is used for;
+#: beyond it the workload draws via vmapped chromatic Gibbs instead
+_EXACT_SAMPLE_MAX_P = 12
+
+
+def _draw_rows(plan: Plan, theta: np.ndarray, n: int, key) -> np.ndarray:
+    fam = plan.family_instance
+    if plan.graph.p <= _EXACT_SAMPLE_MAX_P:
+        return np.asarray(fam.exact_sample(plan.graph, theta, n, key))
+    from ..core.sampling import gibbs_sample_family
+    return np.asarray(gibbs_sample_family(fam, plan.graph, theta, n, key))
+
+
+def synthetic_workload(tenant_plans: Dict[str, Plan], rounds: int,
+                       n_rows: int, seed: int = 0,
+                       kind: str = "fit",
+                       theta: Optional[dict] = None
+                       ) -> List[List[Request]]:
+    """Pre-drawn multi-tenant request schedule: every round, every tenant
+    submits one ``kind`` request of ``n_rows`` fresh rows sampled from its
+    plan's family at parameters ``theta[tenant]`` (default: the family's
+    seeded ``random_params``). All randomness is folded from ``seed`` —
+    the schedule is a pure function of its arguments. Small graphs draw
+    from the exact distribution; past ``p = 12`` (where state enumeration
+    explodes) the draw switches to seeded chromatic Gibbs."""
+    base = jax.random.PRNGKey(seed)
+    schedule: List[List[Request]] = []
+    thetas = {}
+    for j, (tid, plan) in enumerate(sorted(tenant_plans.items())):
+        fam = plan.family_instance
+        if theta is not None and tid in theta:
+            thetas[tid] = np.asarray(theta[tid])
+        else:
+            thetas[tid] = np.asarray(
+                fam.random_params(plan.graph,
+                                  jax.random.fold_in(base, 1000 + j)))
+    for rnd in range(rounds):
+        requests: List[Request] = []
+        for j, (tid, plan) in enumerate(sorted(tenant_plans.items())):
+            key = jax.random.fold_in(jax.random.fold_in(base, rnd), j)
+            requests.append((tid, _draw_rows(plan, thetas[tid], n_rows, key),
+                             kind))
+        schedule.append(requests)
+    return schedule
+
+
+def run_load(server: SessionServer, schedule: Sequence[Sequence[Request]],
+             *, round_dt: Optional[float] = None) -> LoadReport:
+    """Replay a workload: submit each round's requests, drain the server,
+    advance a :class:`VirtualClock` by ``round_dt`` between rounds (only
+    when the server runs on one), and fold the tickets into a
+    :class:`LoadReport`. ``new_compiles`` is the bucket-solver
+    compile-count delta over the whole run — a warm run reports 0."""
+    from ..core.batched import bucket_compile_count
+    tickets: List[Ticket] = []
+    c0 = bucket_compile_count()
+    t0 = time.perf_counter()
+    for requests in schedule:
+        for (tid, X, kind) in requests:
+            tickets.append(server.submit(tid, X, kind=kind))
+        server.drain()
+        if round_dt is not None and isinstance(server.clock, VirtualClock):
+            server.clock.advance(round_dt)
+    wall = time.perf_counter() - t0
+    c1 = bucket_compile_count()
+    new_compiles = (c1 - c0) if c0 >= 0 and c1 >= 0 else -1
+    done = [t for t in tickets if t.done]
+    rejected = [t for t in tickets if not t.admitted]
+    by_reason: Dict[str, int] = {}
+    for t in rejected:
+        by_reason[t.reject_reason] = by_reason.get(t.reject_reason, 0) + 1
+    return LoadReport(
+        n_submitted=len(tickets),
+        n_served=len(done),
+        n_rejected=len(rejected),
+        rejected_by_reason=by_reason,
+        latencies_s=np.asarray([t.latency_s for t in done],
+                               dtype=np.float64),
+        wall_s=wall,
+        coalesce_sizes=[t.result.coalesce_size for t in done],
+        new_compiles=new_compiles,
+        tickets=tickets)

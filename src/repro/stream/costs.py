@@ -58,6 +58,48 @@ def admm_message_scalars(n_shared: int) -> int:
     return int(n_shared)
 
 
+def one_step_comm_by_scheme(shared_owner_slots: int, combiners, n: int) -> dict:
+    """Per-scheme scalars ONE full one-step round transmits for a plan.
+
+    ``shared_owner_slots`` is the number of (shared parameter, owner)
+    pairs — every owner of every multi-owner parameter ships its estimate
+    (+ weight when the scheme uses one); influence-needing schemes
+    (Linear-Opt) additionally ship their ``n`` influence samples per slot.
+    Non-distributable combiners (``scalars_per_shared_param is None``) are
+    omitted. Shared by :meth:`repro.api.session.EstimationSession` results
+    and the serving tier's per-tenant budget billing.
+    """
+    from ..core.combiners import get_combiner
+    out = {}
+    for name in combiners:
+        c = get_combiner(name)
+        if c.scalars_per_shared_param is None:
+            continue               # not distributable as one message round
+        cost = c.scalars_per_shared_param * int(shared_owner_slots)
+        if "influence" in c.needs:
+            cost += int(n) * int(shared_owner_slots)
+        out[c.name] = cost
+    return out
+
+
+def shared_owner_slot_count(g: Graph, include_singleton: bool = True,
+                            family=None) -> int:
+    """(shared parameter, owner) pairs of a graph — the unit the one-step
+    accounting bills per scheme."""
+    owners = param_owners(g, include_singleton, family)
+    return sum(len(own) for own in owners.values() if len(own) > 1)
+
+
+def plan_request_scalars(g: Graph, combiners, n: int,
+                         include_singleton: bool = True,
+                         family=None) -> int:
+    """Total scalars one fit/stream round of a plan transmits, summed over
+    its requested distributable combiners — what the serving tier's
+    admission control charges a tenant per request."""
+    slots = shared_owner_slot_count(g, include_singleton, family)
+    return sum(one_step_comm_by_scheme(slots, combiners, n).values())
+
+
 def comm_costs(g: Graph, n: int, admm_iters: int) -> dict:
     """Exact combinatorial scalar counts per sensor-network method.
 

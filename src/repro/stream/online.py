@@ -239,6 +239,15 @@ class StreamingEstimator:
                       int(self.buffer.data.shape[0]))
             rec.gauge("stream.effective_count_mean",
                       float(self.effective_counts.mean()))
+        return self._finish_refit(fits)
+
+    def _finish_refit(self, fits: List[LocalFit]) -> List[LocalFit]:
+        """Post-solve bookkeeping shared by :meth:`refit` and the serving
+        tier's coalesced dispatch (which solves several estimators' banks
+        in one union program and hands each its slice): version bumps for
+        nodes whose data changed, prefix-count snapshot, and trust-radius
+        warm-start hygiene.
+        """
         changed = self.counts != self._fit_counts
         self.versions = self.versions + changed.astype(np.int64)
         self._fit_counts = self.counts.copy()

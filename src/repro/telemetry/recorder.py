@@ -294,6 +294,24 @@ class TelemetrySnapshot:
         return cls(events=events, counters=counters, gauges=gauges,
                    histograms=hists, spans=spans, points=points)
 
+    def counter(self, name: str, **tags) -> float:
+        """Accumulated total of one counter restricted to matching tags.
+
+        ``counters[name]`` aggregates across every tag combination; this
+        accessor sums only increments whose tags include every given
+        ``key=value`` pair — how the serving tier's tests read per-tenant
+        and per-rejection-reason admission counts out of one registry
+        (e.g. ``snap.counter("serve.rejected", reason="budget_exhausted")``).
+        """
+        total = 0.0
+        for ev in self.events:
+            if ev["kind"] != "counter" or ev["name"] != name:
+                continue
+            evt = ev.get("tags") or {}
+            if all(evt.get(k) == v for k, v in tags.items()):
+                total += ev["value"]
+        return total
+
     def timeline(self, metric: str) -> Tuple[np.ndarray, np.ndarray]:
         """(rounds, values) arrays for one recorded timeline metric."""
         if metric not in self.points:

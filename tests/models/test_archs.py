@@ -14,7 +14,7 @@ import pytest
 
 import repro.configs as CFG
 from repro.models import transformer as T
-from repro.serve import engine as E
+from repro.models import decoding as E
 from repro.train import step as TS
 from repro.optim.adamw import AdamWConfig
 

@@ -1,0 +1,176 @@
+"""Admission-control edge cases: exact budget exhaustion, telemetry-surfaced
+rejection reasons, replenishment schedules, and queue-full backpressure.
+
+All decisions run on a :class:`VirtualClock`, so every schedule is exact.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.api.plan import Plan
+from repro.serve import (REJECT_BUDGET, REJECT_QUEUE_FULL, BudgetSpec,
+                         BudgetState, SessionServer, VirtualClock)
+
+
+@pytest.fixture()
+def plan():
+    return Plan(graph=C.chain_graph(4), family="ising",
+                combiners=("diagonal",), n_iter=8)
+
+
+def _rows(plan, n, seed):
+    fam = plan.family_instance
+    key = jax.random.PRNGKey(seed)
+    theta = np.asarray(fam.random_params(plan.graph, jax.random.fold_in(key, 0)))
+    return np.asarray(fam.exact_sample(plan.graph, theta, n,
+                                       jax.random.fold_in(key, 1)))
+
+
+def _server(plan, budget, **kw):
+    clock = VirtualClock()
+    srv = SessionServer(clock=clock, **kw)
+    srv.register("a", plan, budget=budget)
+    return srv, clock
+
+
+# ------------------------------------------------------------ exact budgets
+def test_budget_exactly_exhausted_mid_stream(plan):
+    """A budget of exactly 3 rounds admits rounds 1-3 (the third lands the
+    ledger on exactly zero) and rejects round 4 with the budget reason."""
+    srv, _ = _server(plan, budget=None)
+    cost = srv.request_cost("a", 16)
+    assert cost > 0
+    srv, _ = _server(plan, budget=BudgetSpec(scalars=3 * cost))
+    tickets = [srv.submit("a", _rows(plan, 16, 10 + r), kind="stream")
+               for r in range(4)]
+    srv.drain()
+    assert [t.admitted for t in tickets] == [True, True, True, False]
+    assert [t.done for t in tickets] == [True, True, True, False]
+    assert tickets[3].reject_reason == REJECT_BUDGET
+    assert srv.tenant("a").budget.remaining == 0
+    # the charge billed on each admitted ticket is the exact one-step cost
+    assert all(t.result.comm_scalars == cost for t in tickets[:3])
+
+
+def test_rejection_reason_surfaces_in_telemetry_counters(plan):
+    srv, _ = _server(plan, budget=BudgetSpec(scalars=0))
+    t = srv.submit("a", _rows(plan, 16, 20))
+    assert not t.admitted
+    snap = srv.metrics()
+    assert snap.counter("serve.rejected", reason=REJECT_BUDGET) == 1
+    assert snap.counter("serve.rejected", reason=REJECT_BUDGET,
+                        tenant="a") == 1
+    assert snap.counter("serve.rejected", reason=REJECT_QUEUE_FULL) == 0
+    assert snap.counter("serve.admitted") == 0
+
+
+def test_replenishment_resumes_service(plan):
+    srv, clock = _server(plan, budget=None)
+    cost = srv.request_cost("a", 16)
+    srv, clock = _server(plan,
+                         budget=BudgetSpec(scalars=cost,
+                                           replenish_every=60.0))
+    t1 = srv.submit("a", _rows(plan, 16, 30))
+    t2 = srv.submit("a", _rows(plan, 16, 31))
+    assert t1.admitted and not t2.admitted
+    clock.advance(59.9)
+    assert not srv.submit("a", _rows(plan, 16, 32)).admitted
+    clock.advance(0.1)  # refill boundary: registration + 60s
+    t4 = srv.submit("a", _rows(plan, 16, 33))
+    assert t4.admitted
+    srv.drain()
+    assert t1.done and t4.done
+    snap = srv.metrics()
+    assert snap.counter("serve.rejected", reason=REJECT_BUDGET,
+                        tenant="a") == 2
+    assert snap.counter("serve.served", tenant="a") == 2
+
+
+def test_replenishment_catches_up_after_idle_gap():
+    spec = BudgetSpec(scalars=10, replenish_every=5.0)
+    st = BudgetState(spec, now=0.0)
+    assert st.try_charge(10, now=0.0)
+    # three whole windows pass unobserved; one refill catches up, and the
+    # next boundary is the schedule's (t=20), not now+5
+    assert st.try_charge(10, now=17.0)
+    assert not st.try_charge(1, now=19.9)
+    assert st.try_charge(10, now=20.0)
+
+
+def test_queue_full_backpressure_never_drops_admitted_requests(plan):
+    srv, _ = _server(plan, budget=None, max_queue=3, max_coalesce=1)
+    tickets = [srv.submit("a", _rows(plan, 16, 40 + i)) for i in range(5)]
+    admitted = [t for t in tickets if t.admitted]
+    rejected = [t for t in tickets if not t.admitted]
+    assert len(admitted) == 3 and len(rejected) == 2
+    assert all(t.reject_reason == REJECT_QUEUE_FULL for t in rejected)
+    served = srv.drain()
+    assert {t.seq for t in served} == {t.seq for t in admitted}
+    assert all(t.done for t in admitted)
+    # draining freed the queue — service resumes without intervention
+    t6 = srv.submit("a", _rows(plan, 16, 46))
+    assert t6.admitted
+    srv.drain()
+    assert t6.done
+
+
+def test_queue_full_rejection_does_not_charge_the_budget(plan):
+    """Backpressure is checked before the ledger: a queue-full rejection
+    leaves the tenant's budget untouched."""
+    srv, _ = _server(plan, budget=None)
+    cost = srv.request_cost("a", 16)
+    clock = VirtualClock()
+    srv = SessionServer(max_queue=1, max_coalesce=1, clock=clock)
+    srv.register("a", plan, budget=BudgetSpec(scalars=2 * cost))
+    t1 = srv.submit("a", _rows(plan, 16, 50))
+    t2 = srv.submit("a", _rows(plan, 16, 51))  # queue full
+    assert t1.admitted and not t2.admitted
+    assert t2.reject_reason == REJECT_QUEUE_FULL
+    assert srv.tenant("a").budget.remaining == cost  # only t1 billed
+    srv.drain()
+    assert srv.submit("a", _rows(plan, 16, 52)).admitted
+
+
+def test_per_tenant_budgets_are_independent(plan):
+    clock = VirtualClock()
+    srv = SessionServer(clock=clock)
+    srv.register("rich", plan)  # unbudgeted
+    srv.register("poor", plan, budget=BudgetSpec(scalars=0))
+    tr = srv.submit("rich", _rows(plan, 16, 60))
+    tp = srv.submit("poor", _rows(plan, 16, 61))
+    assert tr.admitted and not tp.admitted
+    srv.drain()
+    assert tr.done
+    snap = srv.metrics()
+    assert snap.counter("serve.rejected", tenant="poor",
+                        reason=REJECT_BUDGET) == 1
+    assert snap.counter("serve.rejected", tenant="rich") == 0
+
+
+# ------------------------------------------------------------- validation
+def test_submit_validation_errors(plan):
+    srv = SessionServer()
+    with pytest.raises(KeyError, match="register"):
+        srv.submit("ghost", np.zeros((4, 4)))
+    srv.register("a", plan)
+    with pytest.raises(ValueError, match="kind"):
+        srv.submit("a", _rows(plan, 8, 70), kind="joint")
+    with pytest.raises(ValueError, match="p=4"):
+        srv.submit("a", np.zeros((8, 7)))
+    with pytest.raises(ValueError, match="no sample rows"):
+        srv.submit("a", np.zeros((0, 4)))
+    with pytest.raises(ValueError, match="already registered"):
+        srv.register("a", plan)
+
+
+def test_budget_spec_validation():
+    with pytest.raises(ValueError, match=">= 0"):
+        BudgetSpec(scalars=-1)
+    with pytest.raises(ValueError, match="positive interval"):
+        BudgetSpec(scalars=1, replenish_every=0.0)
+    spec = BudgetSpec(scalars=5, replenish_every=2.5)
+    assert BudgetSpec.from_dict(spec.to_dict()) == spec
+    with pytest.raises(ValueError, match="forward"):
+        VirtualClock().advance(-1.0)

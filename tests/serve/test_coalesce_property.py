@@ -1,0 +1,203 @@
+"""Coalesced serving is numerically identical to serial serving.
+
+The acceptance bar (1e-10) is asserted under float64 plans: the engine's
+Newton ``while_loop`` stops on the *bucket-wide* max step, so coalescing a
+tenant with others can run its already-converged nodes a few extra
+iterations — in float64 those extra steps shrink quadratically below the
+solver tolerance (<= ~1e-12 drift), while in float32 they bounce at the
+jitter floor (~1e-7), which is why these tests pin ``precision="float64"``
+(the default-precision servers in the other modules exercise the same
+machinery at float32).
+
+Covered here:
+* a deterministic sweep — EVERY registered family x EVERY streamable
+  combiner: a coalesced 2-tenant fit dispatch equals each request's own
+  session fit + combine to 1e-10;
+* a deterministic heterogeneous mix (different plans interleaved, so
+  groups must form only among equal plans) seeded from RandomState;
+* a hypothesis property test drawing arbitrary tenant mixes of
+  (family, combiner set, sample count, group size).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.api.plan import Plan
+from repro.serve import SessionServer
+
+FAMILY_NAMES = [f.name for f in C.families.registered_families()]
+STREAMABLE_NAMES = [c.name for c in C.combiners.streamable_combiners()]
+
+#: small graphs with distinct degree profiles; low max degree keeps every
+#: per-node problem well-posed at modest n (no quasi-separation, where the
+#: near-singular sandwich amplifies iteration-schedule jitter)
+GRAPHS = {
+    "chain": C.chain_graph(5),
+    "loop": C.Graph(4, ((0, 1), (1, 2), (2, 3), (0, 3))),
+}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def _rows(plan, n, key):
+    fam = plan.family_instance
+    theta = np.asarray(fam.random_params(plan.graph, jax.random.fold_in(key, 0)))
+    return np.asarray(
+        fam.exact_sample(plan.graph, theta, n, jax.random.fold_in(key, 1)),
+        dtype=np.float64)
+
+
+def _assert_ticket_matches_serial(ticket, plan, atol=1e-10):
+    """The served result equals a fit through the request's own session."""
+    sess = plan.session()
+    ref_fits = sess.fit_local(ticket.result._ref_X)
+    for got, ref in zip(ticket.result.fits, ref_fits):
+        np.testing.assert_allclose(got.theta, ref.theta, atol=atol, rtol=0)
+        np.testing.assert_allclose(got.V, ref.V, atol=atol, rtol=0)
+    for c in sess.combiners:
+        ref_combined = c.combine(plan.graph, ref_fits,
+                                 include_singleton=plan.include_singleton,
+                                 theta_fixed=sess.theta_fixed,
+                                 family=sess.family)
+        np.testing.assert_allclose(ticket.result.combined[c.name],
+                                   ref_combined, atol=atol, rtol=0,
+                                   err_msg=f"combiner {c.name}")
+
+
+def _serve_coalesced(tenant_plans, tenant_rows, max_coalesce=8):
+    """One coalesced server pass; stashes each request's rows on the result
+    so the serial reference can replay it."""
+    srv = SessionServer(max_coalesce=max_coalesce)
+    tickets = {}
+    for tid, plan in tenant_plans.items():
+        srv.register(tid, plan)
+    for tid in tenant_plans:
+        tickets[tid] = srv.submit(tid, tenant_rows[tid])
+    srv.drain()
+    for tid, t in tickets.items():
+        assert t.done, (tid, t.status, t.reject_reason)
+        t.result._ref_X = tenant_rows[tid]
+    return tickets
+
+
+@pytest.mark.parametrize("family", FAMILY_NAMES)
+@pytest.mark.parametrize("combiner", STREAMABLE_NAMES)
+def test_every_family_x_streamable_combiner_bit_identical(family, combiner):
+    g = GRAPHS["chain"]
+    plan = Plan(graph=g, family=family, combiners=(combiner,),
+                precision="float64", n_iter=40)
+    seed = (FAMILY_NAMES.index(family) * len(STREAMABLE_NAMES)
+            + STREAMABLE_NAMES.index(combiner))
+    key = jax.random.PRNGKey(seed)
+    rows = {"t0": _rows(plan, 96, jax.random.fold_in(key, 10)),
+            "t1": _rows(plan, 96, jax.random.fold_in(key, 11))}
+    tickets = _serve_coalesced({"t0": plan, "t1": plan}, rows)
+    assert tickets["t0"].result.coalesce_size == 2
+    for tid in rows:
+        _assert_ticket_matches_serial(tickets[tid], plan)
+
+
+def test_heterogeneous_tenant_mix_coalesces_only_equal_plans():
+    """Interleaved tenants of three different plans: groups form only among
+    equal plans, and every result matches its own serial session."""
+    rng = np.random.RandomState(0)
+    plan_a = Plan(graph=GRAPHS["chain"], family="ising",
+                  combiners=("diagonal",), precision="float64", n_iter=40)
+    plan_b = Plan(graph=GRAPHS["loop"], family="gaussian",
+                  combiners=("uniform", "max"), precision="float64",
+                  n_iter=40)
+    plan_c = plan_a.replace(combiners=("krum",))
+    plans, rows = {}, {}
+    key = jax.random.PRNGKey(7)
+    for j, plan in enumerate([plan_a, plan_b, plan_c, plan_a, plan_b,
+                              plan_a, plan_c]):
+        tid = f"t{j}"
+        plans[tid] = plan
+        rows[tid] = _rows(plan, 64, jax.random.fold_in(key, 100 + j))
+    order = list(plans)
+    rng.shuffle(order)
+    srv = SessionServer(max_coalesce=4)
+    for tid in order:
+        srv.register(tid, plans[tid])
+    tickets = {tid: srv.submit(tid, rows[tid]) for tid in order}
+    srv.drain()
+    for tid, t in tickets.items():
+        assert t.done
+        t.result._ref_X = rows[tid]
+        _assert_ticket_matches_serial(t, plans[tid])
+    # the three plan_a tenants shaped one group (padded pow2 handles r=3)
+    sizes = sorted(tickets[tid].result.coalesce_size for tid in plans)
+    assert max(sizes) >= 2
+
+
+def test_stream_rounds_bit_identical_to_serial_stream():
+    """Three coalesced streaming rounds reproduce an uncoalesced
+    StreamingEstimator round for round (including the warm rounds, which
+    dispatch with the warm-start flag in the group key)."""
+    plan = Plan(graph=GRAPHS["chain"], family="ising",
+                combiners=("diagonal",), precision="float64", n_iter=40)
+    key = jax.random.PRNGKey(3)
+    srv = SessionServer(max_coalesce=2)
+    srv.register("a", plan)
+    srv.register("b", plan)
+    ref = plan.session().stream()
+    for rnd in range(3):
+        Xa = _rows(plan, 32, jax.random.fold_in(key, 10 * rnd))
+        Xb = _rows(plan, 32, jax.random.fold_in(key, 10 * rnd + 1))
+        ta = srv.submit("a", Xa, kind="stream")
+        tb = srv.submit("b", Xb, kind="stream")
+        srv.drain()
+        assert ta.done and tb.done
+        assert ta.result.coalesce_size == 2
+        ref.ingest(Xa)
+        ref_fits = ref.refit()
+        for got, want in zip(ta.result.fits, ref_fits):
+            np.testing.assert_allclose(got.theta, want.theta,
+                                       atol=1e-10, rtol=0)
+
+
+# --------------------------------------------------------------- hypothesis
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def tenant_mixes(draw):
+    """2-5 tenants over 1-2 distinct plans (family x combiner subset),
+    shared graph per plan, per-tenant sample matrices of a common n."""
+    n = draw(st.sampled_from([48, 96]))
+    n_plans = draw(st.integers(min_value=1, max_value=2))
+    plans = []
+    for k in range(n_plans):
+        family = draw(st.sampled_from(FAMILY_NAMES))
+        combs = tuple(draw(st.lists(st.sampled_from(STREAMABLE_NAMES),
+                                    min_size=1, max_size=2, unique=True)))
+        gname = draw(st.sampled_from(sorted(GRAPHS)))
+        plans.append(Plan(graph=GRAPHS[gname], family=family,
+                          combiners=combs, precision="float64", n_iter=40))
+    assignment = draw(st.lists(st.integers(0, n_plans - 1),
+                               min_size=2, max_size=5))
+    seed = draw(st.integers(min_value=0, max_value=2**20))
+    return plans, assignment, n, seed
+
+
+@settings(max_examples=8, deadline=None)
+@given(mix=tenant_mixes())
+def test_arbitrary_tenant_mixes_match_serial(mix):
+    plans, assignment, n, seed = mix
+    key = jax.random.PRNGKey(seed)
+    tenant_plans, rows = {}, {}
+    for j, k in enumerate(assignment):
+        tid = f"h{j}"
+        tenant_plans[tid] = plans[k]
+        rows[tid] = _rows(plans[k], n, jax.random.fold_in(key, j))
+    tickets = _serve_coalesced(tenant_plans, rows, max_coalesce=4)
+    for tid, t in tickets.items():
+        _assert_ticket_matches_serial(t, tenant_plans[tid])

@@ -1,0 +1,77 @@
+"""The load harness is deterministic: same seed -> byte-identical request
+schedules, and replaying one schedule against coalescing ON vs OFF servers
+yields identical numerical results per ticket (the property the serving
+benchmark's speedup comparison rests on).
+"""
+import numpy as np
+
+import repro.core as C
+from repro.api.plan import Plan
+from repro.serve import SessionServer, VirtualClock, run_load, \
+    synthetic_workload
+
+
+def _plans():
+    pa = Plan(graph=C.chain_graph(4), family="ising",
+              combiners=("diagonal",), n_iter=8)
+    pb = pa.replace(combiners=("uniform",))
+    return {"a0": pa, "a1": pa, "b0": pb}
+
+
+def test_synthetic_workload_is_a_pure_function_of_its_seed():
+    plans = _plans()
+    s1 = synthetic_workload(plans, rounds=2, n_rows=12, seed=5)
+    s2 = synthetic_workload(plans, rounds=2, n_rows=12, seed=5)
+    s3 = synthetic_workload(plans, rounds=2, n_rows=12, seed=6)
+    assert len(s1) == 2 and len(s1[0]) == 3
+    for reqs1, reqs2 in zip(s1, s2):
+        for (t1, X1, k1), (t2, X2, k2) in zip(reqs1, reqs2):
+            assert (t1, k1) == (t2, k2)
+            np.testing.assert_array_equal(X1, X2)
+    assert any(not np.array_equal(X1, X3)
+               for (_, X1, _), (_, X3, _) in zip(s1[0], s3[0]))
+
+
+def test_coalesced_and_serial_replay_agree_and_report_load():
+    plans = _plans()
+    schedule = synthetic_workload(plans, rounds=3, n_rows=16, seed=1)
+
+    def serve(coalesce):
+        srv = SessionServer(coalesce=coalesce, max_coalesce=4,
+                            clock=VirtualClock())
+        for tid, plan in plans.items():
+            srv.register(tid, plan)
+        return srv, run_load(srv, schedule, round_dt=1.0)
+
+    srv_c, rep_c = serve(True)
+    srv_s, rep_s = serve(False)
+    for rep in (rep_c, rep_s):
+        assert rep.n_submitted == 9
+        assert rep.n_served == 9
+        assert rep.n_rejected == 0
+        assert rep.latencies_s.shape == (9,)
+        assert rep.wall_s > 0
+        summary = rep.summary()
+        assert summary["p99_ms"] >= summary["p50_ms"] >= 0
+        assert summary["throughput_rps"] > 0
+    # coalescing actually grouped the equal-plan tenants...
+    assert max(rep_c.coalesce_sizes) == 2
+    assert max(rep_s.coalesce_sizes) == 1
+    # ...and the numbers a tenant gets back do not depend on the mode
+    for tc, ts in zip(rep_c.tickets, rep_s.tickets):
+        assert (tc.tenant_id, tc.kind, tc.seq) == (ts.tenant_id, ts.kind,
+                                                   ts.seq)
+        np.testing.assert_allclose(tc.result.theta, ts.result.theta,
+                                   atol=5e-6)
+        assert tc.result.comm_scalars == ts.result.comm_scalars
+
+
+def test_warm_replay_reports_zero_new_compiles():
+    plans = _plans()
+    schedule = synthetic_workload(plans, rounds=2, n_rows=16, seed=2)
+    srv = SessionServer(max_coalesce=4, clock=VirtualClock())
+    for tid, plan in plans.items():
+        srv.register(tid, plan)
+    run_load(srv, schedule)  # cold pass compiles
+    rep = run_load(srv, schedule)  # identical warm replay
+    assert rep.new_compiles == 0

@@ -1,0 +1,134 @@
+"""Deterministic concurrency invariants of the session server.
+
+N tenants registering EQUAL plans share ONE compiled session (the
+plan-keyed cache), so the cold cost of a coalesced dispatch is exactly
+``n_buckets`` bucket-solver compilations — and once warm, same-shape
+requests under sustained multi-tenant load compile NOTHING, measured by
+``bucket_compile_count()`` deltas around the serving loop.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.api.plan import Plan
+from repro.core.batched import (bucket_compile_count,
+                                clear_bucket_solver_caches)
+from repro.serve import SessionServer
+
+
+@pytest.fixture()
+def plan():
+    return Plan(graph=C.chain_graph(5), family="ising",
+                combiners=("diagonal",), n_iter=8)
+
+
+def _rows(plan, n, seed):
+    fam = plan.family_instance
+    key = jax.random.PRNGKey(seed)
+    theta = np.asarray(fam.random_params(plan.graph, jax.random.fold_in(key, 0)))
+    return np.asarray(fam.exact_sample(plan.graph, theta, n,
+                                       jax.random.fold_in(key, 1)))
+
+
+def test_equal_plan_tenants_share_one_session(plan):
+    srv = SessionServer(max_coalesce=4)
+    tenants = [srv.register(f"t{i}", plan) for i in range(4)]
+    first = tenants[0].session
+    assert all(t.session is first for t in tenants[1:])
+    # and the shared session is the plan's own cached session
+    assert first is plan.session()
+
+
+def test_cold_coalesced_dispatch_compiles_exactly_n_buckets(plan):
+    srv = SessionServer(max_coalesce=4)
+    for i in range(4):
+        srv.register(f"t{i}", plan)
+    n_buckets = plan.session().n_buckets
+    clear_bucket_solver_caches()
+    tickets = [srv.submit(f"t{i}", _rows(plan, 32, 100 + i))
+               for i in range(4)]
+    served = srv.drain()
+    assert len(served) == 4
+    # ONE union dispatch for the whole group...
+    assert all(t.result.coalesce_size == 4 for t in tickets)
+    # ...whose cold cost is one compiled program per degree bucket (the
+    # union graph repeats the same distinct padded degrees)
+    assert bucket_compile_count() == n_buckets
+    assert all(t.result.new_compiles == n_buckets for t in tickets)
+
+
+def test_warm_same_shape_requests_compile_nothing_under_load(plan):
+    srv = SessionServer(max_coalesce=4)
+    for i in range(4):
+        srv.register(f"t{i}", plan)
+    # warm the (fit, shape) path once
+    for i in range(4):
+        srv.submit(f"t{i}", _rows(plan, 32, 200 + i))
+    srv.drain()
+    c0 = bucket_compile_count()
+    tickets = []
+    for rnd in range(3):  # sustained load: 3 rounds x 4 tenants
+        for i in range(4):
+            tickets.append(srv.submit(f"t{i}",
+                                      _rows(plan, 32, 300 + 10 * rnd + i)))
+    srv.drain()
+    assert all(t.done for t in tickets)
+    assert bucket_compile_count() - c0 == 0
+    assert all(t.result.new_compiles == 0 for t in tickets)
+
+
+def test_warm_stream_rounds_settle_to_zero_compiles(plan):
+    """Streaming rounds stabilize: after the cold round and the one
+    cold->warm flag flip (the warm-start guard is a static solver
+    argument), every further same-shape round compiles nothing."""
+    srv = SessionServer(max_coalesce=2)
+    srv.register("a", plan)
+    srv.register("b", plan)
+    # 8-row rounds keep 5 rounds within the 64-row buffer capacity, so the
+    # padded pool shape (part of the coalesce key) stays constant
+    for rnd in range(2):  # cold round + first warm round pay compiles
+        srv.submit("a", _rows(plan, 8, 400 + rnd), kind="stream")
+        srv.submit("b", _rows(plan, 8, 450 + rnd), kind="stream")
+        srv.drain()
+    c0 = bucket_compile_count()
+    tickets = []
+    for rnd in range(3):
+        tickets.append(srv.submit("a", _rows(plan, 8, 500 + rnd),
+                                  kind="stream"))
+        tickets.append(srv.submit("b", _rows(plan, 8, 550 + rnd),
+                                  kind="stream"))
+        srv.drain()
+    assert all(t.done for t in tickets)
+    assert all(t.result.coalesce_size == 2 for t in tickets)
+    assert bucket_compile_count() - c0 == 0
+
+
+def test_same_tenant_requests_never_share_a_group(plan):
+    """Two queued requests of one tenant stay ordered across groups (a
+    tenant appears at most once per dispatch)."""
+    srv = SessionServer(max_coalesce=4)
+    srv.register("a", plan)
+    srv.register("b", plan)
+    t1 = srv.submit("a", _rows(plan, 32, 600))
+    t2 = srv.submit("b", _rows(plan, 32, 601))
+    t3 = srv.submit("a", _rows(plan, 32, 602))
+    first = srv.pump()
+    assert {t.seq for t in first} == {t1.seq, t2.seq}
+    assert t3.status == "queued"
+    second = srv.pump()
+    assert [t.seq for t in second] == [t3.seq]
+    assert t3.result.coalesce_size == 1
+
+
+def test_coalesce_disabled_serves_serially(plan):
+    srv = SessionServer(coalesce=False)
+    for i in range(3):
+        srv.register(f"t{i}", plan)
+    tickets = [srv.submit(f"t{i}", _rows(plan, 32, 700 + i))
+               for i in range(3)]
+    srv.drain()
+    assert all(t.result.coalesce_size == 1 for t in tickets)
+    snap = srv.metrics()
+    assert snap.counter("serve.dispatches") == 3

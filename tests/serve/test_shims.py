@@ -1,0 +1,52 @@
+"""Regression tests for the serving-tier migration shims.
+
+The transformer-era ``repro.serve.engine`` / ``repro.launch.serve`` were
+replaced when ``repro.serve`` became the estimation session server; their
+module names are kept as shims that raise a ``ModuleNotFoundError`` whose
+message points at the new homes (``repro.models.decoding`` for decode,
+``repro.serve.SessionServer`` for serving), so a stale import fails loudly
+with directions instead of resolving to the wrong subsystem.
+"""
+import importlib
+
+import pytest
+
+
+def test_serve_engine_shim_raises_with_pointers():
+    with pytest.raises(ModuleNotFoundError) as ei:
+        importlib.import_module("repro.serve.engine")
+    msg = str(ei.value)
+    assert "repro.models.decoding" in msg
+    assert "SessionServer" in msg
+    assert ei.value.name == "repro.serve.engine"
+
+
+def test_serve_engine_shim_raises_on_reimport_too():
+    """A failed import is not cached as a success: importing the shim a
+    second time raises the same migration error."""
+    for _ in range(2):
+        with pytest.raises(ModuleNotFoundError, match="repro.models.decoding"):
+            importlib.import_module("repro.serve.engine")
+
+
+def test_launch_serve_shim_raises_with_pointers():
+    with pytest.raises(ModuleNotFoundError) as ei:
+        importlib.import_module("repro.launch.serve")
+    msg = str(ei.value)
+    assert "repro.serve" in msg
+    assert "serve_bench" in msg
+    assert ei.value.name == "repro.launch.serve"
+
+
+def test_serve_package_still_imports():
+    """The shim does not poison the parent package: ``repro.serve`` is the
+    session-server package and imports cleanly."""
+    import repro.serve as S
+    assert hasattr(S, "SessionServer")
+    assert hasattr(S, "BudgetSpec")
+
+
+def test_decode_helpers_live_at_new_home():
+    from repro.models import decoding as D
+    for fn in ("make_serve_step", "prefill", "generate"):
+        assert callable(getattr(D, fn))
