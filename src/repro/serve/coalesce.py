@@ -86,10 +86,14 @@ def coalesced_plan(plan: Plan, r: int) -> Plan:
     dispatches through: same family/combiners/solver budget on the
     ``r``-copy union graph, with per-tenant side channels (faults,
     telemetry) stripped — the server owns observability for coalesced
-    dispatches. ``r = 1`` returns the tenant plan itself, so singleton
-    groups share the tenant's own compiled session."""
+    dispatches. For a fault-free plan, ``r = 1`` returns the tenant plan
+    itself, so singleton groups share the tenant's own compiled session;
+    faults are stripped on the ``r = 1`` path too, so plan-level fault
+    injection never depends on whether a request happened to coalesce
+    (the server additionally rejects fault-carrying plans at
+    registration)."""
     if r == 1:
-        return plan
+        return plan if plan.faults is None else plan.replace(faults=None)
     g = union_graph(plan.graph, r)
     tf = None
     if plan.theta_fixed is not None:

@@ -190,6 +190,14 @@ class SessionServer:
         if budget is not None and not isinstance(budget, BudgetSpec):
             raise TypeError(f"budget must be a BudgetSpec or None, got "
                             f"{type(budget).__name__}")
+        if plan.faults is not None:
+            raise ValueError(
+                f"tenant {tenant_id!r}'s plan carries a FaultPlan; the "
+                f"server never injects plan-level faults (coalesced "
+                f"dispatches strip them, so injection would depend on "
+                f"which requests happened to group) — register "
+                f"plan.replace(faults=None) and drive fault scenarios "
+                f"through repro.stream.simulator instead")
         t = Tenant(tenant_id, plan, budget, float(self.clock()))
         self._tenants[tenant_id] = t
         if self.recorder.enabled:
@@ -316,15 +324,21 @@ class SessionServer:
         self._ingest_if_needed(head)
         key = self._group_key(head)
         group = [head]
-        tenants = {head.tenant_id}
+        # Every tenant encountered in the scan is marked seen — grouped or
+        # not — so at most the FIRST queued request per tenant is ever
+        # considered (or stream-ingested) per pump. A candidate that fails
+        # the kind/plan/key checks still blocks that tenant's later
+        # requests; otherwise a later round could be ingested (or even
+        # dispatched) ahead of an earlier one, breaking per-tenant FIFO
+        # order and the coalesced==serial guarantee.
+        seen = {head.tenant_id}
         if self.max_coalesce > 1:
             for ticket in list(self._queue)[1:]:
                 if len(group) >= self.max_coalesce:
                     break
-                if ticket.tenant_id in tenants:
-                    # same tenant queued again: a later round of the same
-                    # stream (or a later fit) — must wait for this group
+                if ticket.tenant_id in seen:
                     continue
+                seen.add(ticket.tenant_id)
                 if ticket.kind != head.kind:
                     continue
                 if (self._tenants[ticket.tenant_id].plan
@@ -334,7 +348,6 @@ class SessionServer:
                 if self._group_key(ticket) != key:
                     continue
                 group.append(ticket)
-                tenants.add(ticket.tenant_id)
         for ticket in group:
             self._queue.remove(ticket)
         return group
@@ -359,13 +372,13 @@ class SessionServer:
         c0 = bucket_compile_count()
         if group[0].kind == "fit":
             Xs = [t._X for t in group]
-            n = int(Xs[0].shape[0])
+            # fit groups key on the request X shape, so one n fits all
+            n_fit = int(Xs[0].shape[0])
             X_union = np.concatenate(Xs + [Xs[-1]] * (r_pad - r), axis=1)
             union_fits = usession.fit_local(
                 X_union, want_influence=session.want_influence)
         else:
             ests = [self._tenants[t.tenant_id].stream for t in group]
-            n = int(ests[0].buffer.n)
             pads = ests + [ests[-1]] * (r_pad - r)
             X_union = np.concatenate([e.buffer.data for e in pads], axis=1)
             sw = np.concatenate(
@@ -389,6 +402,12 @@ class SessionServer:
             tenant = self._tenants[ticket.tenant_id]
             if ticket.kind == "stream":
                 tenant.stream._finish_refit(fits)
+                # stream groups key on the padded buffer shape, so group
+                # members may carry different ingested totals — report
+                # each tenant's own pool count
+                n_served = int(tenant.stream.buffer.n)
+            else:
+                n_served = n_fit
             combined = {
                 c.name: c.combine(plan.graph, fits,
                                   include_singleton=plan.include_singleton,
@@ -398,7 +417,7 @@ class SessionServer:
             ticket.result = ServeResult(
                 tenant_id=ticket.tenant_id, kind=ticket.kind,
                 theta=combined[plan.combiners[0]], combined=combined,
-                fits=fits, n_samples=n, coalesce_size=r,
+                fits=fits, n_samples=n_served, coalesce_size=r,
                 new_compiles=new_compiles, comm_scalars=ticket.comm_cost)
             ticket.status = "done"
             ticket.latency_s = now_wall - ticket.submitted_wall

@@ -165,6 +165,22 @@ def test_submit_validation_errors(plan):
         srv.register("a", plan)
 
 
+def test_register_rejects_fault_carrying_plan(plan):
+    """The server never injects plan-level faults — coalesced dispatches
+    strip them, so admitting a fault-carrying plan would make injection
+    depend on which requests happened to group. Rejected at the door."""
+    from repro.serve.coalesce import coalesced_plan
+    from repro.stream.faults import CrashSpec, FaultPlan
+    faulty = plan.replace(faults=FaultPlan(crashes=(CrashSpec(node=0, at=1),)))
+    srv = SessionServer()
+    with pytest.raises(ValueError, match="FaultPlan"):
+        srv.register("a", faulty)
+    # and coalesced_plan is fault-free for EVERY group size, including the
+    # singleton path that otherwise passes the tenant plan through
+    assert coalesced_plan(faulty, 1).faults is None
+    assert coalesced_plan(faulty, 2).faults is None
+
+
 def test_budget_spec_validation():
     with pytest.raises(ValueError, match=">= 0"):
         BudgetSpec(scalars=-1)

@@ -122,6 +122,79 @@ def test_same_tenant_requests_never_share_a_group(plan):
     assert t3.result.coalesce_size == 1
 
 
+def test_fifo_preserved_when_stream_keys_mismatch(plan):
+    """A same-plan candidate whose group key mismatches (cold tenant vs
+    warm head) still blocks that tenant's LATER queued requests: only the
+    first queued request per tenant is ever considered (or ingested) per
+    pump, so stream rows enter the pool in submission order and each
+    round's refit sees exactly the serial-serving pool."""
+    srv = SessionServer(max_coalesce=4)
+    srv.register("a", plan)
+    srv.register("b", plan)
+    # warm a with one round so its next round's warm-start flag (part of
+    # the coalesce key) mismatches b's cold first round
+    srv.submit("a", _rows(plan, 8, 800), kind="stream")
+    srv.drain()
+    ta2 = srv.submit("a", _rows(plan, 8, 801), kind="stream")
+    Xb1, Xb2 = _rows(plan, 8, 810), _rows(plan, 8, 811)
+    tb1 = srv.submit("b", Xb1, kind="stream")
+    tb2 = srv.submit("b", Xb2, kind="stream")
+    first = srv.pump()
+    assert [t.seq for t in first] == [ta2.seq]
+    # b's first round was considered (and ingested) but not grouped; its
+    # SECOND round must not have been ingested behind it
+    assert int(srv.tenant("b").stream.buffer.n) == 8
+    second = srv.pump()
+    assert [t.seq for t in second] == [tb1.seq]
+    assert tb1.result.n_samples == 8
+    third = srv.pump()
+    assert [t.seq for t in third] == [tb2.seq]
+    assert tb2.result.n_samples == 16
+    # the round-1 refit saw only round-1 rows: bit-identical to serial
+    ref_srv = SessionServer(coalesce=False)
+    ref_srv.register("b", plan)
+    r1 = ref_srv.submit("b", Xb1, kind="stream")
+    ref_srv.drain()
+    np.testing.assert_allclose(tb1.result.theta, r1.result.theta,
+                               atol=1e-10, rtol=0)
+
+
+def test_fifo_preserved_across_kinds(plan):
+    """A tenant whose first queued request is a fit must not have a later
+    stream request considered (or its rows ingested) ahead of it, even
+    when the stream request matches the pumping group's kind."""
+    srv = SessionServer(max_coalesce=4)
+    srv.register("a", plan)
+    srv.register("b", plan)
+    ts_a = srv.submit("a", _rows(plan, 8, 820), kind="stream")
+    tf_b = srv.submit("b", _rows(plan, 8, 821), kind="fit")
+    ts_b = srv.submit("b", _rows(plan, 8, 822), kind="stream")
+    first = srv.pump()
+    assert [t.seq for t in first] == [ts_a.seq]
+    # b's stream was never touched: its earlier fit still gates it
+    assert srv.tenant("b")._stream is None
+    second = srv.pump()
+    assert [t.seq for t in second] == [tf_b.seq]
+    third = srv.pump()
+    assert [t.seq for t in third] == [ts_b.seq]
+
+
+def test_stream_group_members_report_own_n_samples(plan):
+    """Stream groups key on the padded buffer shape, so members with
+    different ingested totals coalesce — each must report its own pool
+    count, not the head tenant's."""
+    srv = SessionServer(max_coalesce=2)
+    srv.register("a", plan)
+    srv.register("b", plan)
+    ta = srv.submit("a", _rows(plan, 8, 830), kind="stream")
+    tb = srv.submit("b", _rows(plan, 16, 831), kind="stream")
+    served = srv.pump()
+    assert {t.seq for t in served} == {ta.seq, tb.seq}
+    assert ta.result.coalesce_size == 2
+    assert ta.result.n_samples == 8
+    assert tb.result.n_samples == 16
+
+
 def test_coalesce_disabled_serves_serially(plan):
     srv = SessionServer(coalesce=False)
     for i in range(3):
