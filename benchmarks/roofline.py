@@ -1,129 +1,21 @@
-"""Roofline analysis (deliverable g): derive compute/memory/collective terms
-from the dry-run records for every (arch x shape) on the single-pod mesh.
+"""Migration shim — the transformer-era roofline table is gone.
 
-  compute term    = FLOPs / (chips * peak)    [loop-corrected dot FLOPs]
-  memory term     = bytes / (chips * HBM bw)  [loop-corrected HBM traffic]
-  collective term = coll bytes / link bw      [per-device, post-SPMD]
+This module used to derive a compute/memory/collective roofline for the
+dormant transformer model zoo (``repro.models.transformer`` shapes on a
+16x16 TPU mesh). The estimation repro's roofline evidence now lives in
+``BENCH_kernels.json``: every compiled fused-CL row carries dot FLOPs,
+HBM bytes, and FLOP/byte from the loop-aware HLO walker
+(:mod:`repro.launch.hloparse`), and ``tools/gen_tables.py`` renders them
+as the kernel-comparison + roofline tables.
 
-Dry-run FLOPs/bytes are PER-DEVICE (post-SPMD partitioned module), so the
-per-chip division is already applied. Hardware: TPU v5e — 197 TFLOP/s bf16,
-819 GB/s HBM, ~50 GB/s/link ICI.
-
-MODEL_FLOPS (per device): 6*N*D/chips for training (N = non-embedding
-params; N_active for MoE), 2*N*B/chips per decoded token. The ratio
-MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+Importing this module raises so stale call sites fail loudly with a
+pointer instead of silently rendering a table about models this repo no
+longer benchmarks.
 """
-from __future__ import annotations
-
-import glob
-import json
-import os
-
-import jax
-import numpy as np
-
-import repro.configs as CFG
-from repro.models import transformer as T
-from .util import emit
-
-PEAK = 197e12          # bf16 FLOP/s per chip
-HBM = 819e9            # B/s per chip
-LINK = 50e9            # B/s per chip ICI
-CHIPS = 256
-
-_SHAPES = {
-    "train_4k": (4096, 256, "train"),
-    "prefill_32k": (32768, 32, "prefill"),
-    "decode_32k": (32768, 128, "decode"),
-    "long_500k": (524288, 1, "decode"),
-}
-
-
-def param_counts(cfg):
-    """(total, active, embedding) parameter counts from the abstract tree."""
-    tree = T.abstract_params(cfg)
-    flat = jax.tree_util.tree_flatten(
-        tree, is_leaf=lambda x: hasattr(x, "axes"))[0]
-    total = sum(int(np.prod(ps.shape)) for ps in flat)
-    embed = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
-    active = total
-    if cfg.n_experts:
-        de = cfg.d_expert or cfg.d_ff
-        per_expert = 3 * cfg.d_model * de
-        moe_layers = sum(1 for k in cfg.pattern if k == "attn_moe") \
-            * cfg.n_units + sum(
-                1 for r in range(cfg.n_rem_layers)
-                if cfg.pattern[r % len(cfg.pattern)] == "attn_moe")
-        inactive = per_expert * (cfg.n_experts - cfg.experts_per_tok) \
-            * moe_layers
-        active = total - inactive
-    return total, active, embed
-
-
-def model_flops_per_device(cfg, shape_name):
-    s, b, kind = _SHAPES[shape_name]
-    total, active, embed = param_counts(cfg)
-    n = active - embed
-    if kind == "train":
-        return 6.0 * n * (s * b) / CHIPS
-    if kind == "prefill":
-        return 2.0 * n * (s * b) / CHIPS
-    return 2.0 * n * b / CHIPS          # decode: one token per sequence
-
-
-def load_records(out_dir="experiments/dryrun", mesh="16x16"):
-    recs = {}
-    for path in glob.glob(os.path.join(out_dir, "*_pod.json")):
-        r = json.load(open(path))
-        if r.get("mesh") != mesh or not r.get("ok"):
-            continue
-        recs[(r["arch"], r["shape"])] = r
-    return recs
-
-
-def roofline_row(cfg, rec):
-    shape = rec["shape"]
-    t_comp = rec.get("dot_flops", 0.0) / PEAK
-    t_mem = rec.get("hbm_bytes", 0.0) / HBM
-    t_coll = rec.get("collective_bytes_total", 0.0) / LINK
-    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
-    dom = max(terms, key=terms.get)
-    mf = model_flops_per_device(cfg, shape)
-    ratio = mf / rec["dot_flops"] if rec.get("dot_flops") else float("nan")
-    return {
-        "arch": rec["arch"], "shape": shape,
-        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
-        "dominant": dom,
-        "model_flops_dev": mf,
-        "useful_ratio": ratio,
-        "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
-        "args_gib": rec["memory"]["argument_bytes"] / 2**30,
-    }
-
-
-def full_table(out_dir="experiments/dryrun"):
-    recs = load_records(out_dir)
-    rows = []
-    for (arch, shape), rec in sorted(recs.items()):
-        try:
-            cfg = CFG.get(arch)
-        except Exception:
-            continue
-        rows.append(roofline_row(cfg, rec))
-    return rows
-
-
-def main() -> None:
-    rows = full_table()
-    for r in rows:
-        emit(f"roofline_{r['arch']}_{r['shape']}", 0.0,
-             f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
-             f"collective={r['collective_s']:.2e}s dom={r['dominant']} "
-             f"useful={r['useful_ratio']:.2f} temp={r['temp_gib']:.1f}GiB")
-    if not rows:
-        emit("roofline", 0.0, "no dry-run records found — run "
-             "`python -m repro.launch.dryrun --all` first")
-
-
-if __name__ == "__main__":
-    main()
+raise ModuleNotFoundError(
+    "benchmarks.roofline has been removed: the transformer roofline table "
+    "it rendered is superseded by the per-kernel HLO roofline columns in "
+    "BENCH_kernels.json (regenerate with 'PYTHONPATH=src python -m "
+    "benchmarks.kernels_bench', render with 'python tools/gen_tables.py'). "
+    "For HLO cost analysis use repro.launch.hloparse.analyze directly.",
+    name="benchmarks.roofline")

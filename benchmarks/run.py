@@ -16,9 +16,8 @@ MODULES = (
     "fig4_large",    # Fig 4: 100-node scale-free + Euclidean
     "comm_cost",     # Sec. 1/3 communication-cost table
     "anytime_stream",  # streaming any-time engine over a lossy network
-    "kernels_bench",  # Pallas kernel oracles
+    "kernels_bench",  # kernel-path comparison rows + HLO rooflines
     "arch_steps",    # assigned-architecture step smoke timings
-    "roofline",      # deliverable (g): dry-run derived roofline table
 )
 
 

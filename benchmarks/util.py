@@ -42,16 +42,19 @@ def _git_sha() -> str:
 
 def provenance() -> dict:
     """Where/when/how this benchmark ran: git SHA (``"unknown"`` outside a
-    work tree), UTC timestamp, jax backend, and whether the Pallas kernels
-    would run compiled or in interpret mode on this backend."""
+    work tree), UTC timestamp, jax backend, and the default kernel path
+    the dispatch layer picks on this backend (the
+    :data:`repro.kernels.cl.ops.KERNEL_PATHS` taxonomy — Mosaic Pallas on
+    TPU/GPU, the XLA tiled twin elsewhere)."""
     import jax
+    from repro.kernels.cl.ops import default_kernel_path
     backend = jax.default_backend()
     return {
         "git_sha": _git_sha(),
         "timestamp": datetime.datetime.now(
             datetime.timezone.utc).isoformat(),
         "backend": backend,
-        "kernel_mode": "pallas" if backend == "tpu" else "interpret",
+        "kernel_path": default_kernel_path(backend),
     }
 
 

@@ -34,7 +34,7 @@ from ..core.graphs import Graph
 #: session-compile time (they hold device handles and do not serialize)
 MESH_POLICIES = (None, "host", "data")
 
-_PRECISIONS = ("float32", "float64")
+_PRECISIONS = ("float32", "float64", "bfloat16")
 _ADMM_INITS = ("zero", "uniform", "diagonal")
 
 
@@ -65,9 +65,13 @@ class Plan:
     precision : dtype the sample matrix is cast to before solves.
         "float64" requires jax x64 to be enabled (``JAX_ENABLE_X64=1``);
         a session verb fed samples without it raises rather than silently
-        truncating to float32. Applies to the batch/joint verbs — the
-        streaming buffer is float32 by design (see
-        :class:`~repro.stream.buffer.SampleBuffer`).
+        truncating to float32. "bfloat16" is the opt-in mixed-precision
+        mode: designs and kernel loads/matmuls run in bf16 while the
+        score/curvature Gram accumulators and all Newton solver state stay
+        float32 (tolerances in
+        :data:`repro.kernels.cl.precision.PRECISION_TOLERANCES`). Applies
+        to the batch/joint verbs — the streaming buffer is float32 by
+        design (see :class:`~repro.stream.buffer.SampleBuffer`).
     capacity : initial sample-buffer capacity for ``session.stream()``.
     admm_iters / admm_init / admm_newton_iters / admm_rho : the
         ``session.joint`` ADMM configuration (Sec. 3.2; ``admm_init`` of

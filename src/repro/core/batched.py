@@ -181,6 +181,20 @@ def _gauss_jordan_solve(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return M[:, :, d:]
 
 
+def _solver_dtype(dtype):
+    """Newton/solver state dtype for a design dtype.
+
+    bfloat16 designs keep float32 solver state — the mixed-precision mode
+    is load/matmul-side only: bf16 designs contracted against float32
+    parameters promote every Gram/score accumulation to float32 (see
+    :mod:`repro.kernels.cl.precision`), and the Newton iterate, Hessian
+    ridge, and convergence test must not quantize. float32/float64 pass
+    through untouched (bit-stable with the goldens).
+    """
+    dtype = jnp.dtype(dtype)
+    return jnp.dtype(jnp.float32) if dtype == jnp.bfloat16 else dtype
+
+
 def _bucket_design(family, X, nodes, nbrs, mask, offsets,
                    include_singleton: bool):
     """Build the channelized (k, C, d, n) bucket design + targets/masks.
@@ -194,7 +208,10 @@ def _bucket_design(family, X, nodes, nbrs, mask, offsets,
     C = family.block_dim
     # (n, k, deg_pad, C): family features of the gathered neighbor values
     F = family.edge_features(X[:, nbrs])
-    Zt = jnp.transpose(F, (1, 3, 2, 0)) * mask[:, None, :, None]
+    # cast the 0/1 mask to the design dtype so a bf16 design stays bf16
+    # (f32/f64 designs see the same promotion as before, bit-identically)
+    Zt = jnp.transpose(F, (1, 3, 2, 0)) \
+        * mask.astype(F.dtype)[:, None, :, None]
     xi = X[:, nodes].T                                       # (k, n)
     k, _, _, n = Zt.shape
 
@@ -345,7 +362,9 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
                                          offsets, include_singleton)
     k, C, d, _ = Zb.shape
     dC = d * C
-    eye = jnp.eye(dC, dtype=Zb.dtype)
+    cdtype = _solver_dtype(Zb.dtype)
+    W0 = W0.astype(cdtype)
+    eye = jnp.eye(dC, dtype=cdtype)
     # -1 on padded diagonals keeps the (exactly block-diagonal) system
     # uniformly negative definite without touching the real block's
     # Newton direction.
@@ -354,7 +373,7 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
     if weighted:
         denom = jnp.maximum(jnp.sum(sw, axis=1), 1.0)        # (k,)
     else:
-        denom = jnp.full((k,), float(n), Zb.dtype)
+        denom = jnp.full((k,), float(n), cdtype)
 
     score_curvature, grad_vec, curvature_matrix, objective, score_matrix, \
         newton_stats = _channel_ops(family, Zb, base, xi, sw, weighted, denom)
@@ -420,7 +439,7 @@ def _solve_bucket_impl(X, nodes, nbrs, mask, offsets, W0, sw,
         # only the Linear-Opt combiner reads the (k, n, dC) per-sample
         # influence stack; a session whose combiners never request
         # "influence" skips materializing it (static branch)
-        S = jnp.zeros((k, 0, dC), Zb.dtype)
+        S = jnp.zeros((k, 0, dC), cdtype)
     return W, H, J, V, S, I
 
 
@@ -619,10 +638,11 @@ def fit_all_local_batched(graph: Graph, X: jnp.ndarray,
         offsets = node_tf[jnp.asarray(b.nodes)]
         dC = (b.deg_pad + lead) * C
         sw = _bucket_weights(sample_weight, b.nodes, n)
-        W0 = _bucket_warm_start(warm_start, b, dC, lead, C, X.dtype)
+        W0 = _bucket_warm_start(warm_start, b, dC, lead, C,
+                                _solver_dtype(X.dtype))
         weighted = sample_weight is not None
         if sw is None:
-            sw = jnp.ones((1, 1), X.dtype)   # placeholder, never read
+            sw = jnp.ones((1, 1), _solver_dtype(X.dtype))  # never read
         if track:
             c0 = bucket_compile_count()
             t0 = time.perf_counter()
@@ -700,14 +720,16 @@ def _solve_bucket_prox_impl(X, nodes, nbrs, mask, offsets, W0, sw, lam, rho,
                                          offsets, include_singleton)
     k, C, d, _ = Zb.shape
     dC = d * C
-    eye = jnp.eye(dC, dtype=Zb.dtype)
+    cdtype = _solver_dtype(Zb.dtype)
+    W0 = W0.astype(cdtype)
+    eye = jnp.eye(dC, dtype=cdtype)
     cflat = _flat_coord_mask(cmask, C)
     pad_diag = (1.0 - cflat)[:, :, None] * eye[None, :, :]
     rho_diag = rho[:, :, None] * eye[None, :, :]
     if weighted:
         denom = jnp.maximum(jnp.sum(sw, axis=1), 1.0)
     else:
-        denom = jnp.full((k,), float(n), Zb.dtype)
+        denom = jnp.full((k,), float(n), cdtype)
 
     score_curvature, grad_vec, curvature_matrix, avg_loglik, _, \
         newton_stats = _channel_ops(family, Zb, base, xi, sw, weighted, denom)
@@ -870,11 +892,11 @@ def prox_update_batched(graph: Graph, X: jnp.ndarray,
                 if t0 is not None:
                     di = (lead + int(degs[row])) * C
                     W0[row, :di] = np.asarray(t0, dtype=np.float32)[:di]
-        W0 = jnp.asarray(W0, dtype=X.dtype)
+        W0 = jnp.asarray(W0, dtype=_solver_dtype(X.dtype))
         sw = _bucket_weights(sample_weight, b.nodes, n)
         weighted = sample_weight is not None
         if sw is None:
-            sw = jnp.ones((1, 1), X.dtype)
+            sw = jnp.ones((1, 1), _solver_dtype(X.dtype))
         offsets = node_tf[jnp.asarray(b.nodes)]
         if track:
             c0 = prox_compile_count()

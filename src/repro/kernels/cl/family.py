@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import cl_score_channels
-from .ref import cl_score_channels_ref
 
 
 def family_kernel_inputs(family, graph, theta, X):
@@ -36,33 +35,38 @@ def family_kernel_inputs(family, graph, theta, X):
     return F, theta_c, mask, bias
 
 
-def family_score_stats(family, graph, theta, X, *, interpret: bool = True,
+def family_score_stats(family, graph, theta, X, *,
+                       interpret: Optional[bool] = None,
                        use_pallas: Optional[bool] = None):
     """Fused (eta, r, S) channelized score statistics for any family whose
     ``kernel_kind`` has a registered epilogue. Shapes as in
     :func:`repro.kernels.cl.kernel.cl_score_channels`.
 
-    ``use_pallas=None`` picks the backend default — the compiled kernel on
-    TPU, the jnp reference elsewhere (the interpret-mode kernel is a
-    validation tool, ~10x the reference's cost on CPU; request it
-    explicitly with ``use_pallas=True, interpret=True``).
+    ``use_pallas=None`` picks the backend default through the dispatch
+    layer (:func:`repro.kernels.cl.ops.score_stats_channels_op`): the
+    compiled Mosaic kernel on TPU/GPU, the XLA-compiled tiled twin
+    elsewhere — and records the resolved path in telemetry. ``use_pallas=
+    True`` forces the Pallas kernel (``interpret=None`` compiles where the
+    backend can, interpret mode on CPU or on explicit ``interpret=True`` —
+    the validation spelling, ~10x the reference's cost); ``False`` forces
+    the jnp reference.
     """
+    from .ops import score_stats_channels_op
     F, theta_c, mask, bias = family_kernel_inputs(family, graph, theta, X)
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-        # backend default means the COMPILED kernel — interpret mode is
-        # only honored when the caller opts into the kernel explicitly
-        interpret = False
-    if use_pallas:
-        return cl_score_channels(F, theta_c, mask, bias,
-                                 kind=family.kernel_kind,
-                                 interpret=interpret)
-    return cl_score_channels_ref(F, theta_c, mask, bias,
-                                 kind=family.kernel_kind)
+    if use_pallas is None or not use_pallas:
+        return score_stats_channels_op(F, theta_c, mask, bias,
+                                       kind=family.kernel_kind,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret)
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    return cl_score_channels(F, theta_c, mask, bias,
+                             kind=family.kernel_kind,
+                             interpret=interpret)
 
 
 def fused_pseudo_score(family, graph, theta, x_pad, n_seen: int, *,
-                       interpret: bool = True,
+                       interpret: Optional[bool] = None,
                        use_pallas: Optional[bool] = None) -> np.ndarray:
     """Exact flat gradient of the average pseudo-likelihood at ``theta``
     over the first ``n_seen`` rows of a zero-padded sample buffer, via one

@@ -32,11 +32,21 @@ means F is read from HBM once and eta never round-trips.
 Grid is (j, i, k): j tiles output columns (and S rows), i tiles samples,
 k tiles the contraction. The F strip for the current sample tile is stashed
 in VMEM during the k loop, so the Gram contraction re-reads it from on-chip
-memory rather than HBM. Tiles are MXU-aligned (128x128) per channel.
+memory rather than HBM. Tile sizes default to the MXU-aligned 128s and are
+tunable through a :class:`~repro.kernels.cl.autotune.TileConfig` (static
+``tiles=`` argument); operand shapes never have to divide the tiles —
+every axis is zero-padded up to the tile grid and sliced back, and the
+padding is provably invisible (zero feature rows/columns contribute
+nothing to any contraction; the edge-tile hypothesis properties pin it).
+``interpret=None`` derives from the backend: compiled on TPU/GPU,
+interpret (the Python-speed validation mode) elsewhere — Pallas cannot
+compile on CPU, where the dispatch layer uses :mod:`.tiled` instead.
 """
 from __future__ import annotations
 
 import functools
+import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +56,16 @@ from jax.experimental.pallas import tpu as pltpu
 from .epilogues import require_epilogue
 
 BM, BN, BK = 128, 128, 128
+
+
+def _resolve(interpret: Optional[bool], tiles):
+    """(interpret, bm, bn, bk) trace-time constants from the static args."""
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    if tiles is None:
+        return interpret, BM, BN, BK
+    bm = BM if tiles.bm is None else int(tiles.bm)
+    return interpret, bm, int(tiles.bn), int(tiles.bk)
 
 
 # ------------------------------------------------------------- logits kernel
@@ -70,43 +90,46 @@ def _logits_kernel(f_ref, theta_ref, mask_ref, bias_ref, out_ref, acc_ref):
                         ).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def cl_logits(F, theta, mask, bias, *, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("interpret", "tiles"))
+def cl_logits(F, theta, mask, bias, *, interpret: Optional[bool] = None,
+              tiles=None):
     """Channelized masked-matmul logits: eta_c = F_c @ (theta_c * mask) + b_c.
 
     F: (C, n, p); theta: (C, p, p); mask: (p, p); bias: (C, p). Returns
-    eta of shape (C, n, p) in F.dtype. Shapes are padded to the 128-aligned
-    grid internally. interpret=True executes the kernel body in Python on
-    CPU (validation mode); on TPU pass interpret=False.
+    eta of shape (C, n, p) in F.dtype. Shapes are padded to the tile grid
+    internally (128s by default; ``tiles`` overrides). ``interpret=None``
+    derives from the backend — compiled on TPU/GPU, interpret elsewhere.
     """
+    interpret, bm, bn, bk = _resolve(interpret, tiles)
     C, n, p = F.shape
-    pad_n = (-n) % BM
-    pad_p = (-p) % BK
+    pad_n = (-n) % bm
+    pad_p = (-p) % math.lcm(bn, bk)
     fp = jnp.pad(F, ((0, 0), (0, pad_n), (0, pad_p)))
     tp = jnp.pad(theta, ((0, 0), (0, pad_p), (0, pad_p)))
     mp = jnp.pad(mask, ((0, pad_p), (0, pad_p)))
     bp = jnp.pad(bias, ((0, 0), (0, pad_p)))[:, None, :]
     _, np_, pp = fp.shape
 
-    grid = (np_ // BM, pp // BN, pp // BK)
+    grid = (np_ // bm, pp // bn, pp // bk)
     out = pl.pallas_call(
         _logits_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((C, BM, BK), lambda i, j, k: (0, i, k)),
-            pl.BlockSpec((C, BK, BN), lambda i, j, k: (0, k, j)),
-            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
-            pl.BlockSpec((C, 1, BN), lambda i, j, k: (0, 0, j)),
+            pl.BlockSpec((C, bm, bk), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((C, bk, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((C, 1, bn), lambda i, j, k: (0, 0, j)),
         ],
-        out_specs=pl.BlockSpec((C, BM, BN), lambda i, j, k: (0, i, j)),
+        out_specs=pl.BlockSpec((C, bm, bn), lambda i, j, k: (0, i, j)),
         out_shape=jax.ShapeDtypeStruct((C, np_, pp), F.dtype),
-        scratch_shapes=[pltpu.VMEM((C, BM, BN), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((C, bm, bn), jnp.float32)],
         interpret=interpret,
     )(fp, tp, mp, bp)
     return out[:, :n, :p]
 
 
-def ising_cl_logits(x, theta, mask, bias, *, interpret: bool = True):
+def ising_cl_logits(x, theta, mask, bias, *,
+                    interpret: Optional[bool] = None):
     """eta = x @ (theta * mask) + bias — the seed single-channel entry.
 
     x: (n, p); theta, mask: (p, p); bias: (p,). The C = 1 instance of
@@ -119,7 +142,7 @@ def ising_cl_logits(x, theta, mask, bias, *, interpret: bool = True):
 # -------------------------------------------------------------- score kernel
 def _score_kernel_c1(x_ref, theta_ref, mask_ref, bias_ref,
                      eta_ref, r_ref, s_ref, acc_ref, xstrip_ref, *, n: int,
-                     kind: str):
+                     kind: str, bn: int, bk: int):
     """Single-channel (C = 1) specialization of :func:`_score_kernel`.
 
     Same grid, same VMEM strip, same epilogue registry — but 2-D refs
@@ -143,7 +166,7 @@ def _score_kernel_c1(x_ref, theta_ref, mask_ref, bias_ref,
     def _init_s():
         s_ref[...] = jnp.zeros_like(s_ref)
 
-    xstrip_ref[:, pl.ds(k * BK, BK)] = x_ref[...].astype(jnp.float32)
+    xstrip_ref[:, pl.ds(k * bk, bk)] = x_ref[...].astype(jnp.float32)
     masked = theta_ref[...] * mask_ref[...]          # VPU fuse, no HBM trip
     acc_ref[...] += jnp.dot(x_ref[...], masked,
                             preferred_element_type=jnp.float32)
@@ -152,7 +175,7 @@ def _score_kernel_c1(x_ref, theta_ref, mask_ref, bias_ref,
     def _epilogue():
         eta = acc_ref[...] + bias_ref[...].astype(jnp.float32)
         eta_ref[...] = eta.astype(eta_ref.dtype)
-        xj = xstrip_ref[:, pl.ds(j * BN, BN)]        # j-tile nodes' values
+        xj = xstrip_ref[:, pl.ds(j * bn, bn)]        # j-tile nodes' values
         r = epilogue.residual(xj[None], eta[None])[0]
         r_ref[...] = r.astype(r_ref.dtype)
         s_ref[...] += jnp.dot(r.T, xstrip_ref[...],
@@ -165,7 +188,7 @@ def _score_kernel_c1(x_ref, theta_ref, mask_ref, bias_ref,
 
 def _score_kernel(f_ref, theta_ref, mask_ref, bias_ref,
                   eta_ref, r_ref, s_ref, acc_ref, fstrip_ref, *, n: int,
-                  kind: str):
+                  kind: str, bn: int, bk: int):
     j = pl.program_id(0)
     i = pl.program_id(1)
     k = pl.program_id(2)
@@ -183,7 +206,7 @@ def _score_kernel(f_ref, theta_ref, mask_ref, bias_ref,
         s_ref[...] = jnp.zeros_like(s_ref)
 
     # stash this sample-tile's F strip so the Gram contraction stays on-chip
-    fstrip_ref[:, :, pl.ds(k * BK, BK)] = f_ref[...].astype(jnp.float32)
+    fstrip_ref[:, :, pl.ds(k * bk, bk)] = f_ref[...].astype(jnp.float32)
     masked = theta_ref[...] * mask_ref[...][None]    # VPU fuse, no HBM trip
     for c in range(C):                               # static channel unroll
         acc_ref[c] += jnp.dot(f_ref[c], masked[c],
@@ -194,7 +217,7 @@ def _score_kernel(f_ref, theta_ref, mask_ref, bias_ref,
         eta = acc_ref[...] + bias_ref[...].astype(jnp.float32)
         eta_ref[...] = eta.astype(eta_ref.dtype)
         # the j-tile nodes' own features = the residual's target side
-        y = fstrip_ref[:, :, pl.ds(j * BN, BN)]      # (C, BM, BN)
+        y = fstrip_ref[:, :, pl.ds(j * bn, bn)]      # (C, bm, bn)
         r = epilogue.residual(y, eta)                # all channels at once
         r_ref[...] = r.astype(r_ref.dtype)
         for c in range(C):
@@ -207,9 +230,9 @@ def _score_kernel(f_ref, theta_ref, mask_ref, bias_ref,
         s_ref[...] = s_ref[...] / n
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "kind"))
+@functools.partial(jax.jit, static_argnames=("interpret", "kind", "tiles"))
 def cl_score_channels(F, theta, mask, bias, *, kind: str,
-                      interpret: bool = True):
+                      interpret: Optional[bool] = None, tiles=None):
     """(eta, r, S) = fused channelized score statistics; see module docstring.
 
     F: (C, n, p) per-channel design features (for single-channel kinds
@@ -218,35 +241,44 @@ def cl_score_channels(F, theta, mask, bias, *, kind: str,
     picks the family epilogue from the registry (one compiled kernel per
     kind). Returns eta, r of shape (C, n, p) in F.dtype and the
     cross-channel score Gram S of shape (C, C, p, p) in float32 with
-    ``S[c, e] = r_c^T F_e / n``. interpret=True runs the kernel body in
-    Python on CPU (validation); on TPU pass False.
+    ``S[c, e] = r_c^T F_e / n``.
+
+    ``interpret=None`` derives from the backend (compiled on TPU/GPU,
+    interpret — the Python-speed validation mode — elsewhere); ``tiles``
+    is an optional :class:`~repro.kernels.cl.autotune.TileConfig`
+    overriding the 128-aligned defaults. Shapes need not divide the tiles:
+    n is padded to the sample tile and p to lcm(bn, bk), and zero padding
+    is invisible to every output (sliced off for eta/r, contributing
+    exactly zero to S).
     """
     require_epilogue(kind)        # fail at trace time with a clear error
+    interpret, bm, bn, bk = _resolve(interpret, tiles)
     C, n, p = F.shape
-    pad_n = (-n) % BM
-    pad_p = (-p) % BK
+    pad_n = (-n) % bm
+    pad_p = (-p) % math.lcm(bn, bk)
     fp = jnp.pad(F, ((0, 0), (0, pad_n), (0, pad_p)))
     tp = jnp.pad(theta, ((0, 0), (0, pad_p), (0, pad_p)))
     mp = jnp.pad(mask, ((0, pad_p), (0, pad_p)))
     bp = jnp.pad(bias, ((0, 0), (0, pad_p)))[:, None, :]
     _, np_, pp = fp.shape
 
-    grid = (pp // BN, np_ // BM, pp // BK)
+    grid = (pp // bn, np_ // bm, pp // bk)
     if C == 1:
         # trace-time single-channel specialization: same skeleton, 2-D refs
         eta, r, s = pl.pallas_call(
-            functools.partial(_score_kernel_c1, n=n, kind=kind),
+            functools.partial(_score_kernel_c1, n=n, kind=kind, bn=bn,
+                              bk=bk),
             grid=grid,
             in_specs=[
-                pl.BlockSpec((BM, BK), lambda j, i, k: (i, k)),
-                pl.BlockSpec((BK, BN), lambda j, i, k: (k, j)),
-                pl.BlockSpec((BK, BN), lambda j, i, k: (k, j)),
-                pl.BlockSpec((1, BN), lambda j, i, k: (0, j)),
+                pl.BlockSpec((bm, bk), lambda j, i, k: (i, k)),
+                pl.BlockSpec((bk, bn), lambda j, i, k: (k, j)),
+                pl.BlockSpec((bk, bn), lambda j, i, k: (k, j)),
+                pl.BlockSpec((1, bn), lambda j, i, k: (0, j)),
             ],
             out_specs=[
-                pl.BlockSpec((BM, BN), lambda j, i, k: (i, j)),
-                pl.BlockSpec((BM, BN), lambda j, i, k: (i, j)),
-                pl.BlockSpec((BN, pp), lambda j, i, k: (j, 0)),
+                pl.BlockSpec((bm, bn), lambda j, i, k: (i, j)),
+                pl.BlockSpec((bm, bn), lambda j, i, k: (i, j)),
+                pl.BlockSpec((bn, pp), lambda j, i, k: (j, 0)),
             ],
             out_shape=[
                 jax.ShapeDtypeStruct((np_, pp), F.dtype),
@@ -254,26 +286,26 @@ def cl_score_channels(F, theta, mask, bias, *, kind: str,
                 jax.ShapeDtypeStruct((pp, pp), jnp.float32),
             ],
             scratch_shapes=[
-                pltpu.VMEM((BM, BN), jnp.float32),
-                pltpu.VMEM((BM, pp), jnp.float32),
+                pltpu.VMEM((bm, bn), jnp.float32),
+                pltpu.VMEM((bm, pp), jnp.float32),
             ],
             interpret=interpret,
         )(fp[0], tp[0], mp, bp[0])
         return (eta[None, :n, :p], r[None, :n, :p],
                 s[None, None, :p, :p])
     eta, r, s = pl.pallas_call(
-        functools.partial(_score_kernel, n=n, kind=kind),
+        functools.partial(_score_kernel, n=n, kind=kind, bn=bn, bk=bk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((C, BM, BK), lambda j, i, k: (0, i, k)),
-            pl.BlockSpec((C, BK, BN), lambda j, i, k: (0, k, j)),
-            pl.BlockSpec((BK, BN), lambda j, i, k: (k, j)),
-            pl.BlockSpec((C, 1, BN), lambda j, i, k: (0, 0, j)),
+            pl.BlockSpec((C, bm, bk), lambda j, i, k: (0, i, k)),
+            pl.BlockSpec((C, bk, bn), lambda j, i, k: (0, k, j)),
+            pl.BlockSpec((bk, bn), lambda j, i, k: (k, j)),
+            pl.BlockSpec((C, 1, bn), lambda j, i, k: (0, 0, j)),
         ],
         out_specs=[
-            pl.BlockSpec((C, BM, BN), lambda j, i, k: (0, i, j)),
-            pl.BlockSpec((C, BM, BN), lambda j, i, k: (0, i, j)),
-            pl.BlockSpec((C, C, BN, pp), lambda j, i, k: (0, 0, j, 0)),
+            pl.BlockSpec((C, bm, bn), lambda j, i, k: (0, i, j)),
+            pl.BlockSpec((C, bm, bn), lambda j, i, k: (0, i, j)),
+            pl.BlockSpec((C, C, bn, pp), lambda j, i, k: (0, 0, j, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((C, np_, pp), F.dtype),
@@ -281,8 +313,8 @@ def cl_score_channels(F, theta, mask, bias, *, kind: str,
             jax.ShapeDtypeStruct((C, C, pp, pp), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((C, BM, BN), jnp.float32),
-            pltpu.VMEM((C, BM, pp), jnp.float32),
+            pltpu.VMEM((C, bm, bn), jnp.float32),
+            pltpu.VMEM((C, bm, pp), jnp.float32),
         ],
         interpret=interpret,
     )(fp, tp, mp, bp)

@@ -23,9 +23,13 @@ contraction and the score/Gram contraction:
   sample tile), design slab stashed in VMEM, epilogue residual + curvature
   on the VPU, g and K accumulated on-chip across sample tiles. ``d`` and
   ``d*C`` are the tiny per-node design dims (engine buckets pad degree to
-  powers of four), so the sample axis is the only 128-tiled one; on a real
-  TPU the caller should keep ``d*C`` lane-friendly (the interpret path has
-  no such constraint).
+  powers of four), so the sample axis is the only tiled one. A
+  :class:`~repro.kernels.cl.autotune.TileConfig` supplies the sample tile
+  (``bm``) and, for real hardware, a ``lane`` target the tiny ``d*C``
+  output axis is zero-padded up to (128 = the TPU register lane width):
+  padded design rows are zero, so every score and Gram term they touch
+  vanishes identically and the outputs are sliced back — lane alignment is
+  provably invisible (the edge-tile/lane hypothesis properties pin it).
 
 Both dispatch on the static epilogue ``kind``; coordinate-major flat layout
 ``[(d0,c0), (d0,c1), ..., (d1,c0), ...]`` matches ``family.beta`` exactly.
@@ -33,6 +37,8 @@ Both dispatch on the static epilogue ``kind``; coordinate-major flat layout
 from __future__ import annotations
 
 import functools
+import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +46,7 @@ from jax.experimental import pallas as pl
 
 from .epilogues import require_epilogue
 
-BNK = 128   # sample-axis tile
+BNK = 128   # default sample-axis tile
 
 
 def _lead(eta_kcn):
@@ -134,35 +140,62 @@ def _newton_kernel(z_ref, base_ref, xi_ref, sw_ref, w_ref, g_ref, k_ref, *,
     k_ref[0, :, :] += jnp.transpose(blocks, (2, 0, 3, 1)).reshape(dC, dC)
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def lane_padded_width(d: int, C: int, lane: int) -> int:
+    """Smallest ``d' >= d`` such that ``d' * C`` is a multiple of ``lane``.
+
+    Padding the *coordinate* axis (not the flat ``d*C`` axis) keeps the
+    coordinate-major layout intact: the pad lands as trailing all-zero
+    coordinates, so ``g[:, :d*C]`` / ``K[:, :d*C, :d*C]`` slice the real
+    block back out.
+    """
+    step = lane // math.gcd(C, lane)
+    return d + ((-d) % step)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret", "tiles"))
 def bucket_newton_stats(kind: str, Zb, base, xi, W, sw=None, *,
-                        interpret: bool = True):
+                        interpret: Optional[bool] = None, tiles=None):
     """Pallas-fused (g, K) bucket Newton statistics; see module docstring.
 
-    Same contract as :func:`bucket_newton_stats_ref`. The sample axis is
-    zero-padded up to the 128 tile (zero design columns contribute nothing
-    to either contraction, so padding is exact).
+    Same contract as :func:`bucket_newton_stats_ref`. ``interpret=None``
+    derives from the backend (compiled on TPU/GPU, interpret elsewhere —
+    Pallas cannot compile on CPU). ``tiles`` is an optional
+    :class:`~repro.kernels.cl.autotune.TileConfig`: ``tiles.bm`` sets the
+    sample tile (default 128) and ``tiles.lane`` zero-pads the ``d*C``
+    output axis up to a lane multiple (see :func:`lane_padded_width`).
+    All padding — sample *and* lane — is exact: padded design entries are
+    zero, so every contraction term they touch vanishes.
     """
     require_epilogue(kind)
+    if interpret is None:
+        interpret = jax.default_backend() not in ("tpu", "gpu")
+    bm = BNK if tiles is None or tiles.bm is None else int(tiles.bm)
+    lane = None if tiles is None else tiles.lane
     k, C, d, n = Zb.shape
+    dC_out = d * C
+    if lane:
+        d_pad = lane_padded_width(d, C, lane) - d
+        if d_pad:
+            Zb = jnp.pad(Zb, ((0, 0), (0, 0), (0, d_pad), (0, 0)))
+            W = jnp.pad(W, ((0, 0), (0, d_pad * C)))
+            d = d + d_pad
     dC = d * C
-    pad_n = (-n) % BNK
+    pad_n = (-n) % bm
     Zp = jnp.pad(Zb, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
     bp = jnp.pad(base, ((0, 0), (0, 0), (0, pad_n)))
     xp = jnp.pad(xi, ((0, 0), (0, pad_n)))
     weighted = sw is not None
     swp = (jnp.pad(sw, ((0, 0), (0, pad_n))) if weighted
            else jnp.zeros((k, n + pad_n), Zb.dtype))
-    nt = (n + pad_n) // BNK
 
     g, K = pl.pallas_call(
         functools.partial(_newton_kernel, kind=kind, weighted=weighted),
-        grid=(k, nt),
+        grid=(k, (n + pad_n) // bm),
         in_specs=[
-            pl.BlockSpec((1, C, d, BNK), lambda a, t: (a, 0, 0, t)),
-            pl.BlockSpec((1, C, BNK), lambda a, t: (a, 0, t)),
-            pl.BlockSpec((1, BNK), lambda a, t: (a, t)),
-            pl.BlockSpec((1, BNK), lambda a, t: (a, t)),
+            pl.BlockSpec((1, C, d, bm), lambda a, t: (a, 0, 0, t)),
+            pl.BlockSpec((1, C, bm), lambda a, t: (a, 0, t)),
+            pl.BlockSpec((1, bm), lambda a, t: (a, t)),
+            pl.BlockSpec((1, bm), lambda a, t: (a, t)),
             pl.BlockSpec((1, dC), lambda a, t: (a, 0)),
         ],
         out_specs=[
@@ -175,4 +208,4 @@ def bucket_newton_stats(kind: str, Zb, base, xi, W, sw=None, *,
         ],
         interpret=interpret,
     )(Zp, bp, xp, swp, W)
-    return g, K
+    return g[:, :dC_out], K[:, :dC_out, :dC_out]

@@ -1,0 +1,44 @@
+"""Per-precision conformance tolerances for the fused CL kernels.
+
+``Plan.precision`` picks the dtype every design tensor is cast to before
+it reaches the kernels. float64/float32 run the whole pipeline — loads,
+matmuls, Gram accumulation — in that dtype (float64 requires
+``jax_enable_x64``). ``"bfloat16"`` is the mixed-precision mode: designs
+and feature loads are bf16, but every contraction against the float32
+solver state promotes to float32 under jnp's type promotion, so the
+score/curvature Gram *accumulators are always float32* — bf16 trims
+memory traffic and matmul width, never the reduction dtype.
+
+The table below is the documented fused-vs-ref gate each precision must
+pass in the conformance harness (max-abs error of the fused kernel
+against the float32 jnp reference on the standard conformance shapes):
+
+==========  =========  =====================================================
+precision   tolerance  why
+==========  =========  =====================================================
+float64     1e-10      golden-pinned; bit-stable contraction order
+float32     1e-5       float32 reduction jitter across contraction orders
+bfloat16    5e-2       8-bit mantissa loads; accumulation still float32, so
+                       the error is load-quantization, not drift
+==========  =========  =====================================================
+"""
+from __future__ import annotations
+
+__all__ = ["PRECISION_TOLERANCES", "precision_tolerance"]
+
+#: max-abs fused-vs-ref tolerance per Plan.precision (see module docstring).
+PRECISION_TOLERANCES = {
+    "float64": 1e-10,
+    "float32": 1e-5,
+    "bfloat16": 5e-2,
+}
+
+
+def precision_tolerance(precision: str) -> float:
+    """The documented conformance tolerance for one ``Plan.precision``."""
+    try:
+        return PRECISION_TOLERANCES[precision]
+    except KeyError:
+        raise ValueError(
+            f"no documented tolerance for precision {precision!r}; known: "
+            f"{tuple(PRECISION_TOLERANCES)}") from None

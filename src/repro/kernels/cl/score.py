@@ -17,6 +17,8 @@ means a growing stream re-uses one compiled kernel per capacity.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 from .epilogues import registered_kinds, require_epilogue
 from .kernel import cl_score_channels
 
@@ -30,15 +32,16 @@ KERNEL_KINDS = registered_kinds()
 
 
 def cl_score(x, theta, mask, bias, *, kind: str = "ising",
-             interpret: bool = True):
+             interpret: Optional[bool] = None, tiles=None):
     """(eta, r, S) = fused single-channel score statistics.
 
     x: (n, p); theta, mask: (p, p); bias: (p,). ``kind`` picks the family
     epilogue (one compiled kernel per kind); multi-channel kinds raise —
     use :func:`cl_score_channels` / ``family_score_stats`` for those.
     Returns eta, r of shape (n, p) in x.dtype and S of shape (p, p) in
-    float32. interpret=True runs the kernel body in Python on CPU
-    (validation); on TPU pass False.
+    float32. ``interpret=None`` derives from the backend (compiled on
+    TPU/GPU, interpret mode — Python-speed validation — elsewhere);
+    ``tiles`` is an optional autotuner :class:`TileConfig`.
     """
     ep = require_epilogue(kind)
     if ep.channels != "single":
@@ -46,17 +49,20 @@ def cl_score(x, theta, mask, bias, *, kind: str = "ising",
             f"kind {kind!r} is multi-channel (C > 1); use cl_score_channels "
             f"with (C, n, p) inputs — see repro.kernels.cl.family")
     eta, r, S = cl_score_channels(x[None], theta[None], mask, bias[None],
-                                  kind=kind, interpret=interpret)
+                                  kind=kind, interpret=interpret,
+                                  tiles=tiles)
     return eta[0], r[0], S[0, 0]
 
 
-def ising_cl_score(x, theta, mask, bias, *, interpret: bool = True):
+def ising_cl_score(x, theta, mask, bias, *,
+                   interpret: Optional[bool] = None):
     """Ising instance of :func:`cl_score` (seed-compatible entry point)."""
     return cl_score(x, theta, mask, bias, kind="ising", interpret=interpret)
 
 
 def cl_score_padded(x_pad, theta, mask, bias, n_seen: int, *,
-                    kind: str = "ising", interpret: bool = True):
+                    kind: str = "ising",
+                    interpret: Optional[bool] = None):
     """Fused score statistics over a zero-padded streaming buffer.
 
     ``x_pad`` is a capacity-doubling sample buffer whose rows past ``n_seen``
@@ -79,14 +85,14 @@ def cl_score_padded(x_pad, theta, mask, bias, n_seen: int, *,
 
 
 def ising_cl_score_padded(x_pad, theta, mask, bias, n_seen: int, *,
-                          interpret: bool = True):
+                          interpret: Optional[bool] = None):
     """Ising instance of :func:`cl_score_padded` (seed-compatible name)."""
     return cl_score_padded(x_pad, theta, mask, bias, n_seen, kind="ising",
                            interpret=interpret)
 
 
 def cl_score_channels_padded(F_pad, theta, mask, bias, n_seen: int, *,
-                             kind: str, interpret: bool = True):
+                             kind: str, interpret: Optional[bool] = None):
     """Channelized :func:`cl_score_padded`: F_pad is (C, capacity, p) with
     all-zero feature rows past ``n_seen`` (for Potts, zero-padded raw rows
     ARE the all-zero reference-state indicator rows). S is renormalized to

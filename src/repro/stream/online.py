@@ -265,7 +265,8 @@ class StreamingEstimator:
         return fits
 
     # ----------------------------------------------------------- diagnostics
-    def score_norm(self, theta: np.ndarray, interpret: bool = True) -> float:
+    def score_norm(self, theta: np.ndarray,
+                   interpret: Optional[bool] = None) -> float:
         """||grad pseudo-loglik(theta)|| over the pooled samples."""
         g = pseudo_score(self.graph, theta, self.buffer.data, self.buffer.n,
                          interpret=interpret, family=self.family)
@@ -273,7 +274,7 @@ class StreamingEstimator:
 
 
 def pseudo_score(graph: Graph, theta: np.ndarray, x_pad,
-                 n_seen: int, interpret: bool = True,
+                 n_seen: int, interpret: Optional[bool] = None,
                  family=None, use_pallas: Optional[bool] = None) -> np.ndarray:
     """Exact flat gradient of the average pseudo-likelihood at ``theta``.
 
@@ -288,10 +289,11 @@ def pseudo_score(graph: Graph, theta: np.ndarray, x_pad,
     without an epilogue fall back to the autodiff reference score over the
     live rows.
 
-    ``use_pallas=None`` takes the backend default — the compiled kernel on
-    TPU, the (identical, much faster on CPU) jnp reference elsewhere; pass
-    ``use_pallas=True`` to force the kernel body, in which case
-    ``interpret`` chooses interpret vs compiled execution.
+    ``use_pallas=None`` takes the backend default through the dispatch
+    layer — the compiled Mosaic kernel on TPU/GPU, the XLA-compiled tiled
+    twin elsewhere; pass ``use_pallas=True`` to force the Pallas kernel
+    body, in which case ``interpret`` chooses interpret vs compiled
+    execution (``None`` = compiled where the backend supports it).
     """
     if family is None:
         family = ISING

@@ -51,7 +51,8 @@ def plans(draw):
         include_singleton=include_singleton, theta_fixed=theta_fixed,
         n_iter=draw(st.integers(min_value=1, max_value=60)),
         mesh=mesh,
-        precision=draw(st.sampled_from(["float32", "float64"])),
+        precision=draw(st.sampled_from(["float32", "float64",
+                                        "bfloat16"])),
         capacity=draw(st.integers(min_value=1, max_value=256)),
         admm_iters=draw(st.integers(min_value=1, max_value=40)),
         admm_init=draw(st.sampled_from(["zero", "uniform", "diagonal"])),

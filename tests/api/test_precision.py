@@ -1,0 +1,83 @@
+"""Mixed-precision plan contract: bfloat16 is strictly opt-in, documented,
+and numerically gated; float32/float64 behavior is untouched by it."""
+import numpy as np
+import pytest
+
+import repro.api as A
+import repro.core as C
+from repro.kernels.cl.precision import (PRECISION_TOLERANCES,
+                                        precision_tolerance)
+
+
+def _data(g, n=400, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.sign(rng.standard_normal((n, g.p))).astype(np.float32)
+    x[x == 0] = 1.0
+    return x
+
+
+def test_bfloat16_plan_round_trips():
+    g = C.chain_graph(6)
+    plan = A.Plan(graph=g, precision="bfloat16", combiners=("uniform",))
+    assert A.Plan.from_dict(plan.to_dict()) == plan
+    assert plan.to_dict()["precision"] == "bfloat16"
+
+
+def test_unknown_precision_rejected():
+    g = C.chain_graph(4)
+    with pytest.raises(ValueError, match="precision"):
+        A.Plan(graph=g, precision="float16")
+
+
+def test_precision_tolerance_table():
+    assert set(PRECISION_TOLERANCES) == {"float64", "float32", "bfloat16"}
+    assert precision_tolerance("bfloat16") == \
+        PRECISION_TOLERANCES["bfloat16"]
+    with pytest.raises(ValueError, match="float8"):
+        precision_tolerance("float8")
+
+
+def test_bfloat16_fit_within_documented_tolerance_of_float32():
+    """An end-to-end bf16 session fit (bf16 designs, f32 Gram/solver
+    state) lands within the documented bfloat16 tolerance of the float32
+    fit — on Gaussian data, where bf16 load quantization is real."""
+    g = C.chain_graph(8)
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((500, g.p)).astype(np.float32)
+    kw = dict(graph=g, family="gaussian", combiners=("uniform", "diagonal"))
+    r32 = A.Plan(**kw).session().fit(X)
+    rbf = A.Plan(precision="bfloat16", **kw).session().fit(X)
+    assert np.all(np.isfinite(rbf.theta))
+    err = np.max(np.abs(r32.theta - rbf.theta))
+    assert err < PRECISION_TOLERANCES["bfloat16"]
+    for scheme in kw["combiners"]:
+        assert np.max(np.abs(r32.combined[scheme]
+                             - rbf.combined[scheme])) \
+            < PRECISION_TOLERANCES["bfloat16"]
+
+
+def test_bfloat16_is_strictly_opt_in():
+    """A float32 plan's fit is bit-identical whether or not bf16 code
+    paths exist in the process — mixed precision must never leak."""
+    g = C.chain_graph(6)
+    X = _data(g)
+    a = A.Plan(graph=g, combiners=("uniform",)).session().fit(X)
+    # interleave a bf16 fit, then refit f32: still bit-identical
+    A.Plan(graph=g, combiners=("uniform",),
+           precision="bfloat16").session().fit(X)
+    b = A.Plan(graph=g, combiners=("uniform",)).session().fit(X)
+    np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+
+
+def test_bfloat16_joint_admm_runs_finite():
+    """The joint (ADMM) verb also survives bf16 designs: the proximal
+    solver keeps float32 state, so iterates stay finite and close to the
+    float32 run."""
+    g = C.chain_graph(5)
+    X = _data(g, n=300, seed=7)
+    kw = dict(graph=g, combiners=("uniform",), admm_iters=5)
+    t32 = A.Plan(**kw).session().joint(X)
+    tbf = A.Plan(precision="bfloat16", **kw).session().joint(X)
+    assert np.all(np.isfinite(tbf.theta))
+    assert np.max(np.abs(np.asarray(t32.theta) - np.asarray(tbf.theta))) \
+        < PRECISION_TOLERANCES["bfloat16"]

@@ -280,6 +280,30 @@ def test_fused_kernel_matches_reference(setup):
                                    atol=1e-5, rtol=1e-5)
 
 
+def test_fused_kernel_bfloat16_within_documented_tolerance(setup):
+    """Mixed-precision conformance gate: the fused pipeline on bfloat16
+    designs (Gram accumulation stays float32 via dtype promotion) matches
+    the float32 reference within the documented
+    ``PRECISION_TOLERANCES["bfloat16"]`` — for every registered family,
+    on both the chunked compiled-CPU twin and the whole-axis path."""
+    from repro.kernels.cl.precision import PRECISION_TOLERANCES
+    from repro.kernels.cl.tiled import cl_score_channels_tiled
+    fam, g, theta, X = setup
+    t32 = jnp.asarray(theta, jnp.float32)
+    Xj = jnp.asarray(X[:256])
+    F, tc, mask, bias = family_kernel_inputs(fam, g, t32, Xj)
+    ref = cl_score_channels_ref(F, tc, mask, bias, kind=fam.kernel_kind)
+    tol = PRECISION_TOLERANCES["bfloat16"]
+    for chunk in (None, 64):
+        out = cl_score_channels_tiled(F.astype(jnp.bfloat16), tc, mask,
+                                      bias, kind=fam.kernel_kind,
+                                      chunk=chunk)
+        for o, r in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(o, np.float32),
+                                       np.asarray(r, np.float32),
+                                       atol=tol, rtol=tol)
+
+
 # --------------------------------------------------- sampler vs oracle
 def test_sampler_moments_match_exact_oracle(case):
     """Family-generic chromatic Gibbs hits the exact sufficient-statistic

@@ -1,6 +1,8 @@
 """Generate markdown tables from the machine-readable benchmark records:
-the EXPERIMENTS.md dry-run + roofline tables from experiments/dryrun/*.json
-and the streaming/hostile-network tables from BENCH_stream.json.
+the EXPERIMENTS.md dry-run table from experiments/dryrun/*.json, the
+kernel-path comparison + per-kernel HLO roofline tables from
+BENCH_kernels.json, and the streaming/hostile-network tables from
+BENCH_stream.json.
 
 The dry-run records are not checked in — generate them first with the
 dry-run harness (its ``--out`` default is exactly the directory this
@@ -9,7 +11,8 @@ script reads):
     PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
     PYTHONPATH=src python tools/gen_tables.py > experiments/tables.md
 
-BENCH_stream.json is produced by ``python -m benchmarks.anytime_stream``.
+BENCH_kernels.json is produced by ``python -m benchmarks.kernels_bench``
+and BENCH_stream.json by ``python -m benchmarks.anytime_stream``.
 Records carrying an unknown ``schema_version`` are REJECTED loudly (exit
 1) rather than rendered wrong: a version this reader does not know means
 the payload layout changed after this script was written.
@@ -20,10 +23,6 @@ import os
 import sys
 
 sys.path.insert(0, "src"); sys.path.insert(0, ".")
-
-import repro.configs as CFG               # noqa: E402
-from benchmarks.roofline import (model_flops_per_device, PEAK, HBM,   # noqa
-                                 LINK)
 
 
 def fmt(x, unit=""):
@@ -50,6 +49,74 @@ def check_schema(payload: dict, path: str) -> None:
             f"regenerate the record or update tools/gen_tables.py")
 
 
+def _prov_line(payload: dict) -> None:
+    prov = payload.get("provenance")
+    if prov:
+        mode = prov.get("kernel_path", prov.get("kernel_mode", "?"))
+        print(f"_{prov.get('backend', '?')}/{mode}, "
+              f"{prov.get('git_sha', 'unknown')[:12]}, "
+              f"{prov.get('timestamp', '?')}_\n")
+
+
+def kernel_tables():
+    """Render BENCH_kernels.json: the per-path comparison rows (ref /
+    compiled / interpret, with measured speedups and tuned tiles) and the
+    per-kernel HLO roofline columns that superseded benchmarks.roofline."""
+    path = "BENCH_kernels.json"
+    print("\n### Kernel path comparison (BENCH_kernels.json)\n")
+    if not os.path.exists(path):
+        print("(no record — run `PYTHONPATH=src python -m "
+              "benchmarks.kernels_bench`)")
+        return
+    payload = json.load(open(path))
+    check_schema(payload, path)
+    _prov_line(payload)
+    print("| op | shape | ref us | compiled us | speedup | path | tiles | "
+          "interpret us | max err |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    rows = []
+    for fam, rec in sorted(payload.get("families", {}).items()):
+        r = rec.get("rows", {})
+        comp = r.get("compiled", {})
+        rows.append((f"score/{fam}", rec.get("shape", "?"), r.get("ref", {}),
+                     comp, r.get("interpret", {}).get("us")))
+    for kind, rec in sorted(payload.get("newton", {}).items()):
+        comp = {"us": rec.get("compiled_us"),
+                "speedup_vs_ref": rec.get("speedup_vs_ref"),
+                "kernel_path": rec.get("kernel_path"),
+                "max_err": rec.get("max_err"), "tiles": rec.get("tiles"),
+                "hlo": rec.get("hlo")}
+        rows.append((f"newton/{kind}", rec.get("shape", "?"),
+                     {"us": rec.get("ref_us")}, comp, None))
+    def cell(v, spec):
+        return format(v, spec) if v is not None else "-"
+
+    for op, shape, ref, comp, us_int in rows:
+        tiles = comp.get("tiles") or {}
+        tdesc = ",".join(f"{k}={v}" for k, v in sorted(tiles.items())
+                         if v is not None) or "-"
+        speedup = comp.get("speedup_vs_ref")
+        print(f"| {op} | {shape} | {cell(ref.get('us'), '.0f')} | "
+              f"{cell(comp.get('us'), '.0f')} | "
+              f"{cell(speedup, '.2f')}{'x' if speedup is not None else ''} | "
+              f"{comp.get('kernel_path', '?')} | {tdesc} | "
+              f"{cell(us_int, '.0f')} | "
+              f"{cell(comp.get('max_err'), '.1e')} |")
+
+    print("\n### Kernel roofline (HLO dot FLOPs / HBM bytes, "
+          "loop-corrected)\n")
+    print("| op | dot FLOPs | HBM bytes | FLOP/byte |")
+    print("|---|---|---|---|")
+    for op, shape, ref, comp, us_int in rows:
+        hlo = comp.get("hlo") or {}
+        if "error" in hlo or not hlo:
+            print(f"| {op} | - | - | {hlo.get('error', 'n/a')} |")
+            continue
+        print(f"| {op} | {fmt(hlo.get('dot_flops'))} | "
+              f"{fmt(hlo.get('hbm_bytes'))} | "
+              f"{cell(hlo.get('flop_per_byte'), '.3f')} |")
+
+
 def stream_tables():
     """Render BENCH_stream.json: per-graph any-time rows plus the PR 6
     hostile-network section (Byzantine robustness, drift tracking,
@@ -61,11 +128,7 @@ def stream_tables():
         return
     payload = json.load(open(path))
     check_schema(payload, path)
-    prov = payload.get("provenance")
-    if prov:
-        print(f"_{prov.get('backend', '?')}/{prov.get('kernel_mode', '?')}"
-              f", {prov.get('git_sha', 'unknown')[:12]}, "
-              f"{prov.get('timestamp', '?')}_\n")
+    _prov_line(payload)
     print("| graph | method | err first | err last | samples/node | "
           "scalars sent |")
     print("|---|---|---|---|---|---|")
@@ -120,7 +183,8 @@ def main():
               "generate them first:\n"
               "    PYTHONPATH=src python -m repro.launch.dryrun --all "
               "--out experiments/dryrun", file=sys.stderr)
-        print("### Dry-run\n\n(no records)\n\n### Roofline\n\n(no records)")
+        print("### Dry-run\n\n(no records)")
+        kernel_tables()
         stream_tables()
         return
     for path in paths:
@@ -144,27 +208,7 @@ def main():
               f"{fmt(r.get('dot_flops'))} | {fmt(r.get('hbm_bytes'))} | "
               f"{fmt(r.get('collective_bytes_total'))} |")
 
-    print("\n### Roofline (single-pod 16x16, per device)\n")
-    print("| arch | shape | compute s | memory s | collective s | dominant "
-          "| MODEL_FLOPs/dev | useful ratio | note |")
-    print("|---|---|---|---|---|---|---|---|---|")
-    for (arch, shape, mesh), r in sorted(recs.items()):
-        if mesh != "16x16" or not r.get("ok"):
-            continue
-        cfg = CFG.get(arch)
-        tc = r.get("dot_flops", 0) / PEAK
-        tm = r.get("hbm_bytes", 0) / HBM
-        tl = r.get("collective_bytes_total", 0) / LINK
-        dom = max((("compute", tc), ("memory", tm), ("collective", tl)),
-                  key=lambda kv: kv[1])[0]
-        mf = model_flops_per_device(cfg, shape)
-        ratio = mf / r["dot_flops"] if r.get("dot_flops") else float("nan")
-        note = ""
-        if r.get("window_override"):
-            note = f"SWA w={r['window_override']}"
-        print(f"| {arch} | {shape} | {tc:.2e} | {tm:.2e} | {tl:.2e} | "
-              f"{dom} | {fmt(mf)} | {ratio:.2f} | {note} |")
-
+    kernel_tables()
     stream_tables()
 
 
