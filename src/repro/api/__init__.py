@@ -12,23 +12,29 @@ the whole problem once —
     result = sess.fit(X)               # batch: local fits + combiners
     est = sess.stream()                # plan-bound StreamingEstimator
     joint = sess.joint(X)              # ADMM joint MPLE (Sec. 3.2)
+    struct = sess.select(X)            # structure learning (lasso + vote)
 
-— and every verb returns a structured :class:`EstimateResult` (theta,
+— and every batch verb returns a structured :class:`EstimateResult` (theta,
 per-scheme combined estimates, per-node fits, pseudo-score norm,
-wall/compile counters, communication scalars). Combination schemes are
+wall/compile counters, communication scalars); ``select`` returns a
+:class:`~repro.structure.StructureResult` (voted support, EBIC-selected
+lambda, per-edge vote margins, comm scalars). Combination schemes are
 pluggable strategies from the combiner registry
 (:mod:`repro.core.combiners`); model families come from the family registry
-(:mod:`repro.core.families`); plans serialize via ``to_dict``/``from_dict``
-and hash-key the session cache.
+(:mod:`repro.core.families`); vote rules from the vote-rule registry
+(:mod:`repro.structure.voting`); plans serialize via
+``to_dict``/``from_dict`` and hash-key the session cache.
 
 The legacy entry points (``repro.core.fit_all_local`` + ``combine``,
 ``admm_mple``, direct ``StreamingEstimator``/``StreamSimulator``
 construction) remain as thin shims over a default plan.
 """
+from ..structure import StructureResult, StructureSpec
 from ..telemetry import TelemetrySpec
 from .plan import MESH_POLICIES, Plan
 from .result import EstimateResult
 from .session import EstimationSession, compile_plan
 
 __all__ = ["Plan", "EstimationSession", "EstimateResult", "compile_plan",
-           "MESH_POLICIES", "TelemetrySpec"]
+           "MESH_POLICIES", "TelemetrySpec", "StructureSpec",
+           "StructureResult"]

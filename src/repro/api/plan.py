@@ -91,6 +91,11 @@ class Plan:
         the streaming verbs — keep only each node's most recent
         ``stream_window`` samples, and/or decay age-k samples by
         ``stream_discount**k`` (see ``SampleBuffer.window_weights``).
+    structure : optional :class:`~repro.structure.StructureSpec` — the
+        configuration ``session.select`` (the structure-learning verb)
+        uses: candidate-edge policy, lambda grid/path, vote rule, ADMM and
+        EBIC knobs. None leaves the verb usable with its defaults (or a
+        per-call spec). Frozen and serialized like ``faults``.
     """
 
     graph: Graph
@@ -110,6 +115,7 @@ class Plan:
     stream_window: Optional[int] = None
     stream_discount: Optional[float] = None
     telemetry: Optional["TelemetrySpec"] = None
+    structure: Optional["StructureSpec"] = None
 
     def __post_init__(self):
         if not isinstance(self.graph, Graph):
@@ -169,6 +175,30 @@ class Plan:
                 raise TypeError(
                     f"plan.telemetry must be a TelemetrySpec (or its "
                     f"to_dict form), got {type(self.telemetry).__name__}")
+        from ..structure.spec import StructureSpec
+        if self.structure is not None:
+            if isinstance(self.structure, dict):
+                object.__setattr__(self, "structure",
+                                   StructureSpec.from_dict(self.structure))
+            elif not isinstance(self.structure, StructureSpec):
+                raise TypeError(
+                    f"plan.structure must be a StructureSpec (or its "
+                    f"to_dict form), got {type(self.structure).__name__}")
+            s = self.structure
+            # the one check the spec cannot run alone: k against this
+            # plan's node count
+            if s.policy == "knn" and s.knn_k >= self.graph.p:
+                raise ValueError(
+                    f"structure.knn_k must be < p (a node has at most "
+                    f"p-1 = {self.graph.p - 1} neighbors); got "
+                    f"knn_k={s.knn_k} with p={self.graph.p} — use policy "
+                    f"'full' to consider every pair")
+            if s.policy == "given":
+                for (a, b) in s.given_edges:
+                    if not (0 <= a < b < self.graph.p):
+                        raise ValueError(
+                            f"structure.given_edges entry ({a},{b}) is not "
+                            f"a valid i<j edge for p={self.graph.p}")
         if self.stream_window is not None and int(self.stream_window) < 1:
             raise ValueError(f"stream_window must be >= 1 sample (None "
                              f"disables it), got {self.stream_window!r}")
@@ -223,6 +253,8 @@ class Plan:
             "stream_discount": self.stream_discount,
             "telemetry": (None if self.telemetry is None
                           else self.telemetry.to_dict()),
+            "structure": (None if self.structure is None
+                          else self.structure.to_dict()),
         }
 
     @classmethod
@@ -251,4 +283,5 @@ class Plan:
             stream_discount=(None if d.get("stream_discount") is None
                              else float(d["stream_discount"])),
             telemetry=d.get("telemetry"),
+            structure=d.get("structure"),
         )

@@ -9,7 +9,7 @@ of the same verb — reuses the same compiled programs. Sessions themselves
 are cached per plan (``EstimationSession.for_plan`` / ``plan.session()``):
 two equal plans share one session and therefore one solver cache.
 
-The three verbs share that cache:
+The four verbs share that cache:
 
 * ``session.fit(X)``     — batch: per-node local CL fits + every requested
                            one-step combiner;
@@ -17,7 +17,12 @@ The three verbs share that cache:
                            (same family, mesh, buffer, Newton budget — its
                            incremental re-fits hit the same solvers);
 * ``session.joint(X)``   — ADMM joint MPLE through the batched proximal
-                           engine.
+                           engine;
+* ``session.select(X)``  — structure learning: distributed
+                           pseudo-likelihood lasso over candidate edges +
+                           support voting (:mod:`repro.structure`),
+                           returning a :class:`~repro.structure.
+                           StructureResult`.
 
 Each returns (or feeds) a structured :class:`~repro.api.result.
 EstimateResult` with wall/compile counters and communication-cost scalars.
@@ -34,7 +39,7 @@ import numpy as np
 from ..core.admm import admm_mple_family
 from ..core.asymptotics import free_indices, param_owners
 from ..core.batched import (bucket_compile_count, degree_buckets,
-                            fit_all_local_batched)
+                            fit_all_local_batched, prox_compile_count)
 from ..core.estimators import LocalFit
 from ..core.graphs import Graph
 from ..telemetry.recorder import make_recorder
@@ -301,6 +306,140 @@ class EstimationSession:
             new_compiles=(c1 - c0 if c0 >= 0 and c1 >= 0 else -1),
             comm_scalars={"admm": comm},
             trajectory=res.trajectory, primal_residual=res.primal_residual,
+            telemetry=rec.snapshot(mark) if rec.enabled else None)
+
+    def select(self, X, spec=None) -> "StructureResult":
+        """Structure verb: estimate the GRAPH by distributed
+        pseudo-likelihood lasso + support voting (:mod:`repro.structure`).
+
+        Runs group-lasso neighborhood selection over a candidate edge set
+        (``spec.policy``) along a warm-started descending lambda path —
+        every ADMM round reuses the batched proximal engine, so the whole
+        path compiles exactly one prox program per degree bucket of the
+        candidate graph — picks lambda by EBIC, and reconciles the two
+        endpoints' verdicts per candidate edge through the plan's vote
+        rule. ``spec`` overrides ``plan.structure`` for this call;
+        with neither, :class:`~repro.structure.StructureSpec` defaults
+        apply. Note the plan's ``graph`` is NOT assumed correct — it only
+        sizes the problem (p nodes); the candidate policy decides which
+        edges are searched.
+        """
+        from ..stream.costs import structure_vote_scalars
+        from ..structure import (StructureSpec, StructureResult,
+                                 auto_lambda_grid, candidate_graph,
+                                 debias_to_support, ebic_scores,
+                                 edge_supports, get_vote_rule, lasso_path,
+                                 reconcile)
+        if spec is None:
+            spec = self.plan.structure or StructureSpec()
+        elif isinstance(spec, dict):
+            spec = StructureSpec.from_dict(spec)
+        rule = get_vote_rule(spec.vote)
+        rec = self.recorder
+        mark = rec.mark()
+        t0 = time.perf_counter()
+        c0_fit = bucket_compile_count()
+        c0_prox = prox_compile_count()
+        stats = {"compile_s": 0.0}
+        family = self.family
+        C = family.block_dim
+        lead = 1 if self.plan.include_singleton else 0
+        with rec.span("select"):
+            Xj = self._as_samples(X)
+            Xnp = np.asarray(Xj, dtype=np.float64)
+            n, p = Xnp.shape
+            if p != self.graph.p:
+                raise ValueError(f"X has {p} columns; plan graph has "
+                                 f"p={self.graph.p} nodes")
+
+            with rec.span("screen", policy=spec.policy):
+                gc = candidate_graph(spec, p, X=Xnp, family=family)
+            # the plan's fixed coordinates remapped onto the candidate
+            # graph: node blocks carry over, candidate-edge blocks are free
+            tf_c = np.zeros(family.n_params(gc))
+            tf_c[: p * C] = self.theta_fixed[: p * C]
+            tf_cj = jnp.asarray(tf_c, Xj.dtype)
+
+            lambdas = spec.lambdas or auto_lambda_grid(gc, Xnp, family, spec)
+
+            # the dense (unpenalized) fit on the candidate graph: it pins
+            # the path's lambda == 0 end to the fit verb, supplies the
+            # weighted vote's sandwich-variance masses, and debiases the
+            # EBIC likelihoods (shrunk iterates would drag selection
+            # dense). Same engine call as session.fit, so a candidate
+            # graph equal to the plan graph reuses its compiled programs.
+            with rec.span("dense_fit"):
+                fits_c = fit_all_local_batched(
+                    gc, Xj,
+                    include_singleton=self.plan.include_singleton,
+                    theta_fixed=tf_cj, n_iter=self.plan.n_iter,
+                    family=family, mesh=self.mesh,
+                    want_influence=self.want_influence,
+                    recorder=rec, stats=stats)
+            dense_thetas = [np.asarray(f.theta, dtype=np.float64)
+                            for f in fits_c]
+
+            with rec.span("path", n_lambdas=len(lambdas)):
+                path = lasso_path(
+                    gc, Xj, lambdas, spec, family,
+                    include_singleton=self.plan.include_singleton,
+                    theta_fixed=tf_cj, dense_thetas=dense_thetas,
+                    mesh=self.mesh, recorder=rec, stats=stats)
+                ebic = ebic_scores(gc, Xnp, path, family, spec,
+                                   self.plan.include_singleton, tf_c,
+                                   debias_thetas=dense_thetas)
+
+            with rec.span("vote", rule=rule.name):
+                # per-endpoint vote masses: inverse sandwich variance of
+                # the edge block (the combiner registry's second-order
+                # info, computed by the same engine)
+                mass = np.ones((p, gc.m))
+                if rule.needs_mass:
+                    for i in range(p):
+                        ks = gc.incident_edges(i)
+                        dv = np.diag(np.asarray(fits_c[i].V))
+                        for idx, k in enumerate(ks):
+                            blk = dv[(lead + idx) * C:(lead + idx + 1) * C]
+                            mass[i, k] = 1.0 / max(float(np.mean(blk)),
+                                                   1e-12)
+                I = np.array([e[0] for e in gc.edges], dtype=np.int64)
+                J = np.array([e[1] for e in gc.edges], dtype=np.int64)
+                ar = np.arange(gc.m)
+                keeps, margins_l, sizes = [], [], []
+                for zs in path:
+                    sup = edge_supports(gc, zs, C, lead)
+                    keep, margin = reconcile(
+                        sup[I, ar], sup[J, ar], rule,
+                        mass_a=mass[I, ar], mass_b=mass[J, ar])
+                    keeps.append(keep)
+                    margins_l.append(margin)
+                    sizes.append(int(keep.sum()))
+                lsel = int(np.argmin(ebic))
+                support = tuple(e for e, k in zip(gc.edges, keeps[lsel])
+                                if k)
+            comm = structure_vote_scalars(gc.m, rule.name)
+            if rec.enabled:
+                rec.gauge("structure.candidate_edges", gc.m)
+                rec.gauge("structure.support_size", len(support))
+                rec.gauge("comm.scalars_per_round", comm,
+                          scheme=f"vote_{rule.name}")
+        c1_fit = bucket_compile_count()
+        c1_prox = prox_compile_count()
+        path_compiles = (c1_prox - c0_prox
+                         if c0_prox >= 0 and c1_prox >= 0 else -1)
+        new_compiles = (path_compiles + c1_fit - c0_fit
+                        if min(c0_fit, c1_fit, path_compiles) >= 0 else -1)
+        return StructureResult(
+            support=support, graph=Graph(p, support),
+            candidate_edges=gc.edges, vote_rule=rule.name,
+            margins=margins_l[lsel], lambdas=tuple(lambdas),
+            lambda_selected=float(lambdas[lsel]), ebic=ebic,
+            support_sizes=tuple(sizes),
+            thetas=debias_to_support(gc, path[lsel], dense_thetas, C, lead),
+            n_samples=n,
+            comm_scalars=comm, wall_s=time.perf_counter() - t0,
+            compile_s=stats["compile_s"], path_compiles=path_compiles,
+            new_compiles=new_compiles,
             telemetry=rec.snapshot(mark) if rec.enabled else None)
 
     def __repr__(self) -> str:

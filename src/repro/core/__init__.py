@@ -20,7 +20,8 @@ from .estimators import (LocalFit, newton_maximize, fit_local_cl,
                          fit_all_local, fit_all_local_loop, fit_mple,
                          fit_mle_exact, node_design)
 from .batched import (DegreeBucket, degree_buckets, fit_all_local_batched,
-                      prox_update_batched, bucket_compile_count,
+                      prox_update_batched, group_soft_threshold,
+                      bucket_compile_count, prox_compile_count,
                       clear_bucket_solver_caches)
 from .asymptotics import (ExactLocal, exact_local, exact_locals, param_owners,
                           free_indices, exact_consensus_variance,

@@ -537,12 +537,15 @@ def bucket_compile_count() -> int:
 
 
 def clear_bucket_solver_caches() -> None:
-    """Reset both fit-solver compile caches (plain + mesh-sharded) so
-    :func:`bucket_compile_count` restarts from zero — what tests and
+    """Reset the bucket-solver compile caches — fit AND proximal, plain
+    and mesh-sharded — so :func:`bucket_compile_count` and
+    :func:`prox_compile_count` restart from zero — what tests and
     benches asserting the absolute "compiles == #buckets" invariant call
     first."""
     _solve_bucket.clear_cache()
     _solve_bucket_sharded.clear_cache()
+    _solve_bucket_prox.clear_cache()
+    _solve_bucket_prox_sharded.clear_cache()
 
 
 def _bucket_weights(sample_weight, nodes: np.ndarray, n: int):
@@ -817,6 +820,39 @@ def prox_compile_count() -> int:
             return -1
         total += int(probe())
     return total
+
+
+def group_soft_threshold(v: np.ndarray, thr: float, block_dim: int,
+                         lead: int = 1) -> np.ndarray:
+    """Group soft-thresholding on a ``family.beta``-ordered local vector.
+
+    The proximal operator of ``thr * sum_blocks ||w_block||_2`` in the
+    coordinate-major per-node layout the bucket solvers emit: the first
+    ``lead`` blocks (the unpenalized singleton block, when free) pass
+    through untouched; every following ``block_dim``-wide edge block ``g``
+    is scaled by ``max(0, 1 - thr / ||g||_2)`` — shrunk toward zero and
+    EXACTLY zeroed once its norm falls below ``thr``, which is what lets
+    structure learning read the support off the iterate with no epsilon
+    tolerance. At C = 1 this is the scalar soft-threshold, so plain-lasso
+    Ising/Gaussian selection and group-lasso Potts selection share one
+    code path (the z-update half of the ADMM split whose smooth half is
+    :func:`prox_update_batched`).
+    """
+    v = np.asarray(v, dtype=np.float64)
+    off = lead * block_dim
+    nblk, rem = divmod(v.size - off, block_dim)
+    if rem:
+        raise ValueError(
+            f"vector of length {v.size} is not lead={lead} plus whole "
+            f"blocks of size {block_dim}")
+    out = v.copy()
+    if nblk > 0 and thr > 0.0:
+        blocks = out[off:].reshape(nblk, block_dim)
+        norms = np.linalg.norm(blocks, axis=1)
+        scale = np.where(norms > thr,
+                         1.0 - thr / np.where(norms > 0.0, norms, 1.0), 0.0)
+        out[off:] = (blocks * scale[:, None]).ravel()
+    return out
 
 
 def prox_update_batched(graph: Graph, X: jnp.ndarray,

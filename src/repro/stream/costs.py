@@ -53,6 +53,22 @@ def one_step_message_scalars(n_shared: int, scheme: str) -> int:
     return int(n_shared) * spp
 
 
+def structure_vote_scalars(n_candidate_edges: int, rule: str) -> int:
+    """Scalars one support-voting round transmits for a candidate edge set.
+
+    Every candidate edge has exactly TWO voters (its endpoints), and each
+    ships ``scalars_per_edge_vote`` scalars — the in/out decision, plus
+    the vote mass for mass-weighted rules — read from the vote-rule
+    registry (:mod:`repro.structure.voting`), so a newly registered rule
+    is billed correctly without touching this module. Unknown names raise
+    the registry's ``ValueError`` listing what is registered. This is the
+    number :class:`repro.structure.StructureResult` reports as
+    ``comm_scalars``.
+    """
+    from ..structure.voting import get_vote_rule
+    return 2 * int(n_candidate_edges) * get_vote_rule(rule).scalars_per_edge_vote
+
+
 def admm_message_scalars(n_shared: int) -> int:
     """Scalars in one ADMM-round message covering n_shared params."""
     return int(n_shared)

@@ -1,0 +1,274 @@
+"""Warm-started group-lasso regularization paths over candidate edges.
+
+Neighborhood selection is p independent penalized conditional fits
+
+    max_w  l^i(w)  -  lambda * sum_{edge blocks b} ||w_b||_2,
+
+one per node, over the candidate graph — exactly the paper's local CL
+objectives plus a group penalty on the C-wide edge blocks. We solve them
+all at once by ADMM splitting, reusing the batched engine wholesale:
+
+  w-update — the smooth proximal solve IS :func:`repro.core.batched.
+             prox_update_batched` (quadratic penalty ``rho/2 (w - (z-u))^2``,
+             zero linear term): degree-bucketed, family-dispatched,
+             mesh-shardable, ONE XLA compile per degree bucket;
+  z-update — closed-form :func:`repro.core.batched.group_soft_threshold`
+             per node (threshold lambda/rho), where exact zeros appear —
+             the support is read off z with no epsilon;
+  u-update — scaled dual ascent, plain numpy.
+
+The lambda grid is walked **coldest-first** (largest lambda, sparsest
+model): each lambda's (w, z, u) seed the next, so later lambdas converge
+in a couple of ADMM rounds, and — because every round calls the SAME
+jitted bucket program with identical shapes and static arguments — the
+whole path costs exactly ``n_buckets`` prox compilations total, not per
+lambda (``prox_compile_count`` deltas assert this in the bench). A
+``lambda == 0`` grid entry short-circuits to the caller's dense
+unpenalized fit (the same compiled program ``session.fit`` uses), which
+is what pins the path's dense end to the fit verb at 1e-8.
+
+Model selection is extended BIC over the path (Chen & Chen 2008; Foygel &
+Drton 2010 for graphical models): per node,
+
+    EBIC_i(lambda) = -2 n ll_i + df_i (log n + 2 gamma log(p - 1)),
+
+summed over nodes; ``ll_i`` is node i's average conditional loglik at its
+sparse iterate and ``df_i`` counts selected edge-block scalars.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.batched import group_soft_threshold, prox_update_batched
+from ..core.graphs import Graph
+from .spec import StructureSpec
+
+__all__ = ["auto_lambda_grid", "lasso_path", "node_logliks", "ebic_scores",
+           "edge_supports", "debias_to_support"]
+
+
+def _node_others(graph: Graph, i: int) -> List[int]:
+    """Neighbor node ids in ``graph.incident_edges(i)`` (= beta block)
+    order."""
+    return [graph.edges[k][0] if graph.edges[k][1] == i else graph.edges[k][1]
+            for k in graph.incident_edges(i)]
+
+
+def auto_lambda_grid(graph: Graph, X: np.ndarray, family,
+                     spec: StructureSpec) -> Tuple[float, ...]:
+    """Geometric lambda grid scaled to the data, descending.
+
+    lambda_max is the group-lasso activation bound: the largest candidate
+    edge-block norm of the average-pseudo-loglik gradient at theta = 0,
+    ``max_(i,j) ||(1/n) sum_t dl/deta_c(0) f_c(x_j)||_2`` over both
+    orientations — the smallest lambda at which EVERY edge block of the
+    penalized solution is exactly zero (up to the free singleton). The
+    grid is ``n_lambdas`` points geometric down to
+    ``lambda_max * lambda_min_ratio``.
+    """
+    X = np.asarray(X)
+    n, p = X.shape
+    C = family.block_dim
+    F = np.asarray(family.edge_features(X), dtype=np.float64)  # (n, p, C)
+    import jax.numpy as jnp
+    eta0 = jnp.zeros((p, C, n))
+    r = np.asarray(family.dl_deta(eta0, jnp.asarray(X.T)),
+                   dtype=np.float64)                            # (p, C, n)
+    if not graph.edges:
+        return tuple(np.geomspace(1.0, spec.lambda_min_ratio,
+                                  spec.n_lambdas))
+    I = np.array([e[0] for e in graph.edges])
+    J = np.array([e[1] for e in graph.edges])
+    # g[a, c] = (1/n) sum_t r[i_a, c, t] * F[t, j_a, c]  (and the swap)
+    g_ab = np.einsum("act,tac->ac", r[I], F[:, J, :]) / n
+    g_ba = np.einsum("act,tac->ac", r[J], F[:, I, :]) / n
+    lam_max = max(float(np.linalg.norm(g_ab, axis=1).max()),
+                  float(np.linalg.norm(g_ba, axis=1).max()))
+    lam_max = max(lam_max, 1e-8)
+    return tuple(float(l) for l in
+                 np.geomspace(lam_max, lam_max * spec.lambda_min_ratio,
+                              spec.n_lambdas))
+
+
+def lasso_path(graph: Graph, X, lambdas: Sequence[float],
+               spec: StructureSpec, family, *,
+               include_singleton: bool = True,
+               theta_fixed=None,
+               dense_thetas: Optional[Sequence[np.ndarray]] = None,
+               mesh=None, recorder=None,
+               stats: Optional[dict] = None) -> List[List[np.ndarray]]:
+    """Walk the descending lambda grid; return per-lambda sparse iterates.
+
+    Returns ``zs[l][i]`` — node i's ``family.beta``-ordered iterate at
+    ``lambdas[l]``, with exact zeros on unselected edge blocks. The ADMM
+    state (w, z, u) carries across lambdas (warm starts); each lambda runs
+    at most ``spec.admm_rounds`` rounds with a primal/dual residual early
+    stop at ``spec.admm_tol``. A ``lambda == 0`` entry copies
+    ``dense_thetas`` (the caller's unpenalized fit on the same candidate
+    graph) instead of iterating, keeping the path's dense end bit-aligned
+    with ``session.fit``.
+    """
+    p = graph.p
+    C = family.block_dim
+    lead = 1 if include_singleton else 0
+    dims = [(lead + len(graph.incident_edges(i))) * C for i in range(p)]
+    w = [np.zeros(d) for d in dims]
+    z = [np.zeros(d) for d in dims]
+    u = [np.zeros(d) for d in dims]
+    zero_lam = [np.zeros(d, dtype=np.float32) for d in dims]
+    rho = float(spec.admm_rho)
+    rho_vecs = [np.full(d, rho, dtype=np.float32) for d in dims]
+
+    out: List[List[np.ndarray]] = []
+    for lam in lambdas:
+        if lam == 0.0:
+            if dense_thetas is None:
+                raise ValueError(
+                    "lambda == 0 in the grid needs dense_thetas — the "
+                    "unpenalized fit on the candidate graph (session."
+                    "select supplies it automatically)")
+            z = [np.asarray(t, dtype=np.float64).copy()
+                 for t in dense_thetas]
+            w = [t.copy() for t in z]
+            u = [np.zeros_like(t) for t in z]
+            out.append([t.copy() for t in z])
+            continue
+        thr = lam / rho
+        for _ in range(spec.admm_rounds):
+            tbar = [z[i] - u[i] for i in range(p)]
+            w = prox_update_batched(
+                graph, X, theta_bar=tbar, lambdas=zero_lam, rhos=rho_vecs,
+                thetas0=w, include_singleton=include_singleton,
+                theta_fixed=theta_fixed, n_iter=spec.newton_iters,
+                family=family, mesh=mesh, recorder=recorder, stats=stats)
+            w = [np.asarray(wi, dtype=np.float64) for wi in w]
+            z_old = z
+            z = [group_soft_threshold(w[i] + u[i], thr, C, lead)
+                 for i in range(p)]
+            u = [u[i] + w[i] - z[i] for i in range(p)]
+            r_prim = max((float(np.abs(w[i] - z[i]).max()) if dims[i] else 0.0)
+                         for i in range(p))
+            s_dual = rho * max(
+                (float(np.abs(z[i] - z_old[i]).max()) if dims[i] else 0.0)
+                for i in range(p))
+            if max(r_prim, s_dual) < spec.admm_tol:
+                break
+        out.append([zi.copy() for zi in z])
+    return out
+
+
+def edge_supports(graph: Graph, zs: Sequence[np.ndarray], C: int,
+                  lead: int = 1) -> np.ndarray:
+    """(p, m) bool: does node i's iterate select candidate edge k?
+
+    Reads exact zeros off the thresholded iterates — block norm > 0 means
+    selected. Rows are only meaningful for edges incident to the node.
+    """
+    sup = np.zeros((graph.p, graph.m), dtype=bool)
+    for i in range(graph.p):
+        ks = graph.incident_edges(i)
+        if not ks:
+            continue
+        blocks = np.asarray(zs[i])[lead * C:].reshape(len(ks), C)
+        nz = np.linalg.norm(blocks, axis=1) > 0.0
+        sup[i, ks] = nz
+    return sup
+
+
+def debias_to_support(graph: Graph, zs: Sequence[np.ndarray],
+                      dense_thetas: Sequence[np.ndarray], C: int,
+                      lead: int = 1) -> List[np.ndarray]:
+    """Dense estimates masked to each iterate's support — refit-free
+    debiasing.
+
+    The lasso iterate's support is right but its surviving blocks are
+    shrunk toward zero, so scoring a path point at z itself makes sparse
+    models look worse than they are (EBIC then drifts dense). The cheap
+    classical fix: keep the UNPENALIZED fit's values on the selected
+    blocks and exact zeros elsewhere — for a sparse truth the dense fit's
+    on-support coordinates are near the refit values while its off-support
+    coordinates are near zero, so this approximates a per-support refit
+    without compiling per-support programs (which would break the
+    one-compile-per-bucket path invariant).
+    """
+    out = []
+    for i in range(graph.p):
+        ks = graph.incident_edges(i)
+        t = np.asarray(dense_thetas[i], dtype=np.float64).copy()
+        zb = np.asarray(zs[i])[lead * C:].reshape(len(ks), C) if ks else \
+            np.zeros((0, C))
+        nz = np.linalg.norm(zb, axis=1) > 0.0
+        for idx in range(len(ks)):
+            if not nz[idx]:
+                t[(lead + idx) * C:(lead + idx + 1) * C] = 0.0
+        out.append(t)
+    return out
+
+
+def node_logliks(graph: Graph, X, zs: Sequence[np.ndarray], family,
+                 include_singleton: bool = True,
+                 theta_fixed=None) -> np.ndarray:
+    """(p,) average conditional loglik of each node at its own iterate.
+
+    Evaluated with the family's closed-form channel likelihood on the
+    node's beta-ordered local vector — per-node, so the (generally
+    inconsistent) endpoint estimates of a shared edge never need
+    reconciling just to score a path point.
+    """
+    import jax.numpy as jnp
+    X = np.asarray(X)
+    n, p = X.shape
+    C = family.block_dim
+    lead = 1 if include_singleton else 0
+    F = np.asarray(family.edge_features(X), dtype=np.float64)  # (n, p, C)
+    if theta_fixed is not None:
+        node_tf = np.asarray(theta_fixed)[: p * C].reshape(p, C)
+    out = np.zeros(p)
+    for i in range(p):
+        others = _node_others(graph, i)
+        zb = np.asarray(zs[i], dtype=np.float64).reshape(
+            lead + len(others), C)
+        eta = np.zeros((n, C))
+        if lead:
+            eta += zb[0][None, :]
+        elif theta_fixed is not None:
+            eta += node_tf[i][None, :]
+        if others:
+            eta += np.einsum("njc,jc->nc", F[:, others, :], zb[lead:])
+        ll = family.loglik_eta(jnp.asarray(eta.T), jnp.asarray(X[:, i]))
+        out[i] = float(np.mean(np.asarray(ll)))
+    return out
+
+
+def ebic_scores(graph: Graph, X, path: Sequence[Sequence[np.ndarray]],
+                family, spec: StructureSpec,
+                include_singleton: bool = True,
+                theta_fixed=None,
+                debias_thetas: Optional[Sequence[np.ndarray]] = None
+                ) -> np.ndarray:
+    """Extended-BIC score of every path point (lower is better).
+
+    With ``debias_thetas`` (the dense unpenalized fit on the same graph)
+    each point's likelihood is evaluated at the support-masked dense
+    estimates (:func:`debias_to_support`) instead of the shrunk iterates —
+    without it, lasso shrinkage penalizes exactly the sparse models EBIC
+    is supposed to prefer.
+    """
+    X = np.asarray(X)
+    n, p = X.shape
+    C = family.block_dim
+    lead = 1 if include_singleton else 0
+    complexity = math.log(n) + 2.0 * spec.ebic_gamma * math.log(max(p - 1, 1))
+    scores = np.zeros(len(path))
+    for l, zs in enumerate(path):
+        ts = (debias_to_support(graph, zs, debias_thetas, C, lead)
+              if debias_thetas is not None else zs)
+        ll = node_logliks(graph, X, ts, family, include_singleton,
+                          theta_fixed)
+        sup = edge_supports(graph, zs, C, lead)
+        df = C * sup.sum(axis=1)                                # (p,)
+        scores[l] = float(np.sum(-2.0 * n * ll + df * complexity))
+    return scores

@@ -1,0 +1,151 @@
+"""End-to-end ``session.select``: planted-graph recovery, warm-started
+path compile invariants (cold == n_buckets, warm == 0), candidate
+policies, per-call spec override, telemetry spans, and the exact vote
+comm bill."""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Plan, StructureResult, StructureSpec
+from repro.core import chain_graph, complete_graph, grid_graph
+from repro.core.batched import clear_bucket_solver_caches, degree_buckets
+from repro.core.families import random_rows
+from repro.core.graphs import Graph
+from repro.stream.costs import structure_vote_scalars
+from repro.structure import candidate_graph
+from repro.telemetry import TelemetrySpec
+
+
+@pytest.fixture(scope="module")
+def planted_grid():
+    """3x3 Ising grid, couplings +-0.5 — recoverable at n=1500."""
+    g = grid_graph(3, 3)
+    plan = Plan(graph=g, family="ising")
+    fam = plan.family_instance
+    theta = np.zeros(fam.n_params(g))
+    signs = np.where(np.random.RandomState(7).rand(g.m) < 0.5, 1.0, -1.0)
+    theta[g.p:] = 0.5 * signs
+    X = np.asarray(fam.sample(g, theta, 1500, jax.random.PRNGKey(3)))
+    return g, plan, X
+
+
+def test_select_recovers_planted_grid(planted_grid):
+    g, plan, X = planted_grid
+    spec = StructureSpec(policy="full", n_lambdas=8)
+    res = plan.replace(structure=spec).session().select(X)
+    m = res.edge_metrics(g.edges)
+    assert m["f1"] == 1.0, m
+    # the recovered graph is a real Graph, ready to re-plan
+    assert isinstance(res.graph, Graph)
+    assert res.graph.edges == res.support
+    # margins align with the candidate set; kept edges voted positive
+    assert res.margins.shape == (len(res.candidate_edges),)
+    kept = {e: mg for e, mg in zip(res.candidate_edges, res.margins)
+            if e in set(res.support)}
+    assert all(mg >= 0 for mg in kept.values())
+    # EBIC walked the whole grid
+    assert res.ebic.shape == (len(res.lambdas),)
+    assert res.lambda_selected in res.lambdas
+    assert len(res.support_sizes) == len(res.lambdas)
+
+
+def test_path_compiles_cold_eq_buckets_warm_zero(planted_grid):
+    g, plan, X = planted_grid
+    spec = StructureSpec(policy="full", n_lambdas=6, admm_rounds=12)
+    sess = plan.replace(structure=spec).session()
+    clear_bucket_solver_caches()
+    cold = sess.select(X)
+    n_buckets = len(degree_buckets(complete_graph(g.p)))
+    # warm starts across the whole lambda path: one prox program per
+    # degree bucket of the candidate graph, never per lambda
+    assert cold.path_compiles == n_buckets
+    assert cold.new_compiles >= cold.path_compiles
+    assert 0.0 < cold.compile_s <= cold.wall_s
+    warm = sess.select(np.ascontiguousarray(X[::-1]))
+    assert warm.path_compiles == 0
+    assert warm.new_compiles == 0
+    assert warm.compile_s == 0.0
+    assert warm.support == cold.support
+
+
+def test_select_shares_dense_fit_programs_with_fit():
+    """candidate graph == plan graph => the dense fit hits session.fit's
+    compiled programs; only the prox path compiles anew."""
+    p, n = 5, 200
+    g = chain_graph(p)
+    spec = StructureSpec(policy="given", given_edges=g.edges,
+                         n_lambdas=4, admm_rounds=8)
+    plan = Plan(graph=g, structure=spec)
+    X = np.asarray(random_rows(plan.family_instance,
+                               jax.random.PRNGKey(2), n, p))
+    sess = plan.session()
+    clear_bucket_solver_caches()
+    sess.fit(X)
+    res = sess.select(X)
+    assert res.new_compiles == res.path_compiles
+
+
+def test_knn_policy_screens_candidates():
+    p, n = 8, 300
+    g = chain_graph(p)
+    spec = StructureSpec(policy="knn", knn_k=3, n_lambdas=4,
+                         admm_rounds=8)
+    plan = Plan(graph=g, structure=spec)
+    X = np.asarray(random_rows(plan.family_instance,
+                               jax.random.PRNGKey(4), n, p))
+    res = plan.session().select(X)
+    # screening bounds the search: each node proposed at most k, the
+    # union-symmetrized candidate set is a strict subset of complete
+    assert 0 < len(res.candidate_edges) < complete_graph(p).m
+    assert set(res.support) <= set(res.candidate_edges)
+
+
+def test_candidate_graph_knn_requires_data_and_small_k():
+    spec = StructureSpec(policy="knn", knn_k=5)
+    with pytest.raises(ValueError, match="knn_k must be < p"):
+        candidate_graph(spec, p=5)
+    with pytest.raises(ValueError, match="knn"):
+        candidate_graph(spec, p=8)          # no X / family supplied
+
+
+def test_per_call_spec_dict_override(planted_grid):
+    g, plan, X = planted_grid
+    sess = plan.session()                   # plan has NO structure spec
+    res = sess.select(X, spec={"policy": "given",
+                               "given_edges": tuple(g.edges),
+                               "n_lambdas": 4, "admm_rounds": 8,
+                               "vote": "and"})
+    assert isinstance(res, StructureResult)
+    assert res.vote_rule == "and"
+    assert res.candidate_edges == g.edges
+
+
+def test_select_rejects_wrong_width_X(planted_grid):
+    g, plan, X = planted_grid
+    with pytest.raises(ValueError, match="columns"):
+        plan.session().select(X[:, :-1])
+
+
+def test_select_telemetry_spans_and_gauges(planted_grid):
+    g, plan, X = planted_grid
+    spec = StructureSpec(policy="full", n_lambdas=4, admm_rounds=8)
+    res = plan.replace(structure=spec,
+                       telemetry=TelemetrySpec()).session().select(X)
+    snap = res.telemetry
+    assert snap is not None
+    for path in ("select", "select/screen", "select/dense_fit",
+                 "select/path", "select/vote"):
+        assert path in snap.spans, path
+    assert snap.gauges["structure.candidate_edges"] == complete_graph(g.p).m
+    assert snap.gauges["structure.support_size"] == len(res.support)
+    assert "comm.scalars_per_round" in snap.gauges
+
+
+def test_comm_scalars_match_cost_table(planted_grid):
+    g, plan, X = planted_grid
+    for rule in ("and", "weighted"):
+        spec = StructureSpec(policy="full", n_lambdas=4, admm_rounds=8,
+                             vote=rule)
+        res = plan.replace(structure=spec).session().select(X)
+        assert res.comm_scalars == structure_vote_scalars(
+            len(res.candidate_edges), rule)

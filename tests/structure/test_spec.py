@@ -1,0 +1,137 @@
+"""StructureSpec / Plan.structure validation must fail loudly and early.
+
+Every malformed configuration the issue names — negative or unsorted
+lambda grids, unknown vote rules, knn k >= p — plus the policy/edges
+cross-field rules, each pinned with its pointed message so a regression
+that silently accepts (or garbles the error of) a bad spec fails here.
+"""
+import pytest
+
+from repro.api import Plan, StructureSpec
+from repro.core import chain_graph
+from repro.structure import CANDIDATE_POLICIES
+
+
+# ------------------------------------------------------------ lambda grids
+def test_negative_lambda_grid_rejected():
+    with pytest.raises(ValueError, match="non-negative"):
+        StructureSpec(lambdas=(0.5, -0.1))
+
+
+def test_unsorted_lambda_grid_rejected():
+    with pytest.raises(ValueError, match="strictly decreasing"):
+        StructureSpec(lambdas=(0.1, 0.5, 0.2))
+
+
+def test_duplicate_lambda_grid_rejected():
+    # duplicates are "not strictly decreasing" too — same pointed error
+    with pytest.raises(ValueError, match="strictly decreasing"):
+        StructureSpec(lambdas=(0.5, 0.5, 0.1))
+
+
+def test_empty_lambda_grid_rejected():
+    with pytest.raises(ValueError, match="non-empty"):
+        StructureSpec(lambdas=())
+
+
+def test_descending_grid_with_zero_tail_accepted():
+    spec = StructureSpec(lambdas=(1.0, 0.25, 0.0))
+    assert spec.lambdas == (1.0, 0.25, 0.0)
+
+
+# -------------------------------------------------------------- vote rules
+def test_unknown_vote_rule_lists_registered():
+    with pytest.raises(ValueError) as exc:
+        StructureSpec(vote="majority")
+    msg = str(exc.value)
+    assert "majority" in msg
+    for name in ("and", "or", "weighted"):
+        assert name in msg, f"error should list registered rule {name!r}"
+
+
+# ------------------------------------------------------- candidate policies
+def test_unknown_policy_lists_choices():
+    with pytest.raises(ValueError) as exc:
+        StructureSpec(policy="everything")
+    for name in CANDIDATE_POLICIES:
+        assert name in str(exc.value)
+
+
+def test_knn_k_at_least_p_rejected_by_plan():
+    g = chain_graph(5)
+    with pytest.raises(ValueError, match="knn_k must be < p"):
+        Plan(graph=g, structure=StructureSpec(policy="knn", knn_k=5))
+
+
+def test_knn_k_nonpositive_rejected():
+    with pytest.raises(ValueError, match="knn_k must be >= 1"):
+        StructureSpec(policy="knn", knn_k=0)
+
+
+def test_given_policy_requires_edges():
+    with pytest.raises(ValueError, match="given_edges"):
+        StructureSpec(policy="given")
+
+
+def test_given_edges_require_given_policy():
+    with pytest.raises(ValueError, match="policy 'given'"):
+        StructureSpec(policy="full", given_edges=((0, 1),))
+
+
+def test_given_edges_validated_against_plan_graph():
+    g = chain_graph(4)
+    with pytest.raises(ValueError, match="not a valid"):
+        Plan(graph=g, structure=StructureSpec(policy="given",
+                                              given_edges=((0, 9),)))
+
+
+# ----------------------------------------------------------- scalar bounds
+@pytest.mark.parametrize("kw,match", [
+    (dict(n_lambdas=0), "n_lambdas"),
+    (dict(lambda_min_ratio=0.0), "lambda_min_ratio"),
+    (dict(lambda_min_ratio=1.0), "lambda_min_ratio"),
+    (dict(ebic_gamma=-0.1), "ebic_gamma"),
+    (dict(ebic_gamma=1.5), "ebic_gamma"),
+    (dict(admm_rounds=0), "admm_rounds"),
+    (dict(admm_rho=0.0), "admm_rho"),
+    (dict(admm_tol=0.0), "admm_tol"),
+    (dict(newton_iters=0), "newton_iters"),
+])
+def test_scalar_bounds(kw, match):
+    with pytest.raises(ValueError, match=match):
+        StructureSpec(**kw)
+
+
+# ----------------------------------------------------------- serialization
+def test_spec_roundtrip():
+    spec = StructureSpec(policy="given", given_edges=((0, 2), (1, 3)),
+                         lambdas=(0.8, 0.2, 0.0), vote="and",
+                         ebic_gamma=0.25, admm_rounds=17)
+    assert StructureSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_spec_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown StructureSpec fields"):
+        StructureSpec.from_dict({"polciy": "full"})
+
+
+def test_plan_roundtrip_with_structure():
+    g = chain_graph(6)
+    plan = Plan(graph=g, family="ising",
+                structure=StructureSpec(policy="knn", knn_k=3, vote="or"))
+    back = Plan.from_dict(plan.to_dict())
+    assert back == plan
+    assert hash(back) == hash(plan)          # still a session-cache key
+
+
+def test_plan_coerces_structure_dict():
+    g = chain_graph(6)
+    plan = Plan(graph=g, structure={"policy": "full", "vote": "and"})
+    assert isinstance(plan.structure, StructureSpec)
+    assert plan.structure.vote == "and"
+
+
+def test_plan_rejects_non_spec_structure():
+    g = chain_graph(6)
+    with pytest.raises(TypeError, match="StructureSpec"):
+        Plan(graph=g, structure="full")

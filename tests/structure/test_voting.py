@@ -1,0 +1,161 @@
+"""Support-voting edge cases: registry contracts, unanimous disagreement,
+endpoint symmetry (tie-breaking must not depend on node ids), singleton
+nodes, and the exact vote-message accounting."""
+import numpy as np
+import pytest
+
+from repro.api import Plan, StructureSpec
+from repro.core import chain_graph
+from repro.core.families import random_rows
+from repro.stream.costs import structure_vote_scalars
+from repro.structure import (VoteRule, get_vote_rule, reconcile,
+                             register_vote_rule, registered_vote_rules)
+
+import jax
+
+
+# ---------------------------------------------------------------- registry
+def test_unknown_rule_error_lists_registered():
+    with pytest.raises(ValueError) as exc:
+        get_vote_rule("nope")
+    msg = str(exc.value)
+    assert "nope" in msg and "and" in msg and "weighted" in msg
+
+
+def test_registered_rules_sorted_and_complete():
+    names = [r.name for r in registered_vote_rules()]
+    assert names == sorted(names)
+    assert {"and", "or", "weighted"} <= set(names)
+
+
+def test_custom_rule_registers_and_bills():
+    class Unanimous(VoteRule):
+        name = "test_unanimous3"
+        scalars_per_edge_vote = 3
+
+        def decide(self, in_a, in_b, mass_a, mass_b):
+            keep = in_a & in_b
+            return keep, np.where(keep, 1.0, -1.0)
+
+    try:
+        register_vote_rule(Unanimous())
+        assert get_vote_rule("test_unanimous3").scalars_per_edge_vote == 3
+        # the cost table reads the registry — new rules billed correctly
+        assert structure_vote_scalars(7, "test_unanimous3") == 2 * 7 * 3
+    finally:
+        from repro.structure.voting import _VOTE_RULES
+        _VOTE_RULES.pop("test_unanimous3", None)
+
+
+def test_vote_scalar_accounting_per_rule():
+    # one decision scalar per endpoint for and/or; decision + mass for
+    # weighted — exactly 2 voters per candidate edge
+    assert structure_vote_scalars(10, "and") == 20
+    assert structure_vote_scalars(10, "or") == 20
+    assert structure_vote_scalars(10, "weighted") == 40
+    assert structure_vote_scalars(0, "weighted") == 0
+
+
+# ------------------------------------------------- unanimous disagreement
+def test_unanimous_disagreement_and_or():
+    in_a = np.array([True, True, False])
+    in_b = np.array([False, False, True])     # endpoints disagree everywhere
+    keep_and, m_and = reconcile(in_a, in_b, "and")
+    keep_or, m_or = reconcile(in_a, in_b, "or")
+    assert not keep_and.any()
+    assert (m_and == -1.0).all()
+    assert keep_or.all()
+    assert (m_or == 1.0).all()
+
+
+def test_weighted_disagreement_mass_decides():
+    in_a = np.array([True, True, False])
+    in_b = np.array([False, False, True])
+    heavy_a = np.full(3, 4.0)
+    light_b = np.full(3, 1.0)
+    keep, margin = reconcile(in_a, in_b, "weighted",
+                             mass_a=heavy_a, mass_b=light_b)
+    # the heavier endpoint wins every disagreement
+    assert list(keep) == [True, True, False]
+    assert np.allclose(np.abs(margin), 0.6)   # (4 - 1) / 5
+
+
+def test_weighted_exact_tie_falls_back_to_union():
+    in_a = np.array([True, False])
+    in_b = np.array([False, False])
+    keep, margin = reconcile(in_a, in_b, "weighted")   # equal unit masses
+    assert (margin == 0.0).all() or margin[1] == -1.0
+    assert keep[0]          # disagreement tie -> union keeps it
+    assert not keep[1]      # unanimous out stays out
+
+
+def test_weighted_degenerate_masses_are_guarded():
+    in_a = np.array([True, True, True])
+    in_b = np.array([False, False, False])
+    mass_a = np.array([np.inf, np.nan, 0.0])
+    mass_b = np.array([1.0, 1.0, 0.0])
+    keep, margin = reconcile(in_a, in_b, "weighted",
+                             mass_a=mass_a, mass_b=mass_b)
+    assert np.isfinite(margin).all()
+    # all-zero masses -> margin 0 -> union fallback keeps the disputed edge
+    assert keep[2]
+
+
+# --------------------------------------------------- permutation symmetry
+@pytest.mark.parametrize("rule", ["and", "or", "weighted"])
+def test_endpoint_swap_symmetry(rule):
+    """decide(a, b) == decide(b, a): no rule may break ties by which
+    endpoint has the smaller node id."""
+    rng = np.random.RandomState(0)
+    in_a = rng.rand(64) < 0.5
+    in_b = rng.rand(64) < 0.5
+    mass_a = rng.rand(64) + 0.1
+    # exercise exact mass ties too
+    mass_b = np.where(rng.rand(64) < 0.3, mass_a, rng.rand(64) + 0.1)
+    k1, m1 = reconcile(in_a, in_b, rule, mass_a=mass_a, mass_b=mass_b)
+    k2, m2 = reconcile(in_b, in_a, rule, mass_a=mass_b, mass_b=mass_a)
+    assert (k1 == k2).all()
+    assert np.allclose(m1, m2)
+
+
+def test_select_deterministic_under_node_permutation():
+    """Relabeling nodes permutes the recovered support — and nothing else:
+    no vote tie-break may leak node ids into the decision."""
+    p, n = 6, 600
+    g = chain_graph(p)
+    plan = Plan(graph=g, family="ising")
+    fam = plan.family_instance
+    theta = np.zeros(fam.n_params(g))
+    theta[g.p:] = 0.8
+    X = np.asarray(fam.sample(g, theta, n, jax.random.PRNGKey(5)))
+    spec = StructureSpec(policy="full", n_lambdas=5, vote="weighted",
+                         admm_rounds=15)
+    res = plan.replace(structure=spec).session().select(X)
+    assert res.support          # a planted chain at this n recovers edges
+
+    perm = np.array([3, 0, 5, 1, 4, 2])       # new id of each old node
+    inv = np.argsort(perm)
+    # relabeled dataset: new column perm[i] carries old node i
+    res_p = plan.replace(structure=spec).session().select(X[:, inv])
+    expected = {tuple(sorted((int(perm[i]), int(perm[j]))))
+                for (i, j) in res.support}
+    assert set(res_p.support) == expected
+    assert res_p.lambda_selected == res.lambda_selected
+
+
+# ---------------------------------------------------------- singleton nodes
+def test_candidate_isolated_nodes_survive_voting():
+    """Nodes with NO candidate edges (policy 'given' leaves them isolated)
+    must pass through screening/path/vote untouched."""
+    p, n = 5, 300
+    g = chain_graph(p)
+    fam = Plan(graph=g).family_instance
+    X = np.asarray(random_rows(fam, jax.random.PRNGKey(6), n, p))
+    spec = StructureSpec(policy="given", given_edges=((0, 1), (1, 2)),
+                         n_lambdas=4, admm_rounds=10)
+    res = Plan(graph=g, structure=spec).session().select(X)
+    assert set(res.support) <= {(0, 1), (1, 2)}
+    assert res.candidate_edges == ((0, 1), (1, 2))
+    # isolated nodes 3 and 4 still have (singleton-only) estimates
+    assert len(res.thetas) == p
+    assert res.thetas[3].shape == (1,) and res.thetas[4].shape == (1,)

@@ -11,8 +11,10 @@ script reads):
     PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
     PYTHONPATH=src python tools/gen_tables.py > experiments/tables.md
 
-BENCH_kernels.json is produced by ``python -m benchmarks.kernels_bench``
-and BENCH_stream.json by ``python -m benchmarks.anytime_stream``.
+BENCH_kernels.json is produced by ``python -m benchmarks.kernels_bench``,
+BENCH_stream.json by ``python -m benchmarks.anytime_stream``, and
+BENCH_structure.json (edge-recovery + vote/communication tables) by
+``python -m benchmarks.structure_bench``.
 Records carrying an unknown ``schema_version`` are REJECTED loudly (exit
 1) rather than rendered wrong: a version this reader does not know means
 the payload layout changed after this script was written.
@@ -175,6 +177,64 @@ def stream_tables():
               f"replayed scalars {tel['scalars_sent_replayed']} |")
 
 
+def structure_tables():
+    """Render BENCH_structure.json: planted-graph edge recovery (cold /
+    warm / vs sample size, with the path compile invariant columns) and
+    the F1-vs-communication-budget sweep from knn screening."""
+    path = "BENCH_structure.json"
+    print("\n### Structure learning: planted-graph edge recovery "
+          "(BENCH_structure.json)\n")
+    if not os.path.exists(path):
+        print("(no record — run `PYTHONPATH=src python -m "
+              "benchmarks.structure_bench`)")
+        return
+    payload = json.load(open(path))
+    check_schema(payload, path)
+    _prov_line(payload)
+    cfg = payload.get("config", {})
+    print(f"_planted {cfg.get('graph', '?')} (p={cfg.get('p', '?')}, "
+          f"{cfg.get('m_true', '?')} true edges), "
+          f"n={cfg.get('n_accept', '?')}, "
+          f"F1 floor {cfg.get('f1_floor', '?')}_\n")
+    print("| family | run | F1 | precision | recall | support | "
+          "path compiles | new compiles | wall s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for fam, rec in sorted(payload.get("families", {}).items()):
+        acc = rec.get("accept", {})
+        for run in ("cold", "warm"):
+            r = acc.get(run)
+            if r is None:
+                continue
+            print(f"| {fam} | {run} | {r['f1']:.3f} | "
+                  f"{r['precision']:.3f} | {r['recall']:.3f} | "
+                  f"{r['support_size']} | {r['path_compiles']} | "
+                  f"{r['new_compiles']} | {r['wall_s']:.1f} |")
+
+    print("\n### Structure learning: F1 vs sample size\n")
+    print("| family | n | F1 | precision | recall | support |")
+    print("|---|---|---|---|---|---|")
+    for fam, rec in sorted(payload.get("families", {}).items()):
+        for r in rec.get("f1_vs_n", []):
+            print(f"| {fam} | {r['n']} | {r['f1']:.3f} | "
+                  f"{r['precision']:.3f} | {r['recall']:.3f} | "
+                  f"{r['support_size']} |")
+
+    comm = payload.get("f1_vs_comm", {})
+    if comm:
+        print("\n### Structure learning: F1 vs communication budget "
+              "(knn screening)\n")
+        print("| family | knn k | candidates | vote scalars | F1 | "
+              "precision | recall |")
+        print("|---|---|---|---|---|---|---|")
+        for fam, rows in sorted(comm.items()):
+            for r in rows:
+                k = r.get("knn_k")
+                print(f"| {fam} | {'full' if k is None else k} | "
+                      f"{r['candidates']} | {r['comm_scalars']} | "
+                      f"{r['f1']:.3f} | {r['precision']:.3f} | "
+                      f"{r['recall']:.3f} |")
+
+
 def main():
     recs = {}
     paths = sorted(glob.glob("experiments/dryrun/*.json"))
@@ -186,6 +246,7 @@ def main():
         print("### Dry-run\n\n(no records)")
         kernel_tables()
         stream_tables()
+        structure_tables()
         return
     for path in paths:
         r = json.load(open(path))
@@ -210,6 +271,7 @@ def main():
 
     kernel_tables()
     stream_tables()
+    structure_tables()
 
 
 if __name__ == "__main__":
